@@ -1,0 +1,66 @@
+"""Figure 4: RMSE vs sketch-intersection size × estimator × max sketch size.
+
+The paper's trend to reproduce: for every estimator and sketch budget, RMSE
+decreases as the join sample grows, stabilising around ~0.1.
+"""
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+import jax
+
+from repro.core import estimators as E
+from repro.data.pipeline import corpus
+from benchmarks.common import pair_estimates
+
+BUCKETS = [(3, 8), (8, 16), (16, 32), (32, 64), (64, 128), (128, 256), (256, 1 << 30)]
+
+
+def run(n_pairs: int = 50, sketch_sizes=(64, 256), n_rows: int = 20000, seed: int = 1,
+        estimators=("pearson", "spearman", "rin", "qn", "pm1")):
+    rng = np.random.default_rng(seed)
+    pairs = corpus(rng, n_pairs, kind="sbn", n_max=n_rows)
+    out = []
+    for n_sketch in sketch_sizes:
+        for name in estimators:
+            if name == "pm1":
+                key = jax.random.PRNGKey(0)
+                fn = lambda a, b, m: E.pm1_bootstrap(a, b, m, key)[0]
+            else:
+                fn = E.ESTIMATORS[name]
+            rows = pair_estimates(pairs, n_sketch, fn)
+            if len(rows) == 0:
+                continue
+            truth, est, m = rows[:, 0], rows[:, 1], rows[:, 2]
+            for lo, hi in BUCKETS:
+                sel = (m >= lo) & (m < hi)
+                if sel.sum() < 3:
+                    continue
+                err = est[sel] - truth[sel]
+                out.append(dict(estimator=name, sketch=n_sketch, m_lo=lo,
+                                count=int(sel.sum()),
+                                rmse=float(np.sqrt(np.mean(err ** 2)))))
+    return out
+
+
+def main():
+    recs = run()
+    for rec in recs:
+        print("fig4_rmse," + ",".join(f"{k}={v}" for k, v in rec.items()))
+    # trend check: within each (estimator, sketch), RMSE at the largest
+    # bucket should be below RMSE at the smallest
+    import collections
+    series = collections.defaultdict(list)
+    for r in recs:
+        series[(r["estimator"], r["sketch"])].append((r["m_lo"], r["rmse"]))
+    ok = 0
+    for k, v in series.items():
+        v.sort()
+        if len(v) >= 2 and v[-1][1] <= v[0][1]:
+            ok += 1
+    print(f"fig4_rmse,trend_decreasing={ok}/{len(series)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""Roofline table: formats the dry-run JSONL into the §Roofline report.
+
+Reads results/dryrun_single.jsonl (produced by repro.launch.dryrun --all)
+and prints one row per runnable cell: the three terms, the dominant
+bottleneck, MODEL_FLOPS/HLO_FLOPs, and the roofline fraction.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+DEFAULT = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun_single.jsonl")
+
+
+def load(path=DEFAULT):
+    recs = []
+    if not os.path.exists(path):
+        return recs
+    with open(path) as f:
+        for line in f:
+            try:
+                recs.append(json.loads(line))
+            except json.JSONDecodeError:
+                continue
+    # keep the most recent record per cell
+    seen = {}
+    for r in recs:
+        seen[(r["arch"], r["shape"], r.get("mesh"))] = r
+    return list(seen.values())
+
+
+def main(path=DEFAULT):
+    recs = load(path)
+    if not recs:
+        print("roofline,no dryrun records found — run: "
+              "PYTHONPATH=src python -m repro.launch.dryrun --all --out results/dryrun_single.jsonl")
+        return
+    for r in sorted(recs, key=lambda x: (x["arch"], x["shape"])):
+        if r.get("status") == "skipped":
+            print(f"roofline,{r['arch']},{r['shape']},skipped,{r.get('reason','')[:60]}")
+            continue
+        if r.get("status") != "ok":
+            print(f"roofline,{r['arch']},{r['shape']},ERROR,{r.get('error','')[:80]}")
+            continue
+        rf = r["roofline"]
+        print(f"roofline,{r['arch']},{r['shape']},mesh={r['mesh']},"
+              f"compute_s={rf['compute_s']:.4g},memory_s={rf['memory_s']:.4g},"
+              f"collective_s={rf['collective_s']:.4g},dominant={rf['dominant']},"
+              f"useful_ratio={rf['useful_ratio']:.3f},"
+              f"roofline_fraction={rf['roofline_fraction']:.4g}")
+
+
+if __name__ == "__main__":
+    main(sys.argv[1] if len(sys.argv) > 1 else DEFAULT)

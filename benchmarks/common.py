@@ -1,0 +1,63 @@
+"""Shared benchmark utilities: corpora with ground truth, IR metrics."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import build_sketch
+from repro.core.join import sketch_join
+from repro.core.sketch import Agg
+from repro.data.pipeline import Table, joined_truth, sbn_pair, skewed_pair
+
+
+def timed(fn, *args, repeat=3):
+    fn(*args)  # warmup / compile
+    t0 = time.perf_counter()
+    for _ in range(repeat):
+        out = fn(*args)
+        jax.block_until_ready(out) if hasattr(out, "block_until_ready") or isinstance(out, jax.Array) else None
+    return (time.perf_counter() - t0) / repeat, out
+
+
+def pair_estimates(pairs, n_sketch, estimator_fn, agg=Agg.MEAN):
+    """For (T_X, T_Y) pairs: sketch-estimate vs full-join truth."""
+    rows = []
+    for tx, ty, r_target, c in pairs:
+        sx = build_sketch(jnp.asarray(tx.keys), jnp.asarray(tx.values), n=n_sketch, agg=agg)
+        sy = build_sketch(jnp.asarray(ty.keys), jnp.asarray(ty.values), n=n_sketch, agg=agg)
+        sj = sketch_join(sx, sy)
+        m = int(sj.m)
+        if m < 3:
+            continue
+        est = float(estimator_fn(sj.a, sj.b, sj.mask))
+        xj, yj = joined_truth(tx, ty)
+        if len(xj) < 3 or np.std(xj) < 1e-9 or np.std(yj) < 1e-9:
+            continue
+        truth = float(np.corrcoef(xj, yj)[0, 1])
+        rows.append((truth, est, m))
+    return np.array(rows)
+
+
+# ---------------------------------------------------------------------------
+# IR metrics (Table 1)
+# ---------------------------------------------------------------------------
+
+def average_precision(relevant: np.ndarray, order: np.ndarray) -> float:
+    """AP of a ranking. relevant: bool per item; order: ranked item ids."""
+    rel = relevant[order]
+    if rel.sum() == 0:
+        return 0.0
+    hits = np.cumsum(rel)
+    prec = hits / (np.arange(len(rel)) + 1)
+    return float((prec * rel).sum() / rel.sum())
+
+
+def ndcg_at_k(gains: np.ndarray, order: np.ndarray, k: int) -> float:
+    g = gains[order][:k]
+    dcg = float(np.sum((2 ** g - 1) / np.log2(np.arange(len(g)) + 2)))
+    ideal = np.sort(gains)[::-1][:k]
+    idcg = float(np.sum((2 ** ideal - 1) / np.log2(np.arange(len(ideal)) + 2)))
+    return dcg / idcg if idcg > 0 else 0.0

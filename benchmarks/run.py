@@ -1,0 +1,69 @@
+"""Benchmark harness: one entry per paper table/figure + the roofline report.
+
+    PYTHONPATH=src python -m benchmarks.run [--fast]
+
+Prints ``name,key=value,...`` CSV lines. Sizes are scaled for a single-CPU
+container; drop --fast for larger corpora.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="smaller corpora (CI-sized)")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset: accuracy,rmse,ranking,runtime,latency,roofline")
+    args = ap.parse_args()
+
+    from benchmarks import (bench_accuracy, bench_query_latency, bench_ranking,
+                            bench_rmse, bench_roofline, bench_runtime)
+
+    fast = args.fast
+    suites = {
+        "accuracy": lambda: bench_accuracy.run(
+            n_pairs=20 if fast else 60, n_rows=8000 if fast else 30000),
+        "rmse": lambda: bench_rmse.run(
+            n_pairs=16 if fast else 50, n_rows=6000 if fast else 20000,
+            estimators=("pearson", "spearman") if fast else
+                       ("pearson", "spearman", "rin", "qn", "pm1")),
+        "ranking": lambda: bench_ranking.run(
+            n_queries=4 if fast else 12, n_cands=24 if fast else 40),
+        "runtime": lambda: bench_runtime.run(
+            n_pairs=10 if fast else 25, n_rows=20000 if fast else 60000),
+        "latency": lambda: bench_query_latency.run(
+            n_tables=128 if fast else 512, n_queries=12 if fast else 40,
+            n_rows=4000 if fast else 10000),
+    }
+    names = {"accuracy": "fig3_accuracy", "rmse": "fig4_rmse",
+             "ranking": "table1_ranking", "runtime": "table2_runtime",
+             "latency": "sec5p5_query_latency"}
+    only = set(args.only.split(",")) if args.only else None
+
+    for key, fn in suites.items():
+        if only and key not in only:
+            continue
+        t0 = time.perf_counter()
+        recs = fn()
+        dt = time.perf_counter() - t0
+        if isinstance(recs, dict):
+            recs = [recs]
+        for rec in recs:
+            print(f"{names[key]}," + ",".join(
+                f"{k}={v:.4g}" if isinstance(v, float) else f"{k}={v}"
+                for k, v in rec.items()))
+        us = dt * 1e6 / max(len(recs), 1)
+        print(f"{names[key]},us_per_record={us:.0f},wall_s={dt:.1f}")
+        sys.stdout.flush()
+
+    if only is None or "roofline" in only:
+        from benchmarks import bench_roofline as BR
+        BR.main()
+
+
+if __name__ == "__main__":
+    main()

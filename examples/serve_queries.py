@@ -1,0 +1,75 @@
+"""End-to-end driver: serve batched top-k join-correlation queries against a
+sharded sketch index (the paper's system, Defn. 3 + §5.5).
+
+Builds an index over a synthetic open-data-like collection, then serves a
+stream of batched requests, reporting per-query latency percentiles and
+result quality against ground truth.
+
+    PYTHONPATH=src python examples/serve_queries.py [--tables 600] [--queries 50]
+"""
+import argparse
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import build_sketch
+from repro.data.pipeline import Table, sbn_pair, skewed_pair
+from repro.engine import index as IX
+from repro.engine import query as Q
+from repro.launch.mesh import make_host_mesh
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tables", type=int, default=600)
+    ap.add_argument("--queries", type=int, default=50)
+    ap.add_argument("--sketch-size", type=int, default=256)
+    ap.add_argument("--k", type=int, default=10)
+    args = ap.parse_args()
+
+    rng = np.random.default_rng(7)
+    print(f"[1/3] generating {args.tables} tables + {args.queries} queries with known truth")
+    tables, queries = [], []
+    for i in range(args.tables):
+        tx, ty, r, c = (sbn_pair if i % 2 else skewed_pair)(rng, n_max=8000)
+        tables.append(Table(keys=ty.keys, values=ty.values, name=f"t{i}"))
+        if len(queries) < args.queries:
+            queries.append((tx, i, r * 1.0))  # query joins table i with corr ≈ r
+
+    mesh = make_host_mesh()
+    ndev = int(mesh.devices.size)
+    pad = ((args.tables + ndev - 1) // ndev) * ndev
+    t0 = time.time()
+    idx = IX.build_index(tables, n=args.sketch_size, pad_to=pad)
+    shard = IX.shard_for_mesh(idx, mesh)
+    print(f"[2/3] index built over {ndev} device(s) in {time.time()-t0:.1f}s "
+          f"({idx.shard.key_hash.nbytes/2**20:.1f} MiB of key hashes)")
+
+    qcfg = Q.QueryConfig(k=args.k, scorer="s4")
+    qfn = Q.make_query_fn(mesh, shard.num_columns, args.sketch_size, qcfg)
+    lats, hits, mrr = [], 0, 0.0
+    for tx, target_idx, r_true in queries:
+        qsk = build_sketch(jnp.asarray(tx.keys), jnp.asarray(tx.values), n=args.sketch_size)
+        qa = IX.query_arrays(qsk)
+        t0 = time.time()
+        s, g, r, m = qfn(*qa, shard)
+        jax.block_until_ready(s)
+        lats.append((time.time() - t0) * 1e3)
+        ranked = np.asarray(g).tolist()
+        if abs(r_true) > 0.3 and target_idx in ranked:
+            hits += 1
+            mrr += 1.0 / (ranked.index(target_idx) + 1)
+    lats = np.array(lats[1:])
+    strong = sum(1 for _, _, r in queries if abs(r) > 0.3)
+    print(f"[3/3] served {len(queries)} queries: "
+          f"p50 {np.percentile(lats,50):.1f} ms, p90 {np.percentile(lats,90):.1f} ms, "
+          f"p99 {np.percentile(lats,99):.1f} ms")
+    print(f"      recall@{args.k} of strongly-correlated targets: {hits}/{strong} "
+          f"(MRR {mrr/max(strong,1):.2f})")
+    print(f"      paper §5.5 reference: 94% of queries < 100 ms on 1.5k tables")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,87 @@
+"""Sketch-driven data augmentation for model training (paper Examples 1-2).
+
+The pipeline the paper motivates, end to end:
+  1. a base regression dataset (keyed rows + target);
+  2. a collection of candidate feature tables, indexed with sketches;
+  3. a top-k join-correlation query discovers which tables actually carry
+     signal for the target;
+  4. the discovered columns are joined in and a model is trained with and
+     without augmentation — RMSE drops (cf. the taxi-demand example).
+
+Also trains a reduced-config LM from the assigned pool for a few steps with
+the framework's full train loop (checkpoint + monitor) to show the two
+subsystems composing.
+
+    PYTHONPATH=src python examples/train_augmented.py
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import build_sketch
+from repro.data.pipeline import Table, sbn_pair
+from repro.engine import index as IX
+from repro.engine import query as Q
+from repro.launch.mesh import make_host_mesh
+
+
+def discover_and_augment():
+    rng = np.random.default_rng(11)
+    n = 6000
+    keys = rng.choice(1 << 30, size=n, replace=False).astype(np.uint32)
+    # target = f(two latent drivers) + noise
+    z1 = rng.standard_normal(n).astype(np.float32)
+    z2 = rng.standard_normal(n).astype(np.float32)
+    target = (0.8 * z1 - 0.6 * z2 + 0.3 * rng.standard_normal(n)).astype(np.float32)
+
+    # candidate tables: the two drivers (partially covering the keys) + noise
+    tables = [
+        Table(keys=keys[: int(0.8 * n)], values=z1[: int(0.8 * n)], name="driver1"),
+        Table(keys=keys[int(0.2 * n):], values=z2[int(0.2 * n):], name="driver2"),
+    ]
+    for i in range(30):
+        _, ty, _, _ = sbn_pair(rng, n_max=n)
+        tables.append(Table(keys=ty.keys, values=ty.values, name=f"noise{i}"))
+
+    mesh = make_host_mesh()
+    pad = ((len(tables) + mesh.devices.size - 1) // mesh.devices.size) * mesh.devices.size
+    idx = IX.build_index(tables, n=256, pad_to=pad)
+    shard = IX.shard_for_mesh(idx, mesh)
+    qsk = build_sketch(jnp.asarray(keys), jnp.asarray(target), n=256)
+    s, g, r, m = Q.query(shard, qsk, mesh, Q.QueryConfig(k=4, scorer="s4"))
+    picked = [int(i) for i in np.asarray(g)[:2]]
+    print(f"discovered features: {[tables[i].name for i in picked]} "
+          f"(r̂ = {np.round(np.asarray(r)[:2], 3)})")
+    assert set(picked) == {0, 1}, "should discover both drivers"
+
+    # join the discovered features (mean-imputed where keys are missing)
+    feats = []
+    for i in picked:
+        t = tables[i]
+        kmap = dict(zip(t.keys.tolist(), t.values.tolist()))
+        col = np.array([kmap.get(int(k), 0.0) for k in keys], np.float32)
+        feats.append(col)
+    X0 = np.ones((n, 1), np.float32)
+    X1 = np.column_stack([np.ones(n)] + feats).astype(np.float32)
+
+    def rmse(X):
+        w = np.linalg.lstsq(X, target, rcond=None)[0]
+        return float(np.sqrt(np.mean((X @ w - target) ** 2)))
+
+    r0, r1 = rmse(X0), rmse(X1)
+    print(f"regression RMSE: {r0:.3f} → {r1:.3f} after augmentation "
+          f"({(1 - r1 / r0) * 100:.0f}% better)")
+    assert r1 < 0.6 * r0
+
+
+def short_lm_training():
+    from repro.launch.train import train_loop
+    print("\ntraining a reduced tinyllama for 30 steps (full train loop):")
+    state, losses = train_loop("tinyllama-1.1b", smoke=True, steps=30, batch=4,
+                               seq=64, ckpt_dir=None, log_every=10)
+    print(f"loss {losses[0]:.3f} → {losses[-1]:.3f}")
+
+
+if __name__ == "__main__":
+    discover_and_augment()
+    short_lm_training()

@@ -1,0 +1,5 @@
+"""Config module for --arch (see registry for the exact published spec)."""
+from repro.configs.registry import HYMBA_1_5B as CONFIG  # noqa: F401
+from repro.configs.base import smoke_variant
+
+SMOKE = smoke_variant(CONFIG)

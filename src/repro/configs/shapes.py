@@ -1,0 +1,95 @@
+"""Input-shape specs for the assigned (arch × shape) grid.
+
+Four shapes per LM arch (assignment sheet):
+  train_4k     seq 4096  × global_batch 256   → train_step
+  prefill_32k  seq 32768 × global_batch 32    → prefill_step
+  decode_32k   one token, KV cache 32768, batch 128 → serve_step
+  long_500k    one token, KV cache 524288, batch 1  → serve_step
+               (sub-quadratic archs only: ssm / hybrid / linear-attn)
+
+``input_specs`` returns ShapeDtypeStruct stand-ins for every model input —
+weak-type-correct and shardable, never allocating — which is what the
+multi-pod dry-run lowers against.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+#: whisper decoder length for train/prefill cells (seq_len is the encoder
+#: frame count; the decoder runs the standard 448-token transcript window).
+WHISPER_DECODER_LEN = 448
+
+
+def cell_is_runnable(cfg: ModelConfig, shape: ShapeSpec) -> tuple[bool, str]:
+    """(runnable?, reason). long_500k only runs for sub-quadratic archs."""
+    if shape.name == "long_500k" and not cfg.subquadratic:
+        return False, "long_500k skipped: full quadratic attention (see DESIGN.md §5)"
+    return True, ""
+
+
+def _tok(shape, dtype=jnp.int32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins for one (arch × shape) cell."""
+    B, S = shape.global_batch, shape.seq_len
+    act = jnp.dtype(cfg.dtype)
+    if shape.kind == "train":
+        if cfg.encoder_layers > 0:  # whisper: frames in, transcript out
+            return {
+                "frames": jax.ShapeDtypeStruct((B, S, cfg.d_model), act),
+                "target_tokens": _tok((B, WHISPER_DECODER_LEN)),
+                "target_labels": _tok((B, WHISPER_DECODER_LEN)),
+            }
+        specs = {"tokens": _tok((B, S)), "labels": _tok((B, S))}
+        if cfg.frontend == "patches" and cfg.num_prefix_embeds > 0:
+            specs["prefix_embeds"] = jax.ShapeDtypeStruct(
+                (B, cfg.num_prefix_embeds, cfg.d_model), act)
+        return specs
+    if shape.kind == "prefill":
+        if cfg.encoder_layers > 0:
+            return {
+                "frames": jax.ShapeDtypeStruct((B, min(S, cfg.max_source_len), cfg.d_model), act),
+                "tokens": _tok((B, WHISPER_DECODER_LEN)),
+            }
+        specs = {"tokens": _tok((B, S))}
+        if cfg.frontend == "patches" and cfg.num_prefix_embeds > 0:
+            specs["prefix_embeds"] = jax.ShapeDtypeStruct(
+                (B, cfg.num_prefix_embeds, cfg.d_model), act)
+        return specs
+    # decode: one new token against a cache of length S
+    return {"tokens": _tok((B, 1))}
+
+
+def decode_cache_specs(cfg: ModelConfig, shape: ShapeSpec):
+    """Abstract DecodeCache for serve_step lowering (no allocation)."""
+    from repro.models.transformer import make_decode_cache
+    B, S = shape.global_batch, shape.seq_len
+    cfg_d = cfg
+    if cfg.encoder_layers > 0:
+        cfg_d = dataclasses.replace(cfg, max_source_len=min(4096, S))
+    fn = lambda: make_decode_cache(cfg_d, B, max_len=S)
+    return jax.eval_shape(fn), cfg_d

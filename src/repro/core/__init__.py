@@ -1,0 +1,15 @@
+"""Correlation Sketches core — the paper's contribution as a JAX library."""
+from repro.core.sketch import (  # noqa: F401
+    Agg,
+    CorrelationSketch,
+    build_sketch,
+    build_sketch_streaming,
+    merge,
+    stack_sketches,
+)
+from repro.core.join import SketchJoin, sketch_join  # noqa: F401
+from repro.core.bounds import CorrelationCI, hoeffding_ci, fisher_z_se  # noqa: F401
+from repro.core.scoring import CandidateStats, score, SCORERS  # noqa: F401
+from repro.core.ranking import QueryResult, topk_query, candidate_stats  # noqa: F401
+from repro.core import estimators  # noqa: F401
+from repro.core import hashing  # noqa: F401

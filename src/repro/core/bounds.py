@@ -1,0 +1,106 @@
+"""Distribution-free confidence bounds for join-correlation estimates (§4.3).
+
+Given a sketch-join sample of size ``m`` and the *full-column* range
+``[C_low, C_high]`` recorded at sketch-build time, five Hoeffding intervals
+(for µ_A, µ_B, ν_A, ν_B, ν_AB — each at level α/5) combine through a union
+bound into a CI for ρ. ``t = sqrt(ln(10/α)·C²/2m)`` for the means and
+``t' = sqrt(ln(10/α)·C⁴/2m)`` for the second moments.
+
+Includes the paper's small-sample ``HFD`` variant, which substitutes the
+sample denominator when the variance lower bounds would go negative — not a
+true probabilistic bound but the risk signal used by the ``ci_h`` scorer.
+Also provides the Fisher-Z standard error (§4.2).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class CorrelationCI:
+    lo: jnp.ndarray
+    hi: jnp.ndarray
+
+    def length(self) -> jnp.ndarray:
+        return self.hi - self.lo
+
+
+def _moments(a, b, mask):
+    m = jnp.maximum(jnp.sum(mask, -1).astype(jnp.float32), 1.0)
+    w = mask.astype(jnp.float32)
+    mu_a = jnp.sum(a * w, -1) / m
+    mu_b = jnp.sum(b * w, -1) / m
+    va = jnp.sum(a * a * w, -1) / m
+    vb = jnp.sum(b * b * w, -1) / m
+    vab = jnp.sum(a * b * w, -1) / m
+    return m, mu_a, mu_b, va, vb, vab
+
+
+def hoeffding_ci(a, b, mask, c_low, c_high, alpha: float = 0.05, hfd: bool = True) -> CorrelationCI:
+    """§4.3 confidence interval for ρ from a sketch-join sample.
+
+    ``a``/``b`` are the aligned sample values, ``c_low``/``c_high`` the range
+    over the full columns X ∪ Y. With ``hfd=True`` (default), the denominator
+    falls back to the sample standard deviations whenever the variance lower
+    bounds are non-positive — the ρ_HFD variant the paper uses for scoring.
+    """
+    # shift into [0, C] as the analysis requires
+    a0 = jnp.where(mask, a - c_low[..., None], 0.0)
+    b0 = jnp.where(mask, b - c_low[..., None], 0.0)
+    C = jnp.maximum(c_high - c_low, 1e-30)
+    m, mu_a, mu_b, va, vb, vab = _moments(a0, b0, mask)
+
+    log_term = jnp.log(10.0 / alpha)
+    t = jnp.sqrt(log_term * C * C / (2.0 * m))
+    tp = jnp.sqrt(log_term * C * C * C * C / (2.0 * m))
+
+    mu_a_lo, mu_a_hi = mu_a - t, mu_a + t
+    mu_b_lo, mu_b_hi = mu_b - t, mu_b + t
+    va_lo, va_hi = va - tp, va + tp
+    vb_lo, vb_hi = vb - tp, vb + tp
+    vab_lo, vab_hi = vab - tp, vab + tp
+
+    num_lo = vab_lo - mu_a_hi * mu_b_hi
+    num_hi = vab_hi - mu_a_lo * mu_b_lo
+    den_lo = jnp.sqrt(jnp.maximum(0.0, va_lo - mu_a_hi**2) * jnp.maximum(0.0, vb_lo - mu_b_hi**2))
+    den_hi = jnp.sqrt(jnp.maximum(0.0, va_hi - mu_a_lo**2) * jnp.maximum(0.0, vb_hi - mu_b_lo**2))
+
+    if hfd:
+        # small-sample fallback: sample std-dev denominator (ρ_HFD, §4.3)
+        sden = jnp.sqrt(jnp.maximum(va - mu_a**2, 0.0) * jnp.maximum(vb - mu_b**2, 0.0))
+        degenerate = (den_lo <= 1e-30) | (den_hi <= 1e-30)
+        den_lo = jnp.where(degenerate, sden, den_lo)
+        den_hi = jnp.where(degenerate, sden, den_hi)
+
+    def _div(num, den):
+        return num / jnp.maximum(den, 1e-30)
+
+    lo = jnp.where(num_lo >= 0, _div(num_lo, den_hi), _div(num_lo, den_lo))
+    hi = jnp.where(num_hi >= 0, _div(num_hi, den_lo), _div(num_hi, den_hi))
+    # NOTE: the bounds are deliberately *not* clipped to [−1, 1]: the ρ_HFD
+    # variant is not a true correlation bound and its raw length is the risk
+    # signal the ci_h scorer normalises over (clipping would collapse all
+    # loose intervals to length 2 and destroy the ranking signal).
+    # Degenerate joins (m < 2) carry no information at all:
+    ok = jnp.sum(mask, -1) >= 2
+    big = jnp.float32(3.4e38)
+    lo = jnp.where(ok, lo, -big)
+    hi = jnp.where(ok, hi, big)
+    return CorrelationCI(lo=lo, hi=hi)
+
+
+def fisher_z_se(m) -> jnp.ndarray:
+    """Standard error of Fisher's Z transform: 1/sqrt(max(4, m) − 3) (§4.2)."""
+    mm = jnp.maximum(m.astype(jnp.float32), 4.0)
+    return 1.0 / jnp.sqrt(mm - 3.0)
+
+
+def sample_size_for_accuracy(C: float, c_var: float, eps: float, alpha: float = 0.05) -> float:
+    """§4.3 discussion: n = O(C⁴ ln(1/α) / (ε² c²)) for ±ε accuracy given a
+    variance lower bound c. Used by capacity planning in the engine."""
+    import math
+    return (C**4) * math.log(1.0 / alpha) / (eps**2 * c_var**2)

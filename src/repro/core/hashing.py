@@ -1,0 +1,149 @@
+"""Hash functions used by Correlation Sketches (paper §3.1/§3.4).
+
+Two hash functions, exactly as in the paper:
+
+* ``h``  — MurmurHash3 (32-bit), used as a collision-free tuple identifier
+  ``h(k)`` for join keys. Implemented in pure JAX ``uint32`` arithmetic so it
+  can run inside jitted/sharded programs, plus a bytes front-end for string
+  keys at ingest time (numpy, non-jit).
+* ``h_u`` — Fibonacci (golden-ratio multiplicative) hashing, mapping the
+  32-bit identifier uniformly onto [0, 1). Because multiplication by an odd
+  constant is a bijection on Z_2^32, distinct identifiers never tie, and the
+  float value never needs to be *stored* — it is recomputed from ``h(k)``
+  (paper Fig. 2 caption).
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+# MurmurHash3 constants.
+_C1 = np.uint32(0xCC9E2D51)
+_C2 = np.uint32(0x1B873593)
+_M5 = np.uint32(5)
+_N1 = np.uint32(0xE6546B64)
+_F1 = np.uint32(0x85EBCA6B)
+_F2 = np.uint32(0xC2B2AE35)
+
+#: Golden-ratio multiplier: floor(2^32 / phi), forced odd ⇒ bijective mod 2^32.
+FIBONACCI_MULTIPLIER = np.uint32(2654435769)
+
+DEFAULT_SEED = np.uint32(0x9747B28C)
+
+
+def _rotl32(x: jnp.ndarray, r: int) -> jnp.ndarray:
+    r = np.uint32(r)
+    return (x << r) | (x >> (np.uint32(32) - r))
+
+
+def _mix_block(h: jnp.ndarray, k: jnp.ndarray) -> jnp.ndarray:
+    """Mix one 4-byte block into the murmur3 state."""
+    k = k * _C1
+    k = _rotl32(k, 15)
+    k = k * _C2
+    h = h ^ k
+    h = _rotl32(h, 13)
+    return h * _M5 + _N1
+
+
+def _fmix32(h: jnp.ndarray) -> jnp.ndarray:
+    h = h ^ (h >> np.uint32(16))
+    h = h * _F1
+    h = h ^ (h >> np.uint32(13))
+    h = h * _F2
+    h = h ^ (h >> np.uint32(16))
+    return h
+
+
+def murmur3_32(keys: jnp.ndarray, seed: np.uint32 = DEFAULT_SEED) -> jnp.ndarray:
+    """MurmurHash3-32 of integer keys (vectorised, jit-safe).
+
+    ``uint32`` keys hash as a single 4-byte block; ``uint64``/``int64`` keys
+    as two 4-byte little-endian blocks; ``int32`` is reinterpreted as uint32.
+    """
+    if keys.dtype in (jnp.int32, jnp.uint32):
+        k = keys.astype(jnp.uint32)
+        h = jnp.full(k.shape, seed, dtype=jnp.uint32)
+        h = _mix_block(h, k)
+        h = h ^ jnp.uint32(4)  # length in bytes
+        return _fmix32(h)
+    if keys.dtype in (jnp.int64, jnp.uint64):
+        k = keys.astype(jnp.uint64)
+        lo = (k & jnp.uint64(0xFFFFFFFF)).astype(jnp.uint32)
+        hi = (k >> jnp.uint64(32)).astype(jnp.uint32)
+        h = jnp.full(lo.shape, seed, dtype=jnp.uint32)
+        h = _mix_block(h, lo)
+        h = _mix_block(h, hi)
+        h = h ^ jnp.uint32(8)
+        return _fmix32(h)
+    raise TypeError(f"unsupported key dtype {keys.dtype}")
+
+
+def murmur3_32_bytes(key: bytes, seed: int = int(DEFAULT_SEED)) -> int:
+    """Reference scalar murmur3-32 over raw bytes (numpy; ingest path for
+    string keys). Matches the canonical smhasher implementation."""
+    data = np.frombuffer(key, dtype=np.uint8)
+    n = len(data)
+    h = np.uint32(seed)
+    nblocks = n // 4
+    if nblocks:
+        blocks = data[: nblocks * 4].view("<u4")
+        for k in blocks:
+            k = np.uint32(k)
+            with np.errstate(over="ignore"):
+                k = np.uint32(k * _C1)
+                k = np.uint32((k << np.uint32(15)) | (k >> np.uint32(17)))
+                k = np.uint32(k * _C2)
+                h = np.uint32(h ^ k)
+                h = np.uint32((h << np.uint32(13)) | (h >> np.uint32(19)))
+                h = np.uint32(h * _M5 + _N1)
+    tail = data[nblocks * 4 :]
+    k1 = np.uint32(0)
+    with np.errstate(over="ignore"):
+        if len(tail) >= 3:
+            k1 = np.uint32(k1 ^ np.uint32(tail[2]) << np.uint32(16))
+        if len(tail) >= 2:
+            k1 = np.uint32(k1 ^ np.uint32(tail[1]) << np.uint32(8))
+        if len(tail) >= 1:
+            k1 = np.uint32(k1 ^ np.uint32(tail[0]))
+            k1 = np.uint32(k1 * _C1)
+            k1 = np.uint32((k1 << np.uint32(15)) | (k1 >> np.uint32(17)))
+            k1 = np.uint32(k1 * _C2)
+            h = np.uint32(h ^ k1)
+        h = np.uint32(h ^ np.uint32(n))
+        h = np.uint32(h ^ (h >> np.uint32(16)))
+        h = np.uint32(h * _F1)
+        h = np.uint32(h ^ (h >> np.uint32(13)))
+        h = np.uint32(h * _F2)
+        h = np.uint32(h ^ (h >> np.uint32(16)))
+    return int(h)
+
+
+def hash_string_keys(keys, seed: int = int(DEFAULT_SEED)) -> np.ndarray:
+    """Ingest-time helper: murmur3-32 each (str|bytes) key → uint32 array."""
+    out = np.empty(len(keys), dtype=np.uint32)
+    for i, k in enumerate(keys):
+        if isinstance(k, str):
+            k = k.encode("utf-8")
+        out[i] = murmur3_32_bytes(k, seed)
+    return out
+
+
+def fibonacci_u32(key_hash: jnp.ndarray) -> jnp.ndarray:
+    """``h_u`` as raw uint32: golden-ratio multiplicative hash of h(k).
+
+    The *order* of these values is what KMV selection needs; keeping them as
+    uint32 (instead of float) makes bottom-k selection exact and tie-free.
+    """
+    return key_hash.astype(jnp.uint32) * FIBONACCI_MULTIPLIER
+
+
+def fibonacci_unit(key_hash: jnp.ndarray) -> jnp.ndarray:
+    """``h_u(k)`` ∈ [0, 1): the Fibonacci hash scaled to the unit interval."""
+    return fibonacci_u32(key_hash).astype(jnp.float64 if jax.config.jax_enable_x64 else jnp.float32) * (1.0 / 4294967296.0)
+
+
+def unit_interval(fib_u32: jnp.ndarray) -> jnp.ndarray:
+    """Convert raw uint32 Fibonacci values to [0,1) floats."""
+    return fib_u32.astype(jnp.float32) * np.float32(1.0 / 4294967296.0)

@@ -1,0 +1,114 @@
+"""Sketch joins (paper §3.2): align two sketches on their hashed keys.
+
+The joined sketch ``L_{X⋈Y}`` keeps one row per key hash present in both
+sketches; by Theorem 1 its value pairs are a uniform random sample of the
+full join ``T_{X⋈Y}``, so any sample statistic applies downstream.
+
+Also provides the KMV set-operation estimators of §2.1/§3.3: join
+cardinality (Eq. 1), Jaccard similarity and containment — the same sketch
+answers joinability *and* correlation queries.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import hashing
+from repro.core.sketch import CorrelationSketch, PAD_FIB, PAD_KEY
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class SketchJoin:
+    """Aligned value pairs from two sketches plus joinability statistics."""
+
+    a: jnp.ndarray          # float32 [n], X values aligned on common keys
+    b: jnp.ndarray          # float32 [n], Y values aligned on common keys
+    mask: jnp.ndarray       # bool   [n]
+    m: jnp.ndarray          # int32 scalar, |L_{X⋈Y}| (sketch intersection size)
+    union_kth: jnp.ndarray  # float32, U(k) of the combined KMV synopsis
+    union_k: jnp.ndarray    # int32, k of the combined synopsis
+    inter_k: jnp.ndarray    # int32, K_∩ (matches within the combined bottom-k)
+    # range bounds over the *full* columns (Hoeffding §4.3 inputs)
+    c_low: jnp.ndarray
+    c_high: jnp.ndarray
+
+    def join_size_estimate(self) -> jnp.ndarray:
+        """|K_X ∩ K_Y| estimate — Eq. (1): (K_∩/k) · (k−1)/U(k)."""
+        k = self.union_k.astype(jnp.float32)
+        return jnp.where(
+            k > 0,
+            (self.inter_k.astype(jnp.float32) / jnp.maximum(k, 1.0))
+            * (k - 1.0) / jnp.maximum(self.union_kth, 1e-30),
+            0.0,
+        )
+
+    def jaccard_estimate(self) -> jnp.ndarray:
+        """Jaccard(K_X, K_Y) ≈ K_∩ / k."""
+        return self.inter_k.astype(jnp.float32) / jnp.maximum(self.union_k.astype(jnp.float32), 1.0)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def sketch_join(x: CorrelationSketch, y: CorrelationSketch) -> SketchJoin:
+    """Join two sketches on ``h(k)`` (paper Fig. 2, right table).
+
+    Pure-JAX reference implementation (sort/searchsorted based). The batched
+    TPU hot path lives in :mod:`repro.kernels.sketch_join`.
+    """
+    n = max(x.n, y.n)
+    xv = x.values()
+    yv = y.values()
+
+    # sort y's keys for membership probes; pads (PAD_KEY) sort last
+    ykh = jnp.where(y.mask, y.key_hash, PAD_KEY)
+    ysort = jnp.argsort(ykh)
+    ykh_s = ykh[ysort]
+    yv_s = yv[ysort]
+    ymask_s = y.mask[ysort]
+
+    xkh = jnp.where(x.mask, x.key_hash, PAD_KEY)
+    pos = jnp.searchsorted(ykh_s, xkh)
+    pos = jnp.clip(pos, 0, y.n - 1)
+    hit = x.mask & ymask_s[pos] & (ykh_s[pos] == xkh)
+
+    a = jnp.where(hit, xv, 0.0)
+    b = jnp.where(hit, yv_s[pos], 0.0)
+    hit0 = hit
+    if x.n != n:  # pad to the common size
+        a = jnp.pad(a, (0, n - x.n))
+        b = jnp.pad(b, (0, n - x.n))
+        hit = jnp.pad(hit, (0, n - x.n))
+    m = jnp.sum(hit.astype(jnp.int32))
+
+    # compact matches to the front (sort by ~hit is stable) so downstream
+    # estimators see a dense prefix
+    perm = jnp.argsort(~hit)
+    a, b, hit = a[perm], b[perm], hit[perm]
+
+    # combined KMV synopsis: k = min(k_x, k_y) smallest fib values of the
+    # *distinct* union of the two key sets (Beyer et al. ⊕ operator)
+    k = jnp.minimum(x.n_valid(), y.n_valid())
+    all_kh = jnp.concatenate([jnp.where(x.mask, x.key_hash, PAD_KEY),
+                              jnp.where(y.mask, y.key_hash, PAD_KEY)])
+    skh = jnp.sort(all_kh)
+    first = jnp.concatenate([jnp.ones((1,), bool), skh[1:] != skh[:-1]])
+    is_distinct = first & (skh != PAD_KEY)
+    fib_all = jnp.where(is_distinct, hashing.fibonacci_u32(skh), PAD_FIB)
+    fib_sorted = jnp.sort(fib_all)
+    kth_fib = fib_sorted[jnp.maximum(k - 1, 0)]
+    union_kth = hashing.unit_interval(kth_fib)
+    # K_∩: matched keys whose fib ranks within the bottom-k of the union
+    fx = hashing.fibonacci_u32(xkh)
+    matched_fib = jnp.where(hit0, fx, PAD_FIB)
+    inter_k = jnp.sum(hit0 & (matched_fib <= kth_fib))
+
+    return SketchJoin(
+        a=a, b=b, mask=hit, m=m,
+        union_kth=union_kth, union_k=k.astype(jnp.int32), inter_k=inter_k.astype(jnp.int32),
+        c_low=jnp.minimum(x.col_min, y.col_min),
+        c_high=jnp.maximum(x.col_max, y.col_max),
+    )

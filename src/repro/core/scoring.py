@@ -1,0 +1,81 @@
+"""Risk-averse scoring of candidate columns (paper §4.1/§4.4).
+
+Framework (Eq. 5): score = |r̂| · (1 − risk). Four concrete scorers:
+
+  s1 = r_p                  (no penalisation)
+  s2 = r_p · se_z           (Fisher-Z standard error, §4.2)
+  s3 = r_b · ci_b           (PM1 bootstrap CI)
+  s4 = r_p · ci_h           (Hoeffding CI — the paper's headline scorer:
+                             bootstrap-quality ranking at ~constant cost)
+
+``ci_h`` is list-normalised (it compares the Hoeffding CI length of each
+candidate against the min/max lengths in the same ranked list), so scorers
+operate on a *batch* of candidates rather than one pair at a time.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bounds as B
+from repro.core import estimators as E
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class CandidateStats:
+    """Per-candidate statistics a scorer may consume (all shape [C])."""
+
+    r_p: jnp.ndarray                    # Pearson estimate from the sketch join
+    m: jnp.ndarray                      # sketch-join sample size
+    ci_lo: jnp.ndarray                  # Hoeffding/HFD CI (§4.3)
+    ci_hi: jnp.ndarray
+    r_b: Optional[jnp.ndarray] = None   # PM1 bootstrap estimate
+    ci_b_lo: Optional[jnp.ndarray] = None
+    ci_b_hi: Optional[jnp.ndarray] = None
+
+
+def se_z_factor(m) -> jnp.ndarray:
+    return 1.0 - B.fisher_z_se(m)
+
+
+def ci_h_factor(ci_len, eligible=None) -> jnp.ndarray:
+    """List-normalised Hoeffding penalty: 1 − (len − min)/(max − min).
+
+    ``eligible`` restricts the min/max normalisation to candidates that are
+    actually in the ranked list (e.g. those whose join sample passed the
+    minimum-size floor); ineligible entries get the maximum penalty.
+    """
+    if eligible is None:
+        eligible = jnp.ones_like(ci_len, dtype=bool)
+    big = jnp.float32(3.4e38)
+    lmin = jnp.min(jnp.where(eligible, ci_len, big), -1, keepdims=True)
+    lmax = jnp.max(jnp.where(eligible, ci_len, -big), -1, keepdims=True)
+    rng = jnp.maximum(lmax - lmin, 1e-12)
+    f = 1.0 - (jnp.minimum(ci_len, lmax) - lmin) / rng
+    return jnp.where(eligible, jnp.clip(f, 0.0, 1.0), 0.0)
+
+
+def ci_b_factor(lo, hi) -> jnp.ndarray:
+    return 1.0 - (hi - lo) * 0.5
+
+
+def score(stats: CandidateStats, scorer: str = "s4", eligible=None) -> jnp.ndarray:
+    """Return scores (higher = better) for a batch of candidates."""
+    if scorer == "s1":
+        return jnp.abs(stats.r_p)
+    if scorer == "s2":
+        return jnp.abs(stats.r_p) * se_z_factor(stats.m)
+    if scorer == "s3":
+        if stats.r_b is None:
+            raise ValueError("s3 needs bootstrap stats (run scoring with bootstrap=True)")
+        return jnp.abs(stats.r_b) * ci_b_factor(stats.ci_b_lo, stats.ci_b_hi)
+    if scorer == "s4":
+        return jnp.abs(stats.r_p) * ci_h_factor(stats.ci_hi - stats.ci_lo, eligible)
+    raise ValueError(f"unknown scorer {scorer!r}")
+
+
+SCORERS = ("s1", "s2", "s3", "s4")

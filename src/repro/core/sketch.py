@@ -1,0 +1,329 @@
+"""Correlation Sketches (paper §3).
+
+A :class:`CorrelationSketch` summarises a pair of columns ``⟨K_X, X⟩`` from a
+table: it keeps the ``n`` tuples ``⟨h(k), x_k⟩`` whose Fibonacci hash
+``h_u(h(k))`` is smallest, together with the repeated-key aggregation state
+and the single-pass column statistics (count, min, max) needed by the
+Hoeffding confidence bounds of §4.3.
+
+The implementation is a *batch/mergeable* reformulation of the paper's
+streaming tree algorithm (§3.4): each chunk of rows is turned into a partial
+sketch with jit-friendly sort/segment/top_k primitives, and partial sketches
+combine with :func:`merge` — the classic KMV closure property guarantees
+``sketch(A ⊎ B) == merge(sketch(A), sketch(B))`` *including* the repeated-key
+aggregation (mean is carried as (sum, count); first/last carry the global row
+order). This is what makes distributed construction (shard rows → local
+sketch → tree-merge) exact rather than approximate.
+
+All arrays are fixed-size and mask-padded so sketches can be vmapped,
+stacked into an index, and shipped through pjit/shard_map untouched.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+import functools
+from typing import Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import hashing
+
+#: Sentinel key-hash used in padding slots (mask is authoritative).
+PAD_KEY = np.uint32(0xFFFFFFFF)
+#: Sentinel Fibonacci value for padding: +inf in the bottom-k order.
+PAD_FIB = np.uint32(0xFFFFFFFF)
+
+
+class Agg(enum.Enum):
+    """Streaming aggregation for repeated keys (paper §3.1)."""
+
+    MEAN = "mean"
+    SUM = "sum"
+    COUNT = "count"
+    MIN = "min"
+    MAX = "max"
+    FIRST = "first"
+    LAST = "last"
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class CorrelationSketch:
+    """Fixed-size mergeable correlation sketch.
+
+    Entries are stored sorted by Fibonacci hash (ascending) — i.e. slot 0 is
+    the global minimum — so the KMV structure is explicit: the valid prefix
+    *is* the bottom-k set and ``U(k)`` is the Fibonacci value of the last
+    valid slot.
+    """
+
+    # --- per-slot state (shape [n]) ---
+    key_hash: jnp.ndarray  # uint32, h(k); PAD_KEY in padding slots
+    acc: jnp.ndarray       # float32, aggregation accumulator (sum/min/max/first/last)
+    cnt: jnp.ndarray       # float32, per-key multiplicity (mean/count; 0 in padding)
+    order: jnp.ndarray     # int64-as-float64? no: float32 row order for first/last merges
+    mask: jnp.ndarray      # bool, slot validity
+    # --- single-pass column statistics (scalars) ---
+    col_min: jnp.ndarray   # float32, min over the *full* column (Hoeffding C_low)
+    col_max: jnp.ndarray   # float32, max over the *full* column (Hoeffding C_high)
+    rows: jnp.ndarray      # float32, total rows consumed
+    # --- static ---
+    agg: Agg = dataclasses.field(metadata=dict(static=True), default=Agg.MEAN)
+
+    @property
+    def n(self) -> int:
+        return self.key_hash.shape[-1]
+
+    # ---- derived KMV quantities -------------------------------------------------
+    def fib(self) -> jnp.ndarray:
+        """Recompute h_u (uint32 order) from the stored key hashes."""
+        f = hashing.fibonacci_u32(self.key_hash)
+        return jnp.where(self.mask, f, PAD_FIB)
+
+    def n_valid(self) -> jnp.ndarray:
+        return jnp.sum(self.mask.astype(jnp.int32), axis=-1)
+
+    def kth_unit(self) -> jnp.ndarray:
+        """U(k): the k-th smallest h_u value in [0,1) (k = n_valid)."""
+        nv = self.n_valid()
+        f = self.fib()
+        kth = f[jnp.maximum(nv - 1, 0)]
+        return hashing.unit_interval(kth)
+
+    def distinct_estimate(self) -> jnp.ndarray:
+        """Unbiased DV estimator D̂_UB = (k−1)/U(k) (Beyer et al.), exact
+        count when the sketch is not full."""
+        nv = self.n_valid()
+        full = nv >= self.n
+        est = (nv.astype(jnp.float32) - 1.0) / jnp.maximum(self.kth_unit(), 1e-30)
+        return jnp.where(full, est, nv.astype(jnp.float32))
+
+    def values(self) -> jnp.ndarray:
+        """Finalised aggregated value x_k per slot (padding slots → 0)."""
+        return finalize_values(self.acc, self.cnt, self.agg, self.mask)
+
+
+def finalize_values(acc: jnp.ndarray, cnt: jnp.ndarray, agg: Agg, mask: jnp.ndarray) -> jnp.ndarray:
+    if agg == Agg.MEAN:
+        v = acc / jnp.maximum(cnt, 1.0)
+    elif agg == Agg.COUNT:
+        v = cnt
+    else:  # SUM / MIN / MAX / FIRST / LAST keep the accumulator directly
+        v = acc
+    return jnp.where(mask, v, 0.0)
+
+
+# ----------------------------------------------------------------------------
+# segment combination of duplicate keys
+# ----------------------------------------------------------------------------
+
+def _combine_duplicates(key_hash, acc, cnt, order, valid, agg: Agg):
+    """Sort by key hash and fold duplicate keys into one slot each.
+
+    Returns arrays of the same (static) length where each distinct key
+    occupies exactly one valid slot. Branch-free: runs under jit.
+    """
+    m = key_hash.shape[0]
+    kh = jnp.where(valid, key_hash, PAD_KEY)
+    # Stable sort by key hash, with order as tiebreaker so FIRST/LAST are
+    # deterministic. Padding sorts to the end — also *within* a key-hash
+    # segment (order=+inf), so the representative row of a segment that
+    # contains any valid row is itself valid.
+    order = jnp.where(valid, order, jnp.inf)
+    sort_idx = jnp.lexsort((order, kh))
+    kh_s = kh[sort_idx]
+    acc_s = acc[sort_idx]
+    cnt_s = cnt[sort_idx]
+    ord_s = order[sort_idx]
+    val_s = valid[sort_idx]
+
+    # Segment ids: new segment whenever the key changes.
+    starts = jnp.concatenate([jnp.ones((1,), jnp.int32), (kh_s[1:] != kh_s[:-1]).astype(jnp.int32)])
+    seg = jnp.cumsum(starts) - 1  # [m], in [0, m)
+
+    def seg_sum(x):
+        return jax.ops.segment_sum(x, seg, num_segments=m)
+
+    if agg in (Agg.MEAN, Agg.SUM, Agg.COUNT):
+        acc_c = seg_sum(acc_s)
+    elif agg == Agg.MIN:
+        acc_c = jax.ops.segment_min(jnp.where(val_s, acc_s, jnp.inf), seg, num_segments=m)
+    elif agg == Agg.MAX:
+        acc_c = jax.ops.segment_max(jnp.where(val_s, acc_s, -jnp.inf), seg, num_segments=m)
+    elif agg == Agg.FIRST:
+        # keep the accumulator of the minimal order within the segment
+        first_ord = jax.ops.segment_min(jnp.where(val_s, ord_s, jnp.inf), seg, num_segments=m)
+        is_first = val_s & (ord_s == first_ord[seg])
+        acc_c = seg_sum(jnp.where(is_first, acc_s, 0.0))
+    elif agg == Agg.LAST:
+        last_ord = jax.ops.segment_max(jnp.where(val_s, ord_s, -jnp.inf), seg, num_segments=m)
+        is_last = val_s & (ord_s == last_ord[seg])
+        acc_c = seg_sum(jnp.where(is_last, acc_s, 0.0))
+    else:  # pragma: no cover
+        raise ValueError(agg)
+
+    cnt_c = seg_sum(jnp.where(val_s, cnt_s, 0.0))
+    if agg == Agg.FIRST:
+        ord_c = jax.ops.segment_min(jnp.where(val_s, ord_s, jnp.inf), seg, num_segments=m)
+    else:
+        ord_c = jax.ops.segment_max(jnp.where(val_s, ord_s, -jnp.inf), seg, num_segments=m)
+
+    # Representative slot per segment: the first row of the segment.
+    is_rep = starts.astype(bool) & val_s
+    kh_c = jnp.where(is_rep, kh_s, PAD_KEY)
+    # Gather combined stats back onto representative slots.
+    out_acc = jnp.where(is_rep, acc_c[seg], 0.0)
+    out_cnt = jnp.where(is_rep, cnt_c[seg], 0.0)
+    out_ord = jnp.where(is_rep, ord_c[seg], 0.0).astype(order.dtype)
+    return kh_c, out_acc.astype(acc.dtype), out_cnt, out_ord, is_rep
+
+
+def _bottom_n(key_hash, acc, cnt, order, valid, n: int):
+    """Select the n slots with smallest Fibonacci hash; output fib-sorted."""
+    if key_hash.shape[0] < n:  # chunk smaller than the sketch: pad up
+        pad = n - key_hash.shape[0]
+        key_hash = jnp.pad(key_hash, (0, pad), constant_values=PAD_KEY)
+        acc = jnp.pad(acc, (0, pad))
+        cnt = jnp.pad(cnt, (0, pad))
+        order = jnp.pad(order, (0, pad))
+        valid = jnp.pad(valid, (0, pad))
+    fib = jnp.where(valid, hashing.fibonacci_u32(key_hash), PAD_FIB)
+    # top_k on the bit-flipped value == bottom_k on fib. Valid entries beat
+    # padding because PAD_FIB maps to the global minimum after the flip.
+    neg = ~fib  # bitwise not: order-reversing bijection on uint32
+    _, idx = jax.lax.top_k(neg, n)
+    sel_mask = valid[idx]
+    return (
+        jnp.where(sel_mask, key_hash[idx], PAD_KEY),
+        jnp.where(sel_mask, acc[idx], 0.0),
+        jnp.where(sel_mask, cnt[idx], 0.0),
+        jnp.where(sel_mask, order[idx], 0.0).astype(order.dtype),
+        sel_mask,
+    )
+
+
+# ----------------------------------------------------------------------------
+# construction
+# ----------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("n", "agg", "pre_hashed"))
+def build_sketch(
+    keys: jnp.ndarray,
+    values: jnp.ndarray,
+    *,
+    n: int,
+    agg: Agg = Agg.MEAN,
+    valid: Optional[jnp.ndarray] = None,
+    order_offset: jnp.ndarray | float = 0.0,
+    pre_hashed: bool = False,
+) -> CorrelationSketch:
+    """Build a sketch from a chunk of ``(key, value)`` rows (paper §3.1).
+
+    ``keys`` are integer join-key identifiers (uint32/uint64) or, when
+    ``pre_hashed=True``, already murmur3-hashed uint32 ids (the ingest path
+    hashes strings on CPU). ``order_offset`` is the global row index of the
+    chunk start, needed only for FIRST/LAST merge semantics.
+    """
+    m = keys.shape[0]
+    if valid is None:
+        valid = jnp.ones((m,), bool)
+    values = values.astype(jnp.float32)
+    # NaN values are treated as missing data (real open-data tables are full
+    # of them): drop the row from the sketch and from the column stats.
+    valid = valid & jnp.isfinite(values)
+    kh = keys.astype(jnp.uint32) if pre_hashed else hashing.murmur3_32(keys)
+    order = (jnp.arange(m, dtype=jnp.float32) + order_offset)
+
+    if agg == Agg.MEAN:
+        acc = jnp.where(valid, values, 0.0)
+    elif agg in (Agg.SUM, Agg.MIN, Agg.MAX, Agg.FIRST, Agg.LAST):
+        acc = jnp.where(valid, values, 0.0)
+    elif agg == Agg.COUNT:
+        acc = jnp.zeros((m,), jnp.float32)
+    else:  # pragma: no cover
+        raise ValueError(agg)
+    cnt = valid.astype(jnp.float32)
+
+    kh_c, acc_c, cnt_c, ord_c, valid_c = _combine_duplicates(kh, acc, cnt, order, valid, agg)
+    kh_b, acc_b, cnt_b, ord_b, mask_b = _bottom_n(kh_c, acc_c, cnt_c, ord_c, valid_c, n)
+
+    vmasked = jnp.where(valid, values, jnp.inf)
+    col_min = jnp.min(vmasked)
+    vmasked = jnp.where(valid, values, -jnp.inf)
+    col_max = jnp.max(vmasked)
+    rows = jnp.sum(valid.astype(jnp.float32))
+    return CorrelationSketch(
+        key_hash=kh_b, acc=acc_b, cnt=cnt_b, order=ord_b, mask=mask_b,
+        col_min=col_min, col_max=col_max, rows=rows, agg=agg,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=())
+def merge(a: CorrelationSketch, b: CorrelationSketch) -> CorrelationSketch:
+    """Combine two partial sketches (KMV ⊕ of §2.1 + aggregation merge).
+
+    Exactness argument: a key in only one input either (i) has Fibonacci
+    hash above the other input's U(k) — then it cannot be in the merged
+    bottom-n if the other sketch is full, so its possibly-partial aggregate
+    is discarded; or (ii) the other sketch is not full, hence contains *all*
+    of its table's keys, so absence means the key truly never occurred there
+    and the aggregate is complete. Keys in both inputs re-aggregate from the
+    carried (sum, count, order) state.
+    """
+    if a.agg != b.agg:
+        raise ValueError(f"cannot merge sketches with different aggs: {a.agg} vs {b.agg}")
+    n = a.n
+    kh = jnp.concatenate([a.key_hash, b.key_hash])
+    acc = jnp.concatenate([a.acc, b.acc])
+    cnt = jnp.concatenate([a.cnt, b.cnt])
+    order = jnp.concatenate([a.order, b.order])
+    valid = jnp.concatenate([a.mask, b.mask])
+    kh_c, acc_c, cnt_c, ord_c, valid_c = _combine_duplicates(kh, acc, cnt, order, valid, a.agg)
+    kh_b, acc_b, cnt_b, ord_b, mask_b = _bottom_n(kh_c, acc_c, cnt_c, ord_c, valid_c, n)
+    return CorrelationSketch(
+        key_hash=kh_b, acc=acc_b, cnt=cnt_b, order=ord_b, mask=mask_b,
+        col_min=jnp.minimum(a.col_min, b.col_min),
+        col_max=jnp.maximum(a.col_max, b.col_max),
+        rows=a.rows + b.rows,
+        agg=a.agg,
+    )
+
+
+def build_sketch_streaming(keys, values, *, n: int, agg: Agg = Agg.MEAN,
+                           chunk: int = 65536, pre_hashed: bool = False) -> CorrelationSketch:
+    """Out-of-core construction: single pass over row chunks, constant memory.
+
+    This is the production ingest path — the jitted chunk builder + merge
+    run back-to-back so arbitrarily large columns stream through a fixed
+    footprint, mirroring the paper's one-pass tree algorithm.
+    """
+    m = len(keys)
+    sk = None
+    for s in range(0, m, chunk):
+        e = min(s + chunk, m)
+        kc = jnp.asarray(keys[s:e])
+        vc = jnp.asarray(values[s:e])
+        if e - s < chunk:  # pad the tail chunk to keep jit cache warm
+            pad = chunk - (e - s)
+            kc = jnp.pad(kc, (0, pad))
+            vc = jnp.pad(vc, (0, pad))
+            valid = jnp.arange(chunk) < (e - s)
+        else:
+            valid = jnp.ones((chunk,), bool)
+        part = build_sketch(kc, vc, n=n, agg=agg, valid=valid,
+                            order_offset=float(s), pre_hashed=pre_hashed)
+        sk = part if sk is None else merge(sk, part)
+    if sk is None:
+        raise ValueError("empty input")
+    return sk
+
+
+def stack_sketches(sketches) -> CorrelationSketch:
+    """Stack a list of same-(n, agg) sketches along a leading axis → index shard."""
+    agg = sketches[0].agg
+    if any(s.agg != agg for s in sketches):
+        raise ValueError("all sketches in a stack must share the aggregation")
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *sketches)

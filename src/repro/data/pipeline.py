@@ -1,0 +1,131 @@
+"""Deterministic data pipeline.
+
+Two producers:
+  * :func:`lm_batches` — seeded synthetic token streams for the LM substrate
+    (deterministic per (seed, step, shard), so restarts resume bit-exact
+    without data-state checkpoints — the idempotent-reader design).
+  * :func:`TableCollection` generators — synthetic relational tables for the
+    paper's workloads (SBN bivariate-normal corpus of §5.1 plus skewed
+    "open-data-like" corpora) used by benchmarks and the engine examples.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterator, List, Optional, Tuple
+
+import numpy as np
+
+from repro.configs.base import ModelConfig
+
+
+def lm_batch(cfg: ModelConfig, batch: int, seq: int, *, seed: int, step: int,
+             microbatches: int = 1) -> Dict[str, np.ndarray]:
+    """One deterministic LM batch, microbatch-major ([n_mb, mb, S])."""
+    rng = np.random.default_rng(np.random.SeedSequence([seed, step]))
+    toks = rng.integers(0, cfg.vocab_size, size=(batch, seq), dtype=np.int32)
+    labels = np.concatenate([toks[:, 1:], np.full((batch, 1), -1, np.int32)], axis=1)
+    out = {"tokens": toks, "labels": labels}
+    if cfg.frontend == "patches" and cfg.num_prefix_embeds > 0:
+        out["prefix_embeds"] = rng.standard_normal(
+            (batch, cfg.num_prefix_embeds, cfg.d_model)).astype(np.float32)
+    if cfg.encoder_layers > 0:
+        out = {
+            "frames": rng.standard_normal((batch, seq, cfg.d_model)).astype(np.float32),
+            "target_tokens": toks[:, :448] if seq >= 448 else toks,
+            "target_labels": labels[:, :448] if seq >= 448 else labels,
+        }
+    # always microbatch-major: [n_mb, B/n_mb, ...] (n_mb=1 ⇒ [1, B, ...])
+    out = {k: v.reshape((microbatches, v.shape[0] // microbatches) + v.shape[1:])
+           for k, v in out.items()}
+    return out
+
+
+# ----------------------------------------------------------------------------
+# synthetic table corpora (paper §5.1)
+# ----------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Table:
+    """⟨K, X⟩ column pair: integer join keys + numeric column."""
+    keys: np.ndarray     # uint32 (hash-ready ids; strings hashed at ingest)
+    values: np.ndarray   # float32
+    name: str = ""
+    meta: dict = dataclasses.field(default_factory=dict)
+
+
+def sbn_pair(rng, n_max: int = 500_000, r: Optional[float] = None,
+             key_space: int = 1 << 30) -> Tuple[Table, Table, float, float]:
+    """One Synthetic-Bivariate-Normal table pair (§5.1 SBN):
+
+    n ~ U(1, n_max) rows with unique keys; (x, y) ~ N(0, Σ(r)); table Y is a
+    uniform subsample of size n·c, c ~ U(0,1) (the join probability).
+    Returns (T_X, T_Y, r_target, c).
+    """
+    n = int(rng.integers(256, n_max))
+    r = float(rng.uniform(-1, 1)) if r is None else r
+    keys = rng.choice(key_space, size=n, replace=False).astype(np.uint32)
+    cov = np.array([[1.0, r], [r, 1.0]])
+    xy = rng.multivariate_normal([0.0, 0.0], cov, size=n).astype(np.float32)
+    c = float(rng.uniform(0.05, 1.0))
+    m = max(int(n * c), 8)
+    sel = rng.choice(n, size=m, replace=False)
+    tx = Table(keys=keys, values=xy[:, 0], name="X", meta={"r": r})
+    ty = Table(keys=keys[sel], values=xy[sel, 1], name="Y", meta={"r": r, "c": c})
+    return tx, ty, r, c
+
+
+def skewed_pair(rng, n_max: int = 200_000, key_space: int = 1 << 30):
+    """Open-data-like pair: heavy-tailed values (lognormal/power-law mix),
+    repeated keys (zipf multiplicities), and missing values — the regime
+    where the paper's distribution-free bounds matter (NYC/WBF §5.1)."""
+    n = int(rng.integers(256, n_max))
+    n_distinct = max(int(n * rng.uniform(0.3, 1.0)), 64)
+    base = rng.choice(key_space, size=n_distinct, replace=False).astype(np.uint32)
+    mult = rng.zipf(2.0, size=n) % n_distinct
+    keys = base[mult]
+    r = float(rng.uniform(-1, 1))
+    latent = rng.standard_normal(n)
+    noise = rng.standard_normal(n)
+    x = latent
+    y = r * latent + np.sqrt(max(1 - r * r, 0.0)) * noise
+    # heavy-tail transform on a random subset of columns
+    if rng.random() < 0.5:
+        x = np.sign(x) * np.expm1(np.abs(x))
+    if rng.random() < 0.5:
+        y = np.sign(y) * np.expm1(np.abs(y))
+    # missing data
+    x[rng.random(n) < 0.02] = np.nan
+    c = float(rng.uniform(0.05, 1.0))
+    m = max(int(n * c), 8)
+    sel = rng.choice(n, size=m, replace=False)
+    return (Table(keys=keys, values=x.astype(np.float32), name="X"),
+            Table(keys=keys[sel], values=y[sel].astype(np.float32), name="Y"),
+            r, c)
+
+
+def corpus(rng, n_tables: int, kind: str = "sbn", n_max: int = 100_000):
+    """A collection of table pairs for estimation-accuracy experiments."""
+    gen = sbn_pair if kind == "sbn" else skewed_pair
+    return [gen(rng, n_max=n_max) for _ in range(n_tables)]
+
+
+def joined_truth(tx: Table, ty: Table, agg: str = "mean"):
+    """Ground truth: full join on keys with aggregation (oracle for tests).
+
+    Returns (x_joined, y_joined) aligned arrays.
+    """
+    import collections
+    ax: dict = collections.defaultdict(list)
+    ay: dict = collections.defaultdict(list)
+    for k, v in zip(tx.keys.tolist(), tx.values.tolist()):
+        if np.isfinite(v):
+            ax[k].append(v)
+    for k, v in zip(ty.keys.tolist(), ty.values.tolist()):
+        if np.isfinite(v):
+            ay[k].append(v)
+    f = {"mean": np.mean, "sum": np.sum, "min": np.min, "max": np.max,
+         "count": len, "first": lambda s: s[0], "last": lambda s: s[-1]}[agg]
+    common = sorted(set(ax) & set(ay))
+    x = np.array([f(ax[k]) for k in common], np.float64)
+    y = np.array([f(ay[k]) for k in common], np.float64)
+    return x, y

@@ -1,0 +1,162 @@
+"""The sketch index: a TPU-resident columnar store of correlation sketches.
+
+Replaces the paper's Lucene inverted index (§4, §5.5) with a brute-force
+sharded scan (DESIGN.md §3): sketches are fixed-size, so the whole index is
+four dense arrays
+
+    key_hash  u32[C, n]     values  f32[C, n]     mask  f32[C, n]
+    stats     f32[C, 4]     (col_min, col_max, rows, n_valid)
+
+sharded along the column axis C across every device. A query broadcasts
+(KB-sized) and each device scans its shard with the fused ``sketch_join``
+kernel. Collective traffic per query is O(devices × k), independent of C.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import hashing
+from repro.core.sketch import Agg, CorrelationSketch, build_sketch_streaming
+from repro.data.pipeline import Table
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class IndexShard:
+    """Device-resident stacked sketches (leading axis = columns)."""
+    key_hash: jnp.ndarray   # u32 [C, n]
+    values: jnp.ndarray     # f32 [C, n]
+    mask: jnp.ndarray       # f32 [C, n]
+    col_min: jnp.ndarray    # f32 [C]
+    col_max: jnp.ndarray    # f32 [C]
+    rows: jnp.ndarray       # f32 [C]
+
+    @property
+    def num_columns(self) -> int:
+        return self.key_hash.shape[0]
+
+    @property
+    def sketch_size(self) -> int:
+        return self.key_hash.shape[1]
+
+
+@dataclasses.dataclass
+class SketchIndex:
+    """Host handle: device arrays + column catalog."""
+    shard: IndexShard
+    names: List[str]
+    n: int
+
+    @property
+    def num_columns(self) -> int:
+        return len(self.names)
+
+
+def query_arrays(sk: CorrelationSketch):
+    """Flatten one sketch into the (kh, val, mask, cmin, cmax) query tuple."""
+    return (sk.key_hash, sk.values(), sk.mask.astype(jnp.float32),
+            sk.col_min, sk.col_max)
+
+
+def build_index(tables: Sequence[Table], *, n: int = 256, agg: Agg = Agg.MEAN,
+                chunk: int = 65536, pad_to: Optional[int] = None) -> SketchIndex:
+    """Sketch every ⟨K, X⟩ column pair and stack into an index.
+
+    ``pad_to``: round the column count up (invalid padding columns) so the
+    index divides evenly across a device mesh.
+    """
+    sketches = [build_sketch_streaming(t.keys, t.values, n=n, agg=agg, chunk=chunk)
+                for t in tables]
+    names = [t.name or f"col{i}" for i, t in enumerate(tables)]
+    C = len(sketches)
+    target = pad_to if pad_to and pad_to >= C else C
+    kh = np.full((target, n), 0xFFFFFFFF, np.uint32)
+    vals = np.zeros((target, n), np.float32)
+    mask = np.zeros((target, n), np.float32)
+    cmin = np.zeros((target,), np.float32)
+    cmax = np.zeros((target,), np.float32)
+    rows = np.zeros((target,), np.float32)
+    for i, sk in enumerate(sketches):
+        kh[i] = np.asarray(sk.key_hash)
+        vals[i] = np.asarray(sk.values())
+        mask[i] = np.asarray(sk.mask, np.float32)
+        cmin[i] = float(sk.col_min)
+        cmax[i] = float(sk.col_max)
+        rows[i] = float(sk.rows)
+    shard = IndexShard(key_hash=jnp.asarray(kh), values=jnp.asarray(vals),
+                       mask=jnp.asarray(mask), col_min=jnp.asarray(cmin),
+                       col_max=jnp.asarray(cmax), rows=jnp.asarray(rows))
+    return SketchIndex(shard=shard, names=names, n=n)
+
+
+def shard_for_mesh(index: SketchIndex, mesh) -> IndexShard:
+    """Place the index arrays sharded over all mesh devices (column axis)."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    ndev = mesh.devices.size
+    C = index.shard.num_columns
+    pad = (-C) % ndev
+    shard = index.shard
+    if pad:
+        shard = IndexShard(
+            key_hash=jnp.pad(shard.key_hash, ((0, pad), (0, 0)), constant_values=0xFFFFFFFF),
+            values=jnp.pad(shard.values, ((0, pad), (0, 0))),
+            mask=jnp.pad(shard.mask, ((0, pad), (0, 0))),
+            col_min=jnp.pad(shard.col_min, (0, pad)),
+            col_max=jnp.pad(shard.col_max, (0, pad)),
+            rows=jnp.pad(shard.rows, (0, pad)))
+    axes = tuple(mesh.axis_names)
+    row_sharding = NamedSharding(mesh, P(axes))
+    vec_sharding = NamedSharding(mesh, P(axes))
+    return IndexShard(
+        key_hash=jax.device_put(shard.key_hash, row_sharding),
+        values=jax.device_put(shard.values, row_sharding),
+        mask=jax.device_put(shard.mask, row_sharding),
+        col_min=jax.device_put(shard.col_min, vec_sharding),
+        col_max=jax.device_put(shard.col_max, vec_sharding),
+        rows=jax.device_put(shard.rows, vec_sharding))
+
+
+# ----------------------------------------------------------------------------
+# distributed sketch construction (row-sharded single column)
+# ----------------------------------------------------------------------------
+
+def distributed_build(keys, values, mesh, *, n: int = 256, agg: Agg = Agg.MEAN):
+    """Build one sketch from a row-sharded column via local-build + merge.
+
+    Exactness comes from the KMV merge closure (sketch.merge docstring):
+    shard rows across devices → local bottom-k sketches → all-gather the
+    (tiny) partials → fold. The fold is replicated on every device, so no
+    second collective is needed.
+    """
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from jax.experimental.shard_map import shard_map
+    from repro.core.sketch import build_sketch, merge
+
+    axes = tuple(mesh.axis_names)
+    ndev = mesh.devices.size
+    m = keys.shape[0]
+    assert m % ndev == 0, (m, ndev)
+
+    def local(keys_l, values_l, offset_l):
+        sk = build_sketch(keys_l, values_l, n=n, agg=agg,
+                          order_offset=offset_l[0].astype(jnp.float32))
+        # gather the partial sketches from every device, fold locally
+        gathered = jax.tree.map(
+            lambda a: jax.lax.all_gather(a, axes, tiled=False), sk)
+        def fold(i, acc):
+            return merge(acc, jax.tree.map(lambda a: a[i], gathered))
+        first = jax.tree.map(lambda a: a[0], gathered)
+        out = jax.lax.fori_loop(1, ndev, fold, first)
+        return out
+
+    offsets = jnp.arange(ndev, dtype=jnp.int32) * (m // ndev)
+    fn = shard_map(local, mesh=mesh,
+                   in_specs=(P(axes), P(axes), P(axes)),
+                   out_specs=P(),
+                   check_rep=False)  # replicated by the all-gather + fold
+    return fn(keys, values, offsets)

@@ -1,0 +1,107 @@
+"""Pallas TPU kernel: block-causal GQA flash attention (forward).
+
+The LM substrate's perf-critical compute. Classic streaming-softmax
+formulation: the query block is resident in VMEM, key/value blocks stream
+through, and the running (max, sum, acc) state lives in VMEM scratch across
+the key-block grid dimension. Supports causal masking, sliding windows
+(Hymba/SWA) and grouped queries (GQA) by mapping each query-head grid step
+to its kv head.
+
+Block sizes default to (128, 128) — MXU-aligned on both matmul dims.
+Causal + window blocks that are fully masked are skipped entirely via the
+grid index re-mapping trick (they still occupy grid steps but do no work).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = np.float32(-1e30)
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref,
+            *, scale, causal, window, block_q, block_k, lk, lq):
+    kblk = pl.program_id(3)
+
+    @pl.when(kblk == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros(acc_ref.shape, jnp.float32)
+        m_ref[...] = jnp.full(m_ref.shape, NEG_INF, jnp.float32)
+        l_ref[...] = jnp.zeros(l_ref.shape, jnp.float32)
+
+    q = q_ref[0, 0].astype(jnp.float32)  # [Bq, D]
+    k = k_ref[0, 0].astype(jnp.float32)  # [Bk, D]
+    v = v_ref[0, 0].astype(jnp.float32)  # [Bk, D]
+
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale  # [Bq, Bk]
+
+    # absolute positions; queries are right-aligned against keys so the same
+    # kernel serves training (lq == lk) and decode (lq << lk)
+    qpos = pl.program_id(2) * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0) + (lk - lq)
+    kpos = kblk * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+    mask = jnp.ones((block_q, block_k), bool)
+    if causal:
+        mask = mask & (kpos <= qpos)
+    if window > 0:
+        mask = mask & (kpos > qpos - window)
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]          # [Bq, 1]
+    l_prev = l_ref[...]
+    m_cur = jnp.max(s, -1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(s - m_new)
+    p = jnp.where(mask, p, 0.0)
+    alpha = jnp.exp(m_prev - m_new)
+    l_new = l_prev * alpha + jnp.sum(p, -1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jnp.dot(p, v, preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+
+    @pl.when(kblk == pl.num_programs(3) - 1)
+    def _finalize():
+        l = l_ref[...]
+        o_ref[0, 0] = (acc_ref[...] / jnp.maximum(l, 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "block_q", "block_k", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: bool = False):
+    """q: [B, Hq, Lq, D]; k, v: [B, Hkv, Lk, D] → [B, Hq, Lq, D].
+
+    GQA mapping: query head h reads kv head ``h // (Hq // Hkv)``.
+    """
+    B, Hq, Lq, D = q.shape
+    _, Hkv, Lk, _ = k.shape
+    group = Hq // Hkv
+    scale = 1.0 / np.sqrt(D)
+    block_q = min(block_q, Lq)
+    block_k = min(block_k, Lk)
+    assert Lq % block_q == 0 and Lk % block_k == 0
+
+    grid = (B, Hq, Lq // block_q, Lk // block_k)
+    out = pl.pallas_call(
+        functools.partial(_kernel, scale=scale, causal=causal, window=window,
+                          block_q=block_q, block_k=block_k, lk=Lk, lq=Lq),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, D), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, block_k, D), lambda b, h, i, j, g=group: (b, h // g, j, 0)),
+            pl.BlockSpec((1, 1, block_k, D), lambda b, h, i, j, g=group: (b, h // g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, D), lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, D), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out

@@ -1,0 +1,74 @@
+"""Jitted public wrappers for the Pallas kernels.
+
+Dispatch policy: Pallas targets TPU; on CPU (this container) the compiled
+path is the pure-jnp reference (`ref.py`), while ``backend="interpret"``
+executes the actual kernel bodies through the Pallas interpreter for
+validation. Call sites pick the backend once via `KernelConfig`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import hash_build as _hb
+from repro.kernels import rank_transform as _rt
+from repro.kernels import ref as _ref
+from repro.kernels import sketch_join as _sj
+
+Backend = Literal["xla", "pallas", "interpret"]
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelConfig:
+    backend: Backend = "xla"
+
+    @property
+    def interpret(self) -> bool:
+        return self.backend == "interpret"
+
+    @property
+    def use_pallas(self) -> bool:
+        return self.backend in ("pallas", "interpret")
+
+
+def default_backend() -> Backend:
+    return "pallas" if jax.default_backend() == "tpu" else "xla"
+
+
+def sketch_join_moments(q_kh, q_val, q_mask, c_kh, c_val, c_mask,
+                        cfg: KernelConfig = KernelConfig()):
+    if cfg.use_pallas:
+        return _sj.sketch_join_moments(q_kh, q_val, q_mask.astype(jnp.float32),
+                                       c_kh, c_val, c_mask.astype(jnp.float32),
+                                       interpret=cfg.interpret)
+    return _ref.sketch_join_moments(q_kh, q_val, q_mask, c_kh, c_val, c_mask)
+
+
+def rank_transform(x, mask, cfg: KernelConfig = KernelConfig()):
+    if cfg.use_pallas:
+        return _rt.rank_transform(x, mask, interpret=cfg.interpret)
+    return _ref.rank_transform(x, mask.astype(jnp.float32))
+
+
+def hash_build(keys, cfg: KernelConfig = KernelConfig()):
+    if cfg.use_pallas:
+        return _hb.hash_build(keys, interpret=cfg.interpret)
+    return _ref.hash_build(keys)
+
+
+def flash_attention(q, k, v, *, causal=True, window=0,
+                    cfg: KernelConfig = KernelConfig()):
+    if cfg.use_pallas:
+        return _fa.flash_attention(q, k, v, causal=causal, window=window,
+                                   interpret=cfg.interpret)
+    return _ref.flash_attention(q, k, v, causal=causal, window=window)
+
+
+# moment → statistics helpers shared by engine and benchmarks
+pearson_from_moments = _ref.pearson_from_moments
+hoeffding_from_moments = _ref.hoeffding_from_moments

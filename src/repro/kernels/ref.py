@@ -1,0 +1,158 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the semantic ground truth: each kernel's test sweeps shapes/dtypes
+and asserts allclose against the function here. They are also the XLA
+fallback path used on CPU (and for the dry-run), so the system is fully
+functional without Pallas.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import hashing
+
+PAD_KEY = np.uint32(0xFFFFFFFF)
+
+
+# ----------------------------------------------------------------------------
+# sketch_join: batched sketch intersection + paired moment accumulation
+# ----------------------------------------------------------------------------
+
+def sketch_join_moments(q_kh, q_val, q_mask, c_kh, c_val, c_mask):
+    """For each candidate sketch, intersect with the query sketch and return
+
+      moments: f32[C, 6] = (m, Σa, Σb, Σa², Σb², Σab) over matched pairs
+      aligned_b: f32[C, nq] — candidate value aligned to each query slot
+      hit: f32[C, nq] — 1.0 where the query slot matched
+
+    a = query values, b = candidate values, aligned on equal key hashes.
+    Key hashes are uint32 with PAD_KEY sentinels; masks are float32 0/1.
+    """
+    q_mask = q_mask.astype(jnp.float32)
+    c_mask = c_mask.astype(jnp.float32)
+    # match[c, i, j] = 1 iff query slot i and candidate slot j hold the same key
+    eq = (q_kh[None, :, None] == c_kh[:, None, :]).astype(jnp.float32)
+    eq = eq * q_mask[None, :, None] * c_mask[:, None, :]
+    hit = jnp.minimum(jnp.sum(eq, -1), 1.0)                      # [C, nq]
+    aligned_b = jnp.einsum("cij,cj->ci", eq, c_val)              # [C, nq]
+    a = q_val[None, :] * hit
+    m = jnp.sum(hit, -1)
+    sa = jnp.sum(a, -1)
+    sb = jnp.sum(aligned_b, -1)
+    saa = jnp.sum(a * a, -1)
+    sbb = jnp.sum(aligned_b * aligned_b, -1)
+    sab = jnp.sum(a * aligned_b, -1)
+    moments = jnp.stack([m, sa, sb, saa, sbb, sab], axis=-1)
+    return moments, aligned_b, hit
+
+
+def pearson_from_moments(moments):
+    """Pearson r per candidate from the 6 accumulated moments."""
+    m, sa, sb, saa, sbb, sab = [moments[..., i] for i in range(6)]
+    msafe = jnp.maximum(m, 1.0)
+    mu_a, mu_b = sa / msafe, sb / msafe
+    cov = sab / msafe - mu_a * mu_b
+    va = jnp.maximum(saa / msafe - mu_a**2, 0.0)
+    vb = jnp.maximum(sbb / msafe - mu_b**2, 0.0)
+    den = jnp.sqrt(va) * jnp.sqrt(vb)
+    ok = (m >= 2) & (den > 1e-12)
+    return jnp.where(ok, cov / jnp.where(ok, den, 1.0), 0.0)
+
+
+def hoeffding_from_moments(moments, c_low, c_high, alpha=0.05):
+    """§4.3 CI lengths from raw moments (shift into [0,C] analytically):
+    returns (lo, hi) per candidate. Matches `repro.core.bounds.hoeffding_ci`."""
+    m, sa, sb, saa, sbb, sab = [moments[..., i] for i in range(6)]
+    msafe = jnp.maximum(m, 1.0)
+    # moments of the shifted variables A = a − c_low, B = b − c_low
+    mu_a = sa / msafe - c_low
+    mu_b = sb / msafe - c_low
+    va = saa / msafe - 2.0 * c_low * (sa / msafe) + c_low**2
+    vb = sbb / msafe - 2.0 * c_low * (sb / msafe) + c_low**2
+    vab = sab / msafe - c_low * (sa / msafe) - c_low * (sb / msafe) + c_low**2
+    C = jnp.maximum(c_high - c_low, 1e-30)
+    log_term = jnp.log(10.0 / alpha)
+    t = jnp.sqrt(log_term * C * C / (2.0 * msafe))
+    tp = jnp.sqrt(log_term * C**4 / (2.0 * msafe))
+    num_lo = (vab - tp) - (mu_a + t) * (mu_b + t)
+    num_hi = (vab + tp) - (mu_a - t) * (mu_b - t)
+    den_lo = jnp.sqrt(jnp.maximum(0.0, (va - tp) - (mu_a + t) ** 2)
+                      * jnp.maximum(0.0, (vb - tp) - (mu_b + t) ** 2))
+    den_hi = jnp.sqrt(jnp.maximum(0.0, (va + tp) - (mu_a - t) ** 2)
+                      * jnp.maximum(0.0, (vb + tp) - (mu_b - t) ** 2))
+    sden = jnp.sqrt(jnp.maximum(va - mu_a**2, 0.0) * jnp.maximum(vb - mu_b**2, 0.0))
+    degenerate = (den_lo <= 1e-30) | (den_hi <= 1e-30)
+    den_lo = jnp.where(degenerate, sden, den_lo)
+    den_hi = jnp.where(degenerate, sden, den_hi)
+
+    def _div(n, d):
+        return n / jnp.maximum(d, 1e-30)
+
+    lo = jnp.where(num_lo >= 0, _div(num_lo, den_hi), _div(num_lo, den_lo))
+    hi = jnp.where(num_hi >= 0, _div(num_hi, den_lo), _div(num_hi, den_hi))
+    big = jnp.float32(3.4e38)
+    ok = m >= 2
+    return jnp.where(ok, lo, -big), jnp.where(ok, hi, big)
+
+
+# ----------------------------------------------------------------------------
+# rank_transform: batched average ranks (ties → mean rank), masked
+# ----------------------------------------------------------------------------
+
+def rank_transform(x, mask):
+    """rank_i = #less_i + (#equal_i + 1)/2 among valid entries, per row.
+
+    x: f32[R, n], mask: f32[R, n] → f32[R, n] (0 in masked slots)."""
+    w = mask.astype(jnp.float32)
+    lt = (x[:, None, :] < x[:, :, None]).astype(jnp.float32)
+    eq = (x[:, None, :] == x[:, :, None]).astype(jnp.float32)
+    less = jnp.einsum("rij,rj->ri", lt, w)
+    equal = jnp.einsum("rij,rj->ri", eq, w)
+    r = less + (equal + 1.0) * 0.5
+    return r * w
+
+
+# ----------------------------------------------------------------------------
+# hash_build: fused murmur3 + Fibonacci + unit-interval conversion
+# ----------------------------------------------------------------------------
+
+def hash_build(keys_u32):
+    """keys (uint32) → (key_hash u32, fib u32, unit f32)."""
+    kh = hashing.murmur3_32(keys_u32)
+    fib = hashing.fibonacci_u32(kh)
+    unit = hashing.unit_interval(fib)
+    return kh, fib, unit
+
+
+# ----------------------------------------------------------------------------
+# flash_attention: block-causal GQA attention forward
+# ----------------------------------------------------------------------------
+
+def flash_attention(q, k, v, *, causal=True, window=0, scale=None):
+    """Reference attention. q: [B, Hq, Lq, D], k/v: [B, Hkv, Lk, D].
+
+    GQA: query head h attends to kv head h // (Hq // Hkv).
+    window > 0 limits attention to the last `window` positions (SWA).
+    """
+    B, Hq, Lq, D = q.shape
+    Hkv = k.shape[1]
+    group = Hq // Hkv
+    if scale is None:
+        scale = 1.0 / np.sqrt(D)
+    kq = jnp.repeat(k, group, axis=1)
+    vq = jnp.repeat(v, group, axis=1)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q, kq) * scale
+    Lk = k.shape[2]
+    qpos = jnp.arange(Lq)[:, None] + (Lk - Lq)  # right-aligned (decode friendly)
+    kpos = jnp.arange(Lk)[None, :]
+    m = jnp.ones((Lq, Lk), bool)
+    if causal:
+        m = m & (kpos <= qpos)
+    if window and window > 0:
+        m = m & (kpos > qpos - window)
+    logits = jnp.where(m[None, None], logits, -jnp.inf)
+    p = jax.nn.softmax(logits, axis=-1)
+    p = jnp.where(jnp.isnan(p), 0.0, p)  # fully-masked rows
+    return jnp.einsum("bhqk,bhkd->bhqd", p, vq).astype(q.dtype)

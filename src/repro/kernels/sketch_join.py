@@ -1,0 +1,119 @@
+"""Pallas TPU kernel: batched sketch-join with fused moment accumulation.
+
+This is the query-time hot loop of the paper (§4/§5.5): one query sketch is
+intersected with a large batch of candidate sketches, and everything a
+scorer needs — the intersection size and the five paired moments behind
+Pearson's r (Eq. 3) and the Hoeffding CI (§4.3) — is accumulated in a single
+pass so each candidate sketch is read from HBM exactly once.
+
+TPU adaptation (DESIGN.md §3): instead of the CPU sorted-merge intersect,
+the kernel materialises a block equality-indicator tensor
+``match[c, i, j] = (q_kh[i] == c_kh[c, j])`` in VMEM and reduces it — a
+branch-free formulation that runs on the VPU, with the aligned-value
+contraction ``match @ c_val`` shaped for the MXU. Work per candidate is
+O(n²), but n is the (small, fixed) sketch size, so arithmetic intensity is
+high and the launch is perfectly regular.
+
+Grid: ``(C // block_c, n // block_n)`` — candidates outer, candidate-slot
+blocks inner, with the inner dimension accumulating into the same output
+block (classic Pallas reduction-grid revisiting).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+
+def _kernel(q_kh_ref, q_val_ref, q_mask_ref, c_kh_ref, c_val_ref, c_mask_ref,
+            mom_ref, aligned_ref, hit_ref):
+    jblk = pl.program_id(1)
+
+    qk = q_kh_ref[0, :]          # [nq] uint32
+    qv = q_val_ref[0, :]         # [nq] f32
+    qm = q_mask_ref[0, :]        # [nq] f32
+    ck = c_kh_ref[...]           # [Bc, Bn] uint32
+    cv = c_val_ref[...]          # [Bc, Bn] f32
+    cm = c_mask_ref[...]         # [Bc, Bn] f32
+
+    # match[c, i, j] = same key and both slots valid
+    eq = (qk[None, :, None] == ck[:, None, :]).astype(jnp.float32)
+    eq = eq * qm[None, :, None] * cm[:, None, :]
+    hit_blk = jnp.sum(eq, axis=-1)                     # [Bc, nq] ∈ {0, 1}
+    aligned_blk = jnp.einsum("cij,cj->ci", eq, cv,
+                             preferred_element_type=jnp.float32)
+
+    @pl.when(jblk == 0)
+    def _init():
+        aligned_ref[...] = jnp.zeros(aligned_ref.shape, aligned_ref.dtype)
+        hit_ref[...] = jnp.zeros(hit_ref.shape, hit_ref.dtype)
+        mom_ref[...] = jnp.zeros(mom_ref.shape, mom_ref.dtype)
+
+    # keys are unique within a sketch, so across j-blocks each query slot
+    # matches at most once — plain accumulation is exact.
+    hit = hit_ref[...] + hit_blk
+    aligned = aligned_ref[...] + aligned_blk
+    hit_ref[...] = hit
+    aligned_ref[...] = aligned
+
+    jlast = pl.num_programs(1) - 1
+
+    @pl.when(jblk == jlast)
+    def _finalize():
+        a = qv[None, :] * hit
+        b = aligned
+        m = jnp.sum(hit, -1)
+        sa = jnp.sum(a, -1)
+        sb = jnp.sum(b, -1)
+        saa = jnp.sum(a * a, -1)
+        sbb = jnp.sum(b * b, -1)
+        sab = jnp.sum(a * b, -1)
+        zero = jnp.zeros_like(m)
+        mom_ref[...] = jnp.stack([m, sa, sb, saa, sbb, sab, zero, zero], axis=-1)
+
+
+@functools.partial(jax.jit, static_argnames=("block_c", "block_n", "interpret"))
+def sketch_join_moments(q_kh, q_val, q_mask, c_kh, c_val, c_mask,
+                        *, block_c: int = 8, block_n: int = 0,
+                        interpret: bool = False):
+    """See :func:`repro.kernels.ref.sketch_join_moments` for semantics."""
+    C, n = c_kh.shape
+    nq = q_kh.shape[0]
+    if block_n <= 0:
+        block_n = n
+    # VMEM budget check: the equality tensor is the biggest resident
+    # (block_c × nq × block_n × 4B); shrink block_c to stay ≤ ~4 MiB.
+    while block_c > 1 and block_c * nq * block_n * 4 > 4 * 1024 * 1024:
+        block_c //= 2
+    assert C % block_c == 0 and n % block_n == 0, (C, n, block_c, block_n)
+
+    grid = (C // block_c, n // block_n)
+    out_shapes = (
+        jax.ShapeDtypeStruct((C, 8), jnp.float32),   # 6 moments + 2 reserved
+        jax.ShapeDtypeStruct((C, nq), jnp.float32),  # aligned_b
+        jax.ShapeDtypeStruct((C, nq), jnp.float32),  # hit
+    )
+    mom, aligned, hit = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, nq), lambda c, j: (0, 0)),
+            pl.BlockSpec((1, nq), lambda c, j: (0, 0)),
+            pl.BlockSpec((1, nq), lambda c, j: (0, 0)),
+            pl.BlockSpec((block_c, block_n), lambda c, j: (c, j)),
+            pl.BlockSpec((block_c, block_n), lambda c, j: (c, j)),
+            pl.BlockSpec((block_c, block_n), lambda c, j: (c, j)),
+        ],
+        out_specs=(
+            pl.BlockSpec((block_c, 8), lambda c, j: (c, 0)),
+            pl.BlockSpec((block_c, nq), lambda c, j: (c, 0)),
+            pl.BlockSpec((block_c, nq), lambda c, j: (c, 0)),
+        ),
+        out_shape=out_shapes,
+        interpret=interpret,
+    )(q_kh.reshape(1, nq), q_val.reshape(1, nq), q_mask.reshape(1, nq),
+      c_kh, c_val, c_mask)
+    return mom[:, :6], aligned, hit

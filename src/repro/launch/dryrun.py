@@ -1,0 +1,171 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+Proves the distribution config is coherent without hardware:
+  * ``.lower().compile()`` must succeed on the 16×16 single-pod mesh AND the
+    2×16×16 multi-pod mesh for every runnable cell;
+  * ``memory_analysis()`` proves the per-device working set fits;
+  * ``cost_analysis()`` + the HLO walker (hlo_cost.py) yield the roofline
+    terms (single-pod only — §Roofline in EXPERIMENTS.md).
+
+Usage:
+    python -m repro.launch.dryrun --arch tinyllama-1.1b --shape train_4k
+    python -m repro.launch.dryrun --all --out results/dryrun.jsonl
+    python -m repro.launch.dryrun --all --mesh multi   # compile-proof only
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import numpy as np
+
+# TPU v5e hardware model (targets; this container compiles on CPU)
+PEAK_FLOPS = 197e12        # bf16 FLOP/s per chip
+HBM_BW = 819e9             # bytes/s per chip
+ICI_BW = 50e9              # bytes/s per link
+
+
+def _mem_dict(compiled):
+    try:
+        ma = compiled.memory_analysis()
+        return {
+            "argument_bytes": int(getattr(ma, "argument_size_in_bytes", 0)),
+            "output_bytes": int(getattr(ma, "output_size_in_bytes", 0)),
+            "temp_bytes": int(getattr(ma, "temp_size_in_bytes", 0)),
+            "generated_code_bytes": int(getattr(ma, "generated_code_size_in_bytes", 0)),
+        }
+    except Exception:
+        return {}
+
+
+def model_flops(cfg, shape) -> float:
+    """Analytic MODEL_FLOPS: 6·N_active·D (train) or 2·N_active·B (decode),
+    per executed step."""
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        if cfg.encoder_layers > 0:
+            from repro.configs.shapes import WHISPER_DECODER_LEN
+            tokens = shape.global_batch * (shape.seq_len + WHISPER_DECODER_LEN)
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    return 2.0 * n_active * shape.global_batch  # decode: one token per seq
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, verbose: bool = True):
+    from repro.configs import registry, shapes
+    from repro.launch import hlo_cost
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch import steps
+
+    cfg = registry.get_config(arch)
+    spec = shapes.SHAPES[shape_name]
+    runnable, reason = shapes.cell_is_runnable(cfg, spec)
+    rec = {"arch": arch, "shape": shape_name,
+           "mesh": "2x16x16" if multi_pod else "16x16", "kind": spec.kind}
+    if not runnable:
+        rec.update(status="skipped", reason=reason)
+        return rec
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = int(np.prod(list(mesh.shape.values())))
+    t0 = time.time()
+    if spec.kind == "train":
+        lowered, compiled = steps.compile_train(cfg, mesh, spec)
+    elif spec.kind == "prefill":
+        lowered, compiled = steps.compile_prefill(cfg, mesh, spec)
+    else:
+        lowered, compiled = steps.compile_serve_step(cfg, mesh, spec)
+    rec["compile_s"] = round(time.time() - t0, 1)
+    rec["memory"] = _mem_dict(compiled)
+
+    ca = compiled.cost_analysis() or {}
+    rec["xla_cost"] = {k: float(ca[k]) for k in ("flops", "bytes accessed")
+                       if k in ca}
+
+    rep = hlo_cost.analyze(compiled.as_text())
+    rec["hlo"] = {
+        "flops_per_device": rep.flops,
+        "bytes_per_device": rep.bytes,
+        "collective_bytes_per_device": rep.collective_bytes,
+        "collectives": dict(rep.collectives),
+        "collective_counts": {k: int(v) for k, v in rep.collective_counts.items()},
+        "unknown_trip_whiles": rep.unknown_trip_whiles,
+    }
+    # roofline terms, per-device quantities over per-chip rates
+    compute_s = rep.flops / PEAK_FLOPS
+    memory_s = rep.bytes / HBM_BW
+    collective_s = rep.collective_bytes / ICI_BW
+    dominant = max((compute_s, "compute"), (memory_s, "memory"),
+                   (collective_s, "collective"))[1]
+    mf = model_flops(cfg, spec)
+    total_hlo_flops = rep.flops * chips
+    rec["roofline"] = {
+        "compute_s": compute_s,
+        "memory_s": memory_s,
+        "collective_s": collective_s,
+        "dominant": dominant,
+        "model_flops": mf,
+        "hlo_flops_total": total_hlo_flops,
+        "useful_ratio": mf / total_hlo_flops if total_hlo_flops else 0.0,
+        "bound_s": max(compute_s, memory_s, collective_s),
+        "ideal_compute_s": mf / (chips * PEAK_FLOPS),
+    }
+    rec["roofline"]["roofline_fraction"] = (
+        rec["roofline"]["ideal_compute_s"] / rec["roofline"]["bound_s"]
+        if rec["roofline"]["bound_s"] else 0.0)
+    rec["status"] = "ok"
+    if verbose:
+        print(json.dumps({k: rec[k] for k in ("arch", "shape", "mesh", "status", "compile_s")}))
+        print("  memory:", rec["memory"])
+        print("  roofline:", {k: (f"{v:.4g}" if isinstance(v, float) else v)
+                              for k, v in rec["roofline"].items()})
+    return rec
+
+
+def main():
+    from repro.configs import registry, shapes
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=("single", "multi", "both"), default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=None, help="append JSONL records here")
+    args = ap.parse_args()
+
+    cells = []
+    archs = sorted(registry.ARCHS) if (args.all or not args.arch) else [args.arch]
+    shape_names = list(shapes.SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    for a in archs:
+        for s in shape_names:
+            for m in meshes:
+                cells.append((a, s, m))
+
+    failures = 0
+    for a, s, m in cells:
+        try:
+            rec = run_cell(a, s, m)
+        except Exception as e:  # a failed cell is a bug in the system
+            rec = {"arch": a, "shape": s, "mesh": "2x16x16" if m else "16x16",
+                   "status": "error", "error": f"{type(e).__name__}: {e}",
+                   "traceback": traceback.format_exc()[-2000:]}
+            failures += 1
+            print(f"FAILED {a} × {s} ({rec['mesh']}): {rec['error']}")
+        if args.out:
+            with open(args.out, "a") as f:
+                f.write(json.dumps(rec) + "\n")
+    print(f"done: {len(cells)} cells, {failures} failures")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

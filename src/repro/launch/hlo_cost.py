@@ -1,0 +1,309 @@
+"""HLO-text cost walker: FLOPs / bytes / collective bytes with loop scaling.
+
+``compiled.cost_analysis()`` counts each ``while`` body **once**, but our
+training steps scan over layers (and microbatches, and sequence chunks), so
+naive extraction undercounts by orders of magnitude. This walker parses the
+post-optimisation HLO text, finds every while loop's ``known_trip_count``
+(recorded by XLA in backend_config), and multiplies body costs through
+nested loops.
+
+Cost model (per device — SPMD modules are per-device after partitioning):
+  * FLOPs: dots = 2 · numel(out) · Πcontracted ; elementwise/reduce ops =
+    numel; descends into fusions for inner dots.
+  * bytes: Σ over materialising ops of (operand bytes + output bytes) —
+    post-fusion HLO makes fusion boundaries ≈ HBM traffic; bookkeeping ops
+    (tuple/gte/parameter/constant/bitcast) are free.
+  * collectives: per spec, Σ operand bytes of all-gather / all-reduce /
+    reduce-scatter / all-to-all / collective-permute (+ async -start forms),
+    scaled by loop trip counts; per-op breakdown retained.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+from collections import defaultdict
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1,
+    "f8e4m3b11fnuz": 1, "f8e5m2fnuz": 1, "f8e4m3fnuz": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(" + "|".join(_DTYPE_BYTES) + r")\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*?)\s+([\w\-]+)\((.*)$")
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s+\(.*\)\s+->\s+.*\{\s*$")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CALLS_RE = re.compile(r"calls=%?([\w.\-]+)")
+_BODY_RE = re.compile(r"body=%?([\w.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w.\-]+)")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+
+COLLECTIVE_OPS = {
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute", "collective-broadcast",
+    "all-gather-start", "all-reduce-start", "collective-permute-start",
+    "reduce-scatter-start", "all-to-all-start",
+}
+_SKIP_BYTES_OPS = {
+    "tuple", "get-tuple-element", "parameter", "constant", "bitcast",
+    "bitcast-convert", "after-all", "partition-id", "replica-id",
+    "get-dimension-size", "iota",
+    # -done halves of async pairs (the -start carries the cost)
+    "all-gather-done", "all-reduce-done", "collective-permute-done",
+    "reduce-scatter-done", "all-to-all-done", "async-done",
+}
+_ELEMENTWISE_FLOP_OPS = {
+    "add", "subtract", "multiply", "divide", "power", "maximum", "minimum",
+    "exponential", "exponential-minus-one", "log", "log-plus-one", "tanh",
+    "rsqrt", "sqrt", "negate", "abs", "sine", "cosine", "logistic",
+    "floor", "ceil", "round-nearest-afz", "round-nearest-even",
+    "atan2", "cbrt", "erf", "remainder",
+}
+
+
+def _shape_bytes_numel(type_str: str) -> Tuple[int, int]:
+    """Total (bytes, numel) across every dtype[dims] token in a type string."""
+    total_b = 0
+    total_n = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        numel = 1
+        if dims:
+            for d in dims.split(","):
+                numel *= int(d)
+        total_n += numel
+        total_b += numel * _DTYPE_BYTES[dt]
+    return total_b, total_n
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    type_str: str
+    opcode: str
+    rest: str           # operands + attrs (unsplit tail of the line)
+    operands: List[str]
+    is_root: bool = False
+    param_index: int = -1  # for parameter ops
+
+
+@dataclasses.dataclass
+class CostReport:
+    flops: float = 0.0
+    bytes: float = 0.0
+    collective_bytes: float = 0.0
+    collective_out_bytes: float = 0.0
+    collectives: Dict[str, float] = dataclasses.field(default_factory=lambda: defaultdict(float))
+    collective_counts: Dict[str, float] = dataclasses.field(default_factory=lambda: defaultdict(float))
+    unknown_trip_whiles: int = 0
+
+    def merge_scaled(self, other: "CostReport", scale: float):
+        self.flops += other.flops * scale
+        self.bytes += other.bytes * scale
+        self.collective_bytes += other.collective_bytes * scale
+        self.collective_out_bytes += other.collective_out_bytes * scale
+        for k, v in other.collectives.items():
+            self.collectives[k] += v * scale
+        for k, v in other.collective_counts.items():
+            self.collective_counts[k] += v * scale
+        self.unknown_trip_whiles += other.unknown_trip_whiles
+
+
+def parse_computations(hlo_text: str) -> Tuple[Dict[str, List[Op]], Optional[str]]:
+    comps: Dict[str, List[Op]] = {}
+    entry: Optional[str] = None
+    cur: Optional[str] = None
+    for line in hlo_text.splitlines():
+        if cur is None:
+            m = _COMP_RE.match(line)
+            if m:
+                cur = m.group(1)
+                comps[cur] = []
+                if line.startswith("ENTRY"):
+                    entry = cur
+            continue
+        if line.startswith("}"):
+            cur = None
+            continue
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        name, type_str, opcode, tail = m.groups()
+        # operands: %refs inside the first balanced paren group
+        depth = 1
+        i = 0
+        for i, ch in enumerate(tail):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    break
+        operand_str = tail[:i]
+        rest = tail[i + 1:]
+        operands = _OPERAND_RE.findall(operand_str)
+        pidx = -1
+        if opcode == "parameter":
+            try:
+                pidx = int(operand_str.strip())
+            except ValueError:
+                pidx = -1
+        comps[cur].append(Op(name=name, type_str=type_str, opcode=opcode,
+                             rest=operand_str + "|" + rest, operands=operands,
+                             is_root="ROOT" in line.split("=")[0],
+                             param_index=pidx))
+    return comps, entry
+
+
+def _dot_flops(op: Op, symtab: Dict[str, str]) -> float:
+    out_b, out_n = _shape_bytes_numel(op.type_str)
+    m = _CONTRACT_RE.search(op.rest)
+    contract = 1
+    if m and op.operands:
+        lhs_type = symtab.get(op.operands[0], "")
+        mm = _SHAPE_RE.search(lhs_type)
+        if mm:
+            dims = [int(d) for d in mm.group(2).split(",")] if mm.group(2) else []
+            for ci in (int(c) for c in m.group(1).split(",") if c):
+                if ci < len(dims):
+                    contract *= dims[ci]
+    return 2.0 * out_n * contract
+
+
+def _fusion_flops(comp_name: str, comps, symtabs) -> float:
+    total = 0.0
+    for op in comps.get(comp_name, ()):  # inner dots only; elementwise numel
+        if op.opcode == "dot":
+            total += _dot_flops(op, symtabs[comp_name])
+        elif op.opcode in _ELEMENTWISE_FLOP_OPS or op.opcode == "reduce":
+            _, n = _shape_bytes_numel(op.type_str)
+            total += n
+        elif op.opcode == "fusion":
+            m = _CALLS_RE.search(op.rest)
+            if m:
+                total += _fusion_flops(m.group(1), comps, symtabs)
+    return total
+
+
+_SLICE_LIKE = {"dynamic-slice", "slice"}
+
+
+def _fusion_bytes(op: Op, called: str, symtab, comps, symtabs) -> float:
+    """HBM traffic of a fusion, honouring fused slice/in-place-update ops.
+
+    A fusion operand consumed *only* through (dynamic-)slice ops inside the
+    fused computation is read at slice granularity, not full size (this is
+    how scan slices its stacked xs). A fusion rooted at dynamic-update-slice
+    writes only the update (XLA performs it in place), and the big aliased
+    buffer operand is not re-read.
+    """
+    ops = comps.get(called, ())
+    inner_sym = symtabs.get(called, {})
+    params_by_idx = {o.param_index: o.name for o in ops if o.opcode == "parameter"}
+    consumers: Dict[str, List[Op]] = defaultdict(list)
+    for o in ops:
+        for src in o.operands:
+            consumers[src].append(o)
+    root = next((o for o in ops if o.is_root), None)
+
+    total = 0.0
+    for pos, outer_name in enumerate(op.operands):
+        full_b, _ = _shape_bytes_numel(symtab.get(outer_name, ""))
+        pname = params_by_idx.get(pos)
+        cons = consumers.get(pname, []) if pname else []
+        if cons and all(c.opcode in _SLICE_LIKE or
+                        (c.opcode == "dynamic-update-slice" and c.operands and c.operands[0] == pname)
+                        for c in cons):
+            sliced = 0.0
+            for c in cons:
+                if c.opcode in _SLICE_LIKE:
+                    sliced += _shape_bytes_numel(c.type_str)[0]
+                # DUS buffer operand: in-place, no full read
+            total += min(sliced, full_b)
+        else:
+            total += full_b
+    out_b, _ = _shape_bytes_numel(op.type_str)
+    if root is not None and root.opcode == "dynamic-update-slice" and len(root.operands) >= 2:
+        upd_b, _ = _shape_bytes_numel(inner_sym.get(root.operands[1], ""))
+        out_b = min(out_b, upd_b if upd_b else out_b)
+    return total + out_b
+
+
+def analyze(hlo_text: str) -> CostReport:
+    comps, entry = parse_computations(hlo_text)
+    symtabs = {cn: {op.name: op.type_str for op in ops} for cn, ops in comps.items()}
+
+    def walk(comp_name: str) -> CostReport:
+        rep = CostReport()
+        symtab = symtabs.get(comp_name, {})
+        for op in comps.get(comp_name, ()):
+            out_b, out_n = _shape_bytes_numel(op.type_str)
+            opb = sum(_shape_bytes_numel(symtab.get(o, ""))[0] for o in op.operands)
+            if op.opcode == "while":
+                body = _BODY_RE.search(op.rest)
+                cond = _COND_RE.search(op.rest)
+                trip = _TRIP_RE.search(op.rest)
+                n = int(trip.group(1)) if trip else 1
+                if not trip:
+                    rep.unknown_trip_whiles += 1
+                if body:
+                    rep.merge_scaled(walk(body.group(1)), n)
+                if cond:
+                    rep.merge_scaled(walk(cond.group(1)), n)
+                continue
+            if op.opcode in ("call", "async-start"):
+                m = _CALLS_RE.search(op.rest)
+                if m:
+                    rep.merge_scaled(walk(m.group(1)), 1.0)
+                continue
+            if op.opcode == "conditional":
+                for branch in re.findall(r"branch_computations=\{([^}]*)\}", op.rest):
+                    for b in _OPERAND_RE.findall(branch):
+                        rep.merge_scaled(walk(b), 1.0)
+                continue
+            if op.opcode in COLLECTIVE_OPS:
+                key = op.opcode.replace("-start", "")
+                rep.collectives[key] += opb
+                rep.collective_counts[key] += 1
+                rep.collective_bytes += opb
+                rep.collective_out_bytes += out_b
+                rep.bytes += opb + out_b
+                continue
+            if op.opcode == "dot":
+                rep.flops += _dot_flops(op, symtab)
+                rep.bytes += opb + out_b
+                continue
+            if op.opcode == "fusion":
+                m = _CALLS_RE.search(op.rest)
+                if m:
+                    rep.flops += _fusion_flops(m.group(1), comps, symtabs)
+                    rep.bytes += _fusion_bytes(op, m.group(1), symtab, comps, symtabs)
+                else:
+                    rep.bytes += opb + out_b
+                continue
+            if op.opcode == "dynamic-slice":
+                rep.bytes += 2 * out_b  # read slice + write slice
+                continue
+            if op.opcode == "dynamic-update-slice":
+                upd_b = (_shape_bytes_numel(symtab.get(op.operands[1], ""))[0]
+                         if len(op.operands) >= 2 else out_b)
+                rep.bytes += 2 * upd_b  # in place: read update, write update
+                continue
+            if op.opcode in _SKIP_BYTES_OPS:
+                continue
+            if op.opcode in _ELEMENTWISE_FLOP_OPS or op.opcode == "reduce":
+                rep.flops += out_n
+            elif op.opcode == "sort":
+                rep.flops += out_n * max(math.log2(max(out_n, 2)), 1.0)
+            rep.bytes += opb + out_b
+        return rep
+
+    if entry is None:
+        raise ValueError("no ENTRY computation found in HLO text")
+    return walk(entry)

@@ -1,0 +1,28 @@
+"""Production mesh construction.
+
+A function (not a module-level constant) so importing this module never
+touches jax device state — the dry-run must set XLA_FLAGS before any jax
+initialisation.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16×16 single-pod (256 chips) or 2×16×16 two-pod (512 chips) mesh.
+
+    Axes: ``pod`` — the slow inter-pod (DCI) dimension, carrying only
+    gradient reduction and FSDP gathers; ``data`` — batch/FSDP; ``model`` —
+    tensor/expert parallel.
+    """
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(ndev: int | None = None, name: str = "shard"):
+    """Flat mesh over however many (possibly fake) devices exist — used by
+    the engine (column-sharded index) and CPU tests."""
+    n = ndev or len(jax.devices())
+    return jax.make_mesh((n,), (name,))

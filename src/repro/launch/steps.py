@@ -1,0 +1,166 @@
+"""Lowering/compiling helpers for every cell kind: train / prefill / decode.
+
+These produce the (lowered, compiled) pairs the dry-run and roofline layers
+consume. Sharding for the decode caches is resolved per-leaf from logical
+axes (ring SWA caches shard their sequence dim over whatever mesh axes the
+batch didn't take — see rules.py "cache_seq").
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.configs import shapes as SH
+from repro.models import params as MP
+from repro.models import transformer as T
+from repro.sharding import rules as shr
+
+
+def _ns(mesh, axes, shape):
+    return NamedSharding(mesh, shr.logical_to_pspec(axes, shape, mesh))
+
+
+def _cache_leaf_axes(field: str, ndim: int):
+    table = {
+        "k": ("batch", "cache_seq", "kv_heads", None),
+        "v": ("batch", "cache_seq", "kv_heads", None),
+        "k2": ("batch", "cache_seq", "kv_heads", None),
+        "v2": ("batch", "cache_seq", "kv_heads", None),
+        "kpos": ("cache_seq",),
+        "kpos2": ("cache_seq",),
+        "ssm_h": ("batch", "ssm_inner", None),
+        "ssm_tail": ("batch", None, "ssm_inner"),
+        "rwkv_s": ("batch", "heads", None, None),
+        "rwkv_prev_tm": ("batch", None, None),
+        "rwkv_prev_cm": ("batch", None, None),
+        "xk": ("batch", "cache_seq", "kv_heads", None),
+        "xv": ("batch", "cache_seq", "kv_heads", None),
+        "enc_out": ("batch", None, None),
+        "enc_positions": (None, None),
+        "pos": (),
+    }
+    axes = table.get(field, tuple([None] * ndim))
+    return axes[:ndim] if len(axes) >= ndim else tuple([None] * ndim)
+
+
+def cache_shardings(cache_abs, mesh):
+    """NamedShardings for a DecodeCache pytree, resolved per-leaf by name.
+
+    Stacked (uniform-arch) caches carry a leading layers dim → prepend None.
+    """
+    from repro.models.transformer import LayerCache
+    stacked = isinstance(getattr(cache_abs, "layers", None), LayerCache)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache_abs)
+    out = []
+    for path, leaf in flat:
+        field = None
+        in_layers = False
+        for pp in path:
+            nm = getattr(pp, "name", None)
+            if nm == "layers":
+                in_layers = True
+            if nm is not None:
+                field = nm
+        nd = len(leaf.shape)
+        if stacked and in_layers and field not in ("pos",):
+            axes = (None,) + _cache_leaf_axes(field or "", nd - 1)
+        else:
+            axes = _cache_leaf_axes(field or "", nd)
+        out.append(_ns(mesh, axes, leaf.shape))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def input_shardings(cfg: ModelConfig, mesh, specs: Dict[str, Any]):
+    out = {}
+    for k, v in specs.items():
+        axes = ["batch"] + [None] * (len(v.shape) - 1)
+        out[k] = _ns(mesh, axes, v.shape)
+    return out
+
+
+# ----------------------------------------------------------------------------
+# prefill
+# ----------------------------------------------------------------------------
+
+def compile_prefill(cfg: ModelConfig, mesh: Mesh, shape: SH.ShapeSpec):
+    specs = SH.input_specs(cfg, shape)
+    pdtype = jnp.dtype(cfg.dtype)
+    abs_params = MP.abstract_params(cfg, dtype=pdtype)
+    p_sh = MP.param_shardings(cfg, mesh)
+    in_sh = input_shardings(cfg, mesh, specs)
+
+    def prefill_step(params, batch):
+        return T.prefill(params, cfg, batch["tokens"],
+                         prefix_embeds=batch.get("prefix_embeds"),
+                         frames=batch.get("frames"),
+                         max_new_tokens=128)
+
+    jt = jax.jit(prefill_step, in_shardings=(p_sh, in_sh))
+    shr.set_activation_mesh(mesh)
+    try:
+        with mesh:
+            lowered = jt.lower(abs_params, specs)
+            compiled = lowered.compile()
+    finally:
+        shr.set_activation_mesh(None)
+    return lowered, compiled
+
+
+# ----------------------------------------------------------------------------
+# decode (serve_step)
+# ----------------------------------------------------------------------------
+
+def compile_serve_step(cfg: ModelConfig, mesh: Mesh, shape: SH.ShapeSpec,
+                       donate: bool = True):
+    cache_abs, cfg_d = SH.decode_cache_specs(cfg, shape)
+    pdtype = jnp.dtype(cfg_d.dtype)
+    abs_params = MP.abstract_params(cfg_d, dtype=pdtype)
+    p_sh = MP.param_shardings(cfg_d, mesh)
+    c_sh = cache_shardings(cache_abs, mesh)
+    specs = SH.input_specs(cfg_d, shape)
+    tok_sh = input_shardings(cfg_d, mesh, specs)
+
+    def serve_step(params, cache, tokens):
+        logits, new_cache = T.decode_step(params, cfg_d, cache, tokens)
+        return logits, new_cache
+
+    jt = jax.jit(serve_step,
+                 in_shardings=(p_sh, c_sh, tok_sh["tokens"]),
+                 out_shardings=(None, c_sh),
+                 donate_argnums=(1,) if donate else ())
+    shr.set_activation_mesh(mesh)
+    try:
+        with mesh:
+            lowered = jt.lower(abs_params, cache_abs, specs["tokens"])
+            compiled = lowered.compile()
+    finally:
+        shr.set_activation_mesh(None)
+    return lowered, compiled
+
+
+# ----------------------------------------------------------------------------
+# train (thin wrapper over train_step.compile_train_step with defaults)
+# ----------------------------------------------------------------------------
+
+def default_microbatches(cfg: ModelConfig, mesh: Mesh, global_batch: int) -> int:
+    """Pick n_mb so the per-device microbatch is 1 example (memory floor)."""
+    dp = 1
+    for ax in ("pod", "data"):
+        dp *= mesh.shape.get(ax, 1)
+    per_dev = max(global_batch // dp, 1)
+    return per_dev
+
+
+def compile_train(cfg: ModelConfig, mesh: Mesh, shape: SH.ShapeSpec,
+                  microbatches: int | None = None):
+    from repro.train import train_step as TS
+    specs = SH.input_specs(cfg, shape)
+    n_mb = microbatches or default_microbatches(cfg, mesh, shape.global_batch)
+    tcfg = TS.TrainConfig(microbatches=n_mb)
+    return TS.compile_train_step(cfg, tcfg, mesh, specs)

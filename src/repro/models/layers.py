@@ -1,0 +1,301 @@
+"""Transformer building blocks: norms, RoPE, (GQA/SWA) attention, MLP, MoE.
+
+All functions are purely functional over parameter subtrees produced by
+``repro.models.params``. Training paths take stacked per-layer params via
+``lax.scan``; decode paths receive a single layer slice. Activations carry
+logical shardings via ``repro.sharding.rules.constrain`` when a mesh is
+supplied (no-op otherwise).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.sharding.rules import act_constrain
+
+
+def rms_norm(x, scale, eps=1e-5):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), -1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps)).astype(x.dtype) * scale
+
+
+def rotary(x, positions, theta=10000.0):
+    """Apply RoPE. x: [..., S, H, hd]; positions: [..., S] (absolute)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freq = jnp.exp(-np.log(theta) * jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freq  # [..., S, half]
+    cos = jnp.cos(ang)[..., None, :]  # broadcast over heads
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return out.astype(x.dtype)
+
+
+def _attn_mask(q_pos, k_pos, causal: bool, window):
+    """window may be a static int (0 ⇒ full) or a traced scalar (per-layer
+    windows inside a scan; ≤ 0 ⇒ full attention for that layer)."""
+    qp = q_pos[..., :, None]
+    kp = k_pos[..., None, :]
+    m = kp <= qp if causal else jnp.ones(jnp.broadcast_shapes(qp.shape, kp.shape), bool)
+    if isinstance(window, (int, np.integer)):
+        if window > 0:
+            m = m & (kp > qp - window)
+    else:
+        m = m & ((kp > qp - window) | (window <= 0))
+    return m
+
+
+def attention(x, p, cfg, *, positions, kv=None, kv_positions=None,
+              causal=True, window=0, kv_valid=None):
+    """Multi-head/GQA attention. x: [B, S, d].
+
+    ``kv``: cross-attention source (whisper decoder) — defaults to x.
+    ``window``: traced or static int; 0/negative ⇒ full attention.
+    ``kv_valid``: [B, Sk] bool mask for padded/ring caches.
+    """
+    B, S, d = x.shape
+    H, Hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    src = x if kv is None else kv
+    Sk = src.shape[1]
+    kv_positions = positions if kv_positions is None else kv_positions
+
+    q = jnp.einsum("bsd,dq->bsq", x, p["wq"])
+    k = jnp.einsum("bsd,dq->bsq", src, p["wk"])
+    v = jnp.einsum("bsd,dq->bsq", src, p["wv"])
+    if "bq" in p:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = act_constrain(q.reshape(B, S, H, hd), ("batch", None, "heads", None))
+    k = act_constrain(k.reshape(B, Sk, Hkv, hd), ("batch", None, "heads", None))
+    v = act_constrain(v.reshape(B, Sk, Hkv, hd), ("batch", None, "heads", None))
+    if kv is None:  # self-attention gets RoPE
+        q = rotary(q, positions, cfg.rope_theta)
+        k = rotary(k, kv_positions, cfg.rope_theta)
+
+    out = attend(q, k, v, positions, kv_positions, causal=causal,
+                 window=window, kv_valid=kv_valid,
+                 logits_dtype=jnp.float32 if cfg.attn_f32_logits else x.dtype)
+    return jnp.einsum("bsq,qd->bsd", out.reshape(B, S, H * hd), p["wo"])
+
+
+#: materialise at most this many logits entries per (batch·kv-head·group);
+#: larger S×Sk attention falls back to the query-chunked path.
+_ATTN_CHUNK_THRESHOLD = 32 * 1024 * 1024
+_ATTN_Q_CHUNK = 1024
+
+
+def attend(q, k, v, q_pos, k_pos, *, causal=True, window=0, kv_valid=None,
+           logits_dtype=jnp.float32):
+    """Core masked GQA attention on already-projected heads.
+
+    q: [B, S, H, hd]; k/v: [B, Sk, Hkv, hd] → [B, S, H, hd].
+
+    Long sequences (S·Sk over the threshold) are processed in query chunks
+    under ``lax.scan`` so the logits matrix never materialises in full —
+    the pure-XLA analogue of the Pallas flash kernel (which replaces this
+    on real TPUs).
+    """
+    B, S, H, hd = q.shape
+    Sk = k.shape[1]
+    # local SWA path (§Perf B1): a static window lets each query chunk read
+    # only its (window + chunk)-wide key slice — traffic O(S·w), not O(S²)
+    if (isinstance(window, (int, np.integer)) and window > 0 and causal
+            and kv_valid is None and S == Sk and S > 2 * window
+            and S % _ATTN_Q_CHUNK == 0):
+        return _attend_local(q, k, v, q_pos, k_pos, int(window),
+                             logits_dtype=logits_dtype)
+    if S > 1 and S * Sk > _ATTN_CHUNK_THRESHOLD and S % _ATTN_Q_CHUNK == 0:
+        nq = S // _ATTN_Q_CHUNK
+        qs = q.reshape(B, nq, _ATTN_Q_CHUNK, H, hd).swapaxes(0, 1)
+        qp = jnp.broadcast_to(q_pos, (B, S)).reshape(B, nq, _ATTN_Q_CHUNK).swapaxes(0, 1)
+
+        def step(_, inp):
+            qc, qpc = inp
+            return None, _attend_block(qc, k, v, qpc, k_pos, causal=causal,
+                                       window=window, kv_valid=kv_valid,
+                                       logits_dtype=logits_dtype)
+
+        _, out = jax.lax.scan(step, None, (qs, qp))
+        return out.swapaxes(0, 1).reshape(B, S, H, hd)
+    return _attend_block(q, k, v, q_pos, k_pos, causal=causal, window=window,
+                         kv_valid=kv_valid, logits_dtype=logits_dtype)
+
+
+def _attend_local(q, k, v, q_pos, k_pos, window: int, q_chunk: int = 0,
+                  logits_dtype=jnp.float32):
+    """Sliding-window attention with per-chunk local key slices.
+
+    Keys are left-padded by ``window`` so every chunk slice has the static
+    length (window + chunk); padded slots carry position −1e9 and mask out
+    through the standard positional window mask.
+    """
+    B, S, H, hd = q.shape
+    qc = q_chunk or min(_ATTN_Q_CHUNK, S)
+    span = window + qc
+    kp = jnp.pad(k, ((0, 0), (window, 0), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (window, 0), (0, 0), (0, 0)))
+    kpos = jnp.broadcast_to(k_pos, (k_pos.shape[0] if k_pos.ndim > 1 else 1, S)).astype(jnp.int32)
+    kpos = jnp.pad(kpos, ((0, 0), (window, 0)), constant_values=-(10 ** 9))
+    qpos = jnp.broadcast_to(q_pos, (q_pos.shape[0] if q_pos.ndim > 1 else 1, S))
+    outs = []
+    for i in range(S // qc):
+        sl = slice(i * qc, i * qc + span)
+        o = _attend_block(q[:, i * qc:(i + 1) * qc], kp[:, sl], vp[:, sl],
+                          qpos[:, i * qc:(i + 1) * qc], kpos[:, sl],
+                          causal=True, window=window, logits_dtype=logits_dtype)
+        outs.append(o)
+    return jnp.concatenate(outs, axis=1)
+
+
+def _attend_block(q, k, v, q_pos, k_pos, *, causal=True, window=0, kv_valid=None,
+                  logits_dtype=jnp.float32):
+    B, S, H, hd = q.shape
+    Sk, Hkv = k.shape[1], k.shape[2]
+    group = H // Hkv
+    qg = q.reshape(B, S, Hkv, group, hd)
+    scale = np.asarray(1.0 / np.sqrt(hd), dtype=logits_dtype)
+    logits = jnp.einsum("bskgh,btkh->bkgst", qg, k).astype(logits_dtype) * scale
+    mask = _attn_mask(q_pos, k_pos, causal, window)  # [B?, S, Sk]
+    while mask.ndim < logits.ndim:
+        mask = mask[:, None] if mask.ndim >= 3 else mask[None]
+    if kv_valid is not None:
+        mask = mask & kv_valid[:, None, None, None, :]
+    neg = jnp.asarray(-3e38 if logits.dtype == jnp.bfloat16 else -1e30, logits.dtype)
+    logits = jnp.where(mask, logits, neg)
+    w = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgst,btkh->bskgh", w, v)
+    return out.reshape(B, S, H, hd)
+
+
+def mlp(x, p, act: str = "swiglu"):
+    h = jnp.einsum("bsd,df->bsf", x, p["w_in"])
+    h = act_constrain(h, ("batch", None, "act_mlp"))
+    if act == "swiglu":
+        g = jnp.einsum("bsd,df->bsf", x, p["w_gate"])
+        h = jax.nn.silu(g) * h
+    else:
+        h = jax.nn.gelu(h)
+    return jnp.einsum("bsf,fd->bsd", h, p["w_out"])
+
+
+# ----------------------------------------------------------------------------
+# Mixture of Experts (einsum/capacity dispatch; top-1 and top-2)
+# ----------------------------------------------------------------------------
+
+def moe(x, p, cfg, *, capacity_factor: float = 1.25, dense: bool = False,
+        dispatch: str = "gather"):
+    """Mixture-of-experts FFN.
+
+    Dispatch modes:
+      * ``dispatch="gather"`` (default, §Perf A4) — capacity dispatch via an
+        (E, C) index table + gather/scatter-add; no [T,E,C] tensors.
+      * ``dispatch="einsum"`` — Mesh-TF/Switch one-hot dispatch (reference).
+      * ``dense=True`` — every expert runs on every token, gate-weighted.
+        Exact (no drops) and static-shaped; the standard choice for small
+        decode batches where E× FLOPs beats the dispatch machinery.
+    Over-capacity tokens pass through the residual only (both capacity
+    modes drop identically). A shared expert (llama4) is added densely.
+    """
+    B, S, d = x.shape
+    E, K = cfg.num_experts, cfg.experts_per_token
+    T = B * S
+    xt = x.reshape(T, d)
+    logits = jnp.einsum("td,de->te", xt.astype(jnp.float32), p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, -1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, K)           # [T, K]
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    if dense:
+        gates_full = jnp.einsum("tke,tk->te", jax.nn.one_hot(gate_idx, E, dtype=jnp.float32),
+                                gate_vals).astype(x.dtype)  # [T, E]
+        h = act_constrain(jnp.einsum("td,edf->tef", xt, p["we_in"]),
+                          (None, "expert", "act_mlp"))
+        if "we_gate" in p:
+            g = jnp.einsum("td,edf->tef", xt, p["we_gate"])
+            h = jax.nn.silu(g) * h
+        else:
+            h = jax.nn.gelu(h)
+        yo = jnp.einsum("tef,efd->ted", h, p["we_out"])
+        y = jnp.einsum("te,ted->td", gates_full, yo).reshape(B, S, d)
+        if "shared_w_in" in p:
+            shared = {k[len("shared_"):]: v for k, v in p.items() if k.startswith("shared_")}
+            y = y + mlp(x, shared, cfg.mlp_act)
+        return y
+
+    C = max(int(capacity_factor * K * T / E), 1)
+    # position of each (token, k) within its expert queue
+    onehot = jax.nn.one_hot(gate_idx, E, dtype=jnp.int32)    # [T, K, E]
+    flat = onehot.reshape(T * K, E)
+    pos_in_e = jnp.cumsum(flat, axis=0) * flat - 1           # [T*K, E]
+    pos = pos_in_e.reshape(T, K, E).max(-1)                  # [T, K]
+    keep = (pos < C) & (pos >= 0)
+    # dispatch/combine tensors: [T,K,E]×[T,K,C] one-hots reduced over K —
+    # memory-heavy but correct; the §Perf sort-based dispatch replaces this.
+    if dispatch == "einsum":
+        # Mesh-TF style one-hot dispatch: simple, but materialises [T,E,C]
+        # tensors and O(T·E·C·d) dispatch matmuls. Kept as the reference
+        # (the paper-era formulation); §Perf A4 replaced it by default.
+        pos_oh = jax.nn.one_hot(jnp.where(keep, pos, C), C + 1, dtype=x.dtype)[..., :C]
+        e_oh = jax.nn.one_hot(gate_idx, E, dtype=x.dtype)                    # [T,K,E]
+        disp = jnp.einsum("tke,tkc->tec", e_oh, pos_oh)                       # [T,E,C]
+        comb = jnp.einsum("tke,tkc,tk->tec", e_oh, pos_oh, gate_vals.astype(x.dtype))
+        disp = act_constrain(disp, (None, "expert", "moe_cap"))
+        comb = act_constrain(comb, (None, "expert", "moe_cap"))
+        xin = act_constrain(jnp.einsum("tec,td->ecd", disp, xt), ("expert", "moe_cap", None))
+    else:
+        # Gather dispatch (§Perf A4): build an (E, C) index table t(e,c) by
+        # scatter (slots are unique), then *gather* token rows — the [T,E,C]
+        # one-hot tensors and their matmuls never exist. O(E·C·d) moves.
+        e_flat = gate_idx.reshape(-1)                        # [T*K]
+        c_flat = jnp.where(keep, pos, C).reshape(-1)         # [T*K], C = dropped
+        t_flat = jnp.repeat(jnp.arange(T, dtype=jnp.int32), K)
+        idx = jnp.full((E, C + 1), T, jnp.int32)             # sentinel row T
+        idx = idx.at[e_flat, c_flat].set(t_flat, mode="drop")[:, :C]  # [E, C]
+        xt_pad = jnp.concatenate([xt, jnp.zeros((1, d), xt.dtype)], 0)
+        xin = act_constrain(xt_pad[idx], ("expert", "moe_cap", None))  # [E, C, d]
+
+    h = jnp.einsum("ecd,edf->ecf", xin, p["we_in"])
+    h = act_constrain(h, ("expert", "moe_cap", "act_mlp"))
+    if "we_gate" in p:
+        g = jnp.einsum("ecd,edf->ecf", xin, p["we_gate"])
+        h = jax.nn.silu(g) * h
+    else:
+        h = jax.nn.gelu(h)
+    yout = jnp.einsum("ecf,efd->ecd", h, p["we_out"])        # [E, C, d]
+    yout = act_constrain(yout, ("expert", "moe_cap", None))
+    if dispatch == "einsum":
+        y = jnp.einsum("tec,ecd->td", comb, yout)
+    else:
+        # combine: scatter-add each expert slot's output back to its token
+        contrib = yout.reshape(E * C, d)
+        tgt = idx.reshape(E * C)
+        gathered_gate = jnp.zeros((T + 1,), jnp.float32)
+        # per-slot gate value: match (e, c) back to its (t, k) gate
+        gate_slot = jnp.zeros((E, C + 1), jnp.float32)
+        gate_slot = gate_slot.at[e_flat, c_flat].set(
+            gate_vals.reshape(-1).astype(jnp.float32), mode="drop")[:, :C]
+        contrib = contrib * gate_slot.reshape(E * C, 1).astype(contrib.dtype)
+        y = jnp.zeros((T + 1, d), contrib.dtype).at[tgt].add(contrib, mode="drop")[:T]
+        # combine output back on the token sharding: partial scatter results
+        # reduce-scatter across data shards instead of all-reducing (A5)
+        y = act_constrain(y, ("batch", None))
+    y = y.reshape(B, S, d)
+    if "shared_w_in" in p:
+        shared = {k[len("shared_"):]: v for k, v in p.items() if k.startswith("shared_")}
+        y = y + mlp(x, shared, cfg.mlp_act)
+    return y
+
+
+def moe_aux_loss(x, p, cfg):
+    """Load-balancing auxiliary loss (Switch): E · Σ_e f_e · p_e."""
+    B, S, d = x.shape
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32), p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, -1)
+    top1 = jnp.argmax(probs, -1)
+    f = jnp.mean(jax.nn.one_hot(top1, cfg.num_experts, dtype=jnp.float32), (0, 1))
+    pbar = jnp.mean(probs, (0, 1))
+    return cfg.num_experts * jnp.sum(f * pbar)

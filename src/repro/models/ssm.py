@@ -1,0 +1,222 @@
+"""State-space sequence mixers: Mamba-style selective SSM and RWKV6.
+
+Both are implemented in *chunked* form: an outer ``lax.scan`` over sequence
+chunks carries the recurrent state, and work inside a chunk is parallel
+(associative scan for Mamba, decay-matrix linear attention for RWKV6).
+This keeps training sub-quadratic in sequence length with bounded
+activation memory — the property that makes the ``long_500k`` shapes
+feasible for the SSM/hybrid architectures (DESIGN.md §5).
+
+Single-token ``*_step`` variants serve decode with O(1) state.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.sharding.rules import act_constrain
+
+
+# ----------------------------------------------------------------------------
+# Mamba-style selective SSM
+# ----------------------------------------------------------------------------
+
+def _causal_conv(x, w):
+    """Depthwise causal conv. x: [B, S, di], w: [K, di] (K small, unrolled)."""
+    K = w.shape[0]
+    out = x * w[K - 1]
+    for i in range(1, K):
+        shifted = jnp.pad(x, ((0, 0), (i, 0), (0, 0)))[:, : x.shape[1]]
+        out = out + shifted * w[K - 1 - i]
+    return out
+
+
+def _ssm_inner(xz, p, cfg, h0, conv_tail, chunk: int):
+    """Shared selective-scan core. xz: [B, S, 2*di] (post in_proj).
+
+    Everything sequence-length-proportional — projections, discretisation
+    (the [B, c, di, state] tensors), and the associative scan — happens
+    *inside* the chunk loop, so peak memory is O(B · chunk · di · state)
+    regardless of S (required for the 32k/500k shapes)."""
+    B, S, _ = xz.shape
+    di, st = cfg.ssm_inner, cfg.ssm_state
+    x, z = jnp.split(xz, 2, axis=-1)
+    # causal depthwise conv with carry-in tail from the previous segment
+    K = cfg.ssm_conv
+    xc = jnp.concatenate([conv_tail, x], axis=1)
+    x = _causal_conv(xc, p["conv_w"])[:, K - 1:]
+    new_tail = xc[:, -(K - 1):] if K > 1 else conv_tail
+    x = jax.nn.silu(x)
+    A = -jnp.exp(p["a_log"].astype(jnp.float32))            # [di, st]
+
+    def chunk_step(h, x_c):
+        # x_c: [B, c, di] — project, discretise, scan, all chunk-local
+        proj = jnp.einsum("bsd,dk->bsk", x_c, p["x_proj"])
+        dt, Bc, Cc = jnp.split(proj, [cfg.ssm_dt_rank, cfg.ssm_dt_rank + st], axis=-1)
+        dt = jax.nn.softplus(jnp.einsum("bsr,rd->bsd", dt, p["dt_proj"]) + p["dt_bias"])
+        a_c = jnp.exp(jnp.einsum("bsd,dn->bsdn", dt.astype(jnp.float32), A))
+        b_c = jnp.einsum("bsn,bsd->bsdn", Bc.astype(jnp.float32),
+                         (dt * x_c).astype(jnp.float32))
+
+        def comb(l, r):
+            return (l[0] * r[0], r[0] * l[1] + r[1])
+
+        a_s, b_s = jax.lax.associative_scan(comb, (a_c, b_c), axis=1)
+        h_c = a_s * h[:, None] + b_s                        # [B, c, di, st]
+        y_c = jnp.einsum("bcdn,bcn->bcd", h_c, Cc.astype(jnp.float32))
+        return h_c[:, -1], y_c
+
+    nchunk = S // chunk
+    if nchunk > 1:
+        xs = x.reshape(B, nchunk, chunk, di).swapaxes(0, 1)
+        h_last, y = jax.lax.scan(chunk_step, h0, xs)
+        y = y.swapaxes(0, 1).reshape(B, S, di)
+    else:
+        h_last, y = chunk_step(h0, x)
+    y = (y + x.astype(jnp.float32) * p["d_skip"].astype(jnp.float32)).astype(xz.dtype)
+    y = y * jax.nn.silu(z)
+    return y, h_last, new_tail
+
+
+def mamba(x, p, cfg, *, chunk: int = 256, state=None, conv_tail=None):
+    """Full-sequence selective SSM. x: [B, S, d] → (y, (h, conv_tail))."""
+    B, S, d = x.shape
+    di, st, K = cfg.ssm_inner, cfg.ssm_state, cfg.ssm_conv
+    if state is None:
+        state = jnp.zeros((B, di, st), jnp.float32)
+    if conv_tail is None:
+        conv_tail = jnp.zeros((B, K - 1, di), x.dtype)
+    chunk = min(chunk, S)
+    if S % chunk:
+        chunk = S  # fallback: single chunk for ragged lengths
+    xz = act_constrain(jnp.einsum("bsd,dk->bsk", x, p["in_proj"]),
+                       ("batch", None, "act_mlp"))
+    y, h, tail = _ssm_inner(xz, p, cfg, state, conv_tail, chunk)
+    return jnp.einsum("bsd,dk->bsk", y, p["out_proj"]), (h, tail)
+
+
+def mamba_step(x1, p, cfg, state) -> Tuple[jnp.ndarray, tuple]:
+    """Single-token decode. x1: [B, 1, d]; state = (h [B,di,st], tail [B,K-1,di])."""
+    h, tail = state
+    B = x1.shape[0]
+    di, st, K = cfg.ssm_inner, cfg.ssm_state, cfg.ssm_conv
+    xz = jnp.einsum("bsd,dk->bsk", x1, p["in_proj"])
+    x, z = jnp.split(xz, 2, axis=-1)                        # [B,1,di]
+    window = jnp.concatenate([tail, x], axis=1)             # [B,K,di]
+    xconv = jnp.einsum("bkd,kd->bd", window, p["conv_w"])[:, None]
+    new_tail = window[:, 1:]
+    xa = jax.nn.silu(xconv)
+    proj = jnp.einsum("bsd,dk->bsk", xa, p["x_proj"])
+    dt, Bc, Cc = jnp.split(proj, [cfg.ssm_dt_rank, cfg.ssm_dt_rank + st], axis=-1)
+    dt = jax.nn.softplus(jnp.einsum("bsr,rd->bsd", dt, p["dt_proj"]) + p["dt_bias"])
+    A = -jnp.exp(p["a_log"].astype(jnp.float32))
+    dA = jnp.exp(jnp.einsum("bsd,dn->bsdn", dt.astype(jnp.float32), A))[:, 0]
+    dBx = jnp.einsum("bsn,bsd->bsdn", Bc.astype(jnp.float32), (dt * xa).astype(jnp.float32))[:, 0]
+    h = dA * h + dBx                                        # [B,di,st]
+    y = jnp.einsum("bdn,bn->bd", h, Cc[:, 0].astype(jnp.float32))
+    y = y + xa[:, 0].astype(jnp.float32) * p["d_skip"].astype(jnp.float32)
+    y = (y[:, None]).astype(x1.dtype) * jax.nn.silu(z)
+    return jnp.einsum("bsd,dk->bsk", y, p["out_proj"]), (h, new_tail)
+
+
+# ----------------------------------------------------------------------------
+# RWKV6 ("Finch") time mix + channel mix
+# ----------------------------------------------------------------------------
+
+def _token_shift(x, prev):
+    """x: [B, S, d]; prev: [B, 1, d] (last token of the previous segment)."""
+    return jnp.concatenate([prev, x[:, :-1]], axis=1)
+
+
+def _rwkv_wkv_chunk(r, k, v, logw, u, S0, chunk: int):
+    """Chunked WKV6 linear attention with data-dependent per-channel decay.
+
+    r/k/v: [B, T, H, hd]; logw: [B, T, H, hd] (≤ 0); u: [H, hd];
+    S0: [B, H, hd, hd] carry. Returns y [B, T, H, hd] and final state.
+    """
+    B, T, H, hd = r.shape
+    c = min(chunk, T)
+    if T % c:
+        c = T
+    n = T // c
+    sh = lambda t: t.reshape(B, n, c, H, hd).swapaxes(0, 1)  # [n, B, c, H, hd]
+
+    def step(S, inp):
+        rc, kc, vc, lwc = inp                                # [B, c, H, hd]
+        P = jnp.cumsum(lwc, axis=1) - lwc                    # exclusive prefix Σ_{j<t}
+        Ptot = P[:, -1] + lwc[:, -1]                         # Σ over the chunk
+        # inter-chunk: y_t += (r_t ⊙ e^{P_t}) · S
+        rd = rc * jnp.exp(P)
+        y = jnp.einsum("bthi,bhij->bthj", rd, S)
+        # intra-chunk: pair (t, i<t): decay e^{P_t − P_{i+1}} = e^{P_t − (P_i + w_i)}
+        Q = P[:, :, None] - (P + lwc)[:, None, :]            # [B, t, i, H, hd]
+        mask = (jnp.arange(c)[:, None] > jnp.arange(c)[None, :])[None, :, :, None, None]
+        dec = jnp.exp(jnp.where(mask, Q, -jnp.inf))          # zero where i ≥ t
+        scores = jnp.einsum("bthd,bihd,btihd->btih", rc, kc, dec)
+        y = y + jnp.einsum("btih,bihd->bthd", scores, vc)
+        # bonus diagonal term: (r_t · (u ⊙ k_t)) v_t
+        diag = jnp.einsum("bthd,hd,bthd->bth", rc, u, kc)
+        y = y + diag[..., None] * vc
+        # state update: S' = e^{Ptot} ⊙ S + Σ_i e^{Ptot − P_{i+1}} k_i v_iᵀ
+        decs = jnp.exp(Ptot[:, None] - (P + lwc))            # [B, c, H, hd]
+        Snew = jnp.exp(Ptot)[..., None] * S + jnp.einsum("bihd,bihe->bhde", kc * decs, vc)
+        return Snew, y
+
+    if n > 1:
+        S_fin, ys = jax.lax.scan(step, S0, (sh(r), sh(k), sh(v), sh(logw)))
+        y = ys.swapaxes(0, 1).reshape(B, T, H, hd)
+    else:
+        S_fin, y = step(S0, (r, k, v, logw))
+    return y, S_fin
+
+
+def rwkv_time_mix(x, p, cfg, *, prev_x=None, state=None, chunk: int = 64):
+    """RWKV6 time mix over a full sequence. x: [B, S, d]."""
+    B, S, d = x.shape
+    H, hd = d // cfg.rwkv_head_dim, cfg.rwkv_head_dim
+    if prev_x is None:
+        prev_x = jnp.zeros((B, 1, d), x.dtype)
+    if state is None:
+        state = jnp.zeros((B, H, hd, hd), jnp.float32)
+    xx = _token_shift(x, prev_x)
+
+    def mix(mu):
+        return x + (xx - x) * mu
+
+    r = jnp.einsum("bsd,de->bse", mix(p["mu_r"]), p["wr"]).reshape(B, S, H, hd)
+    k = jnp.einsum("bsd,de->bse", mix(p["mu_k"]), p["wk_"]).reshape(B, S, H, hd)
+    v = jnp.einsum("bsd,de->bse", mix(p["mu_v"]), p["wv_"]).reshape(B, S, H, hd)
+    g = jax.nn.silu(jnp.einsum("bsd,de->bse", mix(p["mu_g"]), p["wg"]))
+    lw = p["decay_w0"] + jnp.einsum(
+        "bsd,dl,le->bse", jnp.tanh(mix(p["mu_w"]).astype(jnp.float32)),
+        p["decay_w1"].astype(jnp.float32), p["decay_w2"].astype(jnp.float32))
+    logw = -jnp.exp(lw.astype(jnp.float32)).reshape(B, S, H, hd)  # log decay ≤ 0
+
+    y, S_fin = _rwkv_wkv_chunk(r.astype(jnp.float32), k.astype(jnp.float32),
+                               v.astype(jnp.float32), logw,
+                               p["bonus_u"].astype(jnp.float32), state, chunk)
+    y = y.reshape(B, S, d)
+    # per-head group norm (ln_x) + output gating
+    y = y.reshape(B, S, H, hd)
+    mu = jnp.mean(y, -1, keepdims=True)
+    var = jnp.var(y, -1, keepdims=True)
+    y = ((y - mu) * jax.lax.rsqrt(var + 64e-5)).reshape(B, S, d) * p["ln_x"]
+    y = y.astype(x.dtype) * g
+    out = jnp.einsum("bsd,de->bse", y, p["w_out"])
+    return out, (x[:, -1:], S_fin)
+
+
+def rwkv_channel_mix(x, p, *, prev_x=None):
+    B, S, d = x.shape
+    if prev_x is None:
+        prev_x = jnp.zeros((B, 1, d), x.dtype)
+    xx = _token_shift(x, prev_x)
+    k = jnp.einsum("bsd,df->bsf", x + (xx - x) * p["cm_mu_k"], p["cm_wk"])
+    k = jnp.square(jax.nn.relu(k))
+    kv = jnp.einsum("bsf,fd->bsd", k, p["cm_wv"])
+    r = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", x + (xx - x) * p["cm_mu_r"], p["cm_wr"]))
+    return r * kv, x[:, -1:]

@@ -1,0 +1,619 @@
+"""Model assembly: training forward (scan-over-layers), prefill, and decode.
+
+One composable implementation covers the whole assigned pool:
+  dense / GQA / SWA+global (hymba windows), MoE (uniform or interleaved),
+  Mamba-SSM, hybrid attn∥SSM (hymba), RWKV6, encoder-decoder (whisper),
+  and stub modality frontends (llava patches, whisper frames).
+
+Paths:
+  * ``forward_train``  — scan over stacked layer params + remat; returns loss.
+  * ``prefill``        — like train but emits full-length KV caches.
+  * ``decode_step``    — single token, unrolled per layer (heterogeneous
+    caches: ring buffers for SWA layers, full caches for global layers,
+    O(1) state for SSM/RWKV).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as LY
+from repro.models import ssm as SM
+from repro.sharding.rules import act_constrain
+
+
+# ----------------------------------------------------------------------------
+# per-layer metadata (per-layer window values for SWA archs)
+# ----------------------------------------------------------------------------
+
+def layer_windows(cfg: ModelConfig) -> np.ndarray:
+    """window per layer: 0 ⇒ full attention; >0 ⇒ SWA width."""
+    L = cfg.num_layers if cfg.encoder_layers == 0 else cfg.decoder_layers
+    if cfg.num_experts > 0 and cfg.moe_every == 2:
+        L = cfg.num_layers // 2
+    w = np.full((L,), cfg.window, np.int32)
+    for g in cfg.global_layers:
+        if g < L:
+            w[g] = 0
+    return w
+
+
+# ----------------------------------------------------------------------------
+# embedding / head
+# ----------------------------------------------------------------------------
+
+def embed_tokens(params, cfg: ModelConfig, tokens, prefix_embeds=None):
+    x = jnp.take(params["embed"], tokens, axis=0).astype(jnp.dtype(cfg.dtype))
+    if prefix_embeds is not None and cfg.num_prefix_embeds > 0:
+        pe = jnp.einsum("bpd,dq->bpq", prefix_embeds.astype(x.dtype),
+                        params["frontend_proj"].astype(x.dtype))
+        P = pe.shape[1]
+        x = jnp.concatenate([pe, x[:, P:]], axis=1)
+    return act_constrain(x, ("batch", None, None))
+
+
+def lm_head(params, cfg: ModelConfig, x):
+    x = LY.rms_norm(x, params["ln_f"], cfg.norm_eps)
+    w = params["embed"].T if cfg.tie_embeddings else params["head"]
+    return jnp.einsum("bsd,dv->bsv", x.astype(jnp.float32), w.astype(jnp.float32))
+
+
+def cross_entropy(logits, labels):
+    """Masked token-mean CE; labels < 0 are ignored."""
+    mask = (labels >= 0).astype(jnp.float32)
+    safe = jnp.maximum(labels, 0)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
+    nll = (logz - gold) * mask
+    return jnp.sum(nll) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+#: sequence-chunk size for the fused head+CE loss; keeps the [tokens, V]
+#: logits buffer bounded (llama4's V=202048 would otherwise cost ~3 GB/device
+#: per microbatch at 4k context).
+_CE_CHUNK = 512
+
+
+def head_loss_chunked(params, cfg: ModelConfig, x, labels):
+    """Fused final-norm → head-matmul → CE, scanned over sequence chunks so
+    full [B, S, V] logits never materialise. Returns (nll_sum, count)."""
+    B, S, d = x.shape
+    x = LY.rms_norm(x, params["ln_f"], cfg.norm_eps)
+    w = params["embed"].T if cfg.tie_embeddings else params["head"]
+    chunk = _CE_CHUNK if (S % _CE_CHUNK == 0 and S > _CE_CHUNK) else S
+    n = S // chunk
+
+    def step(carry, inp):
+        xc, lc = inp  # [B, chunk, d], [B, chunk]
+        logits = jnp.einsum("bsd,dv->bsv", xc.astype(jnp.float32), w.astype(jnp.float32))
+        logits = act_constrain(logits, ("batch", None, "vocab"))
+        mask = (lc >= 0).astype(jnp.float32)
+        safe = jnp.maximum(lc, 0)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
+        nll, cnt = carry
+        return (nll + jnp.sum((logz - gold) * mask), cnt + jnp.sum(mask)), None
+
+    if n > 1:
+        xs = x.reshape(B, n, chunk, d).swapaxes(0, 1)
+        ls = labels.reshape(B, n, chunk).swapaxes(0, 1)
+        (nll, cnt), _ = jax.lax.scan(step, (0.0, 0.0), (xs, ls))
+    else:
+        (nll, cnt), _ = step((0.0, 0.0), (x, labels))
+    return nll, cnt
+
+
+# ----------------------------------------------------------------------------
+# block bodies
+# ----------------------------------------------------------------------------
+
+def _mixer(x, p, cfg: ModelConfig, positions, window, kv=None, kv_positions=None,
+           causal=True, ssm_state=None, kv_valid=None):
+    """Sequence mixer for one layer: attention, SSM, or both in parallel.
+
+    Returns (out, new_ssm_state)."""
+    new_state = None
+    if cfg.rwkv:
+        out, new_state = SM.rwkv_time_mix(
+            x, p, cfg,
+            prev_x=None if ssm_state is None else ssm_state[0],
+            state=None if ssm_state is None else ssm_state[1])
+        return out, new_state
+    att = None
+    if not cfg.attention_free:
+        att = LY.attention(x, p["attn"], cfg, positions=positions, kv=kv,
+                           kv_positions=kv_positions, causal=causal,
+                           window=window, kv_valid=kv_valid)
+    if cfg.hybrid_ssm or cfg.family == "ssm":
+        sout, new_state = SM.mamba(
+            x, p["ssm"], cfg,
+            state=None if ssm_state is None else ssm_state[0],
+            conv_tail=None if ssm_state is None else ssm_state[1])
+        if att is None:
+            return sout, new_state
+        # hymba: parallel heads fused with learned per-channel scales
+        return att * p["mix_attn"] + sout * p["mix_ssm"], new_state
+    return att, new_state
+
+
+def _ffn(x, p, cfg: ModelConfig, moe_dense: bool = False):
+    if cfg.rwkv:
+        out, _ = SM.rwkv_channel_mix(x, p)
+        return out
+    if "moe" in p and "mlp" not in p:
+        return LY.moe(x, p["moe"], cfg, dense=moe_dense)
+    return LY.mlp(x, p["mlp"], cfg.mlp_act)
+
+
+def block(x, p, cfg: ModelConfig, *, positions, window, causal=True,
+          enc_out=None, enc_positions=None, ssm_state=None, kv_valid=None,
+          moe_dense: bool = False):
+    """One (or one pair of) transformer layer(s). Returns (x, new_ssm_state)."""
+    h = LY.rms_norm(x, p["ln1"], cfg.norm_eps)
+    mix, new_state = _mixer(h, p, cfg, positions, window, causal=causal,
+                            ssm_state=ssm_state, kv_valid=kv_valid)
+    x = x + mix
+    if cfg.rwkv:
+        h = LY.rms_norm(x, p["ln2"], cfg.norm_eps)
+        out, _ = SM.rwkv_channel_mix(h, p)
+        return x + out, new_state
+    if enc_out is not None and "xattn" in p:
+        h = LY.rms_norm(x, p["ln_x"], cfg.norm_eps)
+        x = x + LY.attention(h, p["xattn"], cfg, positions=positions,
+                             kv=enc_out, kv_positions=enc_positions, causal=False)
+    if "ln3" in p:  # interleaved dense+MoE pair (llama4)
+        h = LY.rms_norm(x, p["ln2"], cfg.norm_eps)
+        x = x + LY.mlp(h, p["mlp"], cfg.mlp_act)
+        h = LY.rms_norm(x, p["ln3"], cfg.norm_eps)
+        x = x + LY.attention(h, p["attn2"], cfg, positions=positions,
+                             causal=causal, window=window)
+        h = LY.rms_norm(x, p["ln4"], cfg.norm_eps)
+        x = x + LY.moe(h, p["moe"], cfg, dense=moe_dense)
+    else:
+        h = LY.rms_norm(x, p["ln2"], cfg.norm_eps)
+        x = x + _ffn(h, p, cfg, moe_dense)
+    return x, new_state
+
+
+# ----------------------------------------------------------------------------
+# training forward
+# ----------------------------------------------------------------------------
+
+_REMAT_POLICIES = {
+    "nothing": jax.checkpoint_policies.nothing_saveable,
+    "dots": jax.checkpoint_policies.dots_saveable,
+}
+
+
+def _scan_blocks(x, blocks, cfg: ModelConfig, positions, *, causal=True,
+                 enc_out=None, enc_positions=None, remat=True,
+                 moe_dense: bool = False, remat_policy: str = "nothing"):
+    """Run the layer stack.
+
+    Uniform-window archs scan with a *static* window (enables the local
+    SWA attention path); heterogeneous archs (hymba: 3 global layers among
+    SWA) unroll so every layer keeps a static window value.
+    """
+    windows = (layer_windows(cfg) if causal
+               else np.zeros((cfg.encoder_layers,), np.int32))
+    policy = _REMAT_POLICIES[remat_policy]
+
+    if len(set(windows.tolist())) == 1:
+        w0 = int(windows[0])
+
+        def body(carry, lp):
+            carry = act_constrain(carry, ("batch", None, None))
+            out, _ = block(carry, lp, cfg, positions=positions, window=w0,
+                           causal=causal, enc_out=enc_out,
+                           enc_positions=enc_positions, moe_dense=moe_dense)
+            return out, None
+
+        fn = jax.checkpoint(body, policy=policy) if remat else body
+        x, _ = jax.lax.scan(fn, x, blocks)
+        return x
+
+    # heterogeneous windows: unrolled, per-layer remat, static windows
+    def one(carry, lp, w):
+        carry = act_constrain(carry, ("batch", None, None))
+        out, _ = block(carry, lp, cfg, positions=positions, window=w,
+                       causal=causal, enc_out=enc_out,
+                       enc_positions=enc_positions, moe_dense=moe_dense)
+        return out
+
+    for li in range(windows.shape[0]):
+        lp = jax.tree.map(lambda a: a[li], blocks)
+        f = (jax.checkpoint(functools.partial(one, w=int(windows[li])), policy=policy)
+             if remat else functools.partial(one, w=int(windows[li])))
+        x = f(x, lp)
+    return x
+
+
+def forward_logits(params, cfg: ModelConfig, batch, moe_dense: bool = False) -> jnp.ndarray:
+    """Full-sequence logits (validation + serving prefill comparisons)."""
+    if cfg.encoder_layers > 0:
+        frames = batch["frames"]
+        B, S_src, _ = frames.shape
+        x = frames.astype(jnp.dtype(cfg.dtype)) + params["enc_pos"][:S_src].astype(jnp.dtype(cfg.dtype))
+        enc_positions = jnp.arange(S_src, dtype=jnp.int32)[None, :]
+        x = _scan_blocks(x, params["enc_blocks"], cfg, enc_positions, causal=False, remat=False)
+        enc_out = LY.rms_norm(x, params["ln_enc"], cfg.norm_eps)
+        tgt = batch["target_tokens"]
+        y = embed_tokens(params, cfg, tgt)
+        positions = jnp.arange(tgt.shape[1], dtype=jnp.int32)[None, :]
+        y = _scan_blocks(y, params["dec_blocks"], cfg, positions, causal=True,
+                         enc_out=enc_out, enc_positions=enc_positions, remat=False)
+        return lm_head(params, cfg, y)
+    tokens = batch["tokens"]
+    x = embed_tokens(params, cfg, tokens, batch.get("prefix_embeds"))
+    positions = jnp.arange(tokens.shape[1], dtype=jnp.int32)[None, :]
+    x = _scan_blocks(x, params["blocks"], cfg, positions, remat=False,
+                     moe_dense=moe_dense)
+    return lm_head(params, cfg, x)
+
+
+def forward_train(params, cfg: ModelConfig, batch,
+                  remat_policy: str = "nothing") -> jnp.ndarray:
+    """batch: dict(tokens [B,S], labels [B,S], prefix_embeds?, frames?,
+    target_tokens?/target_labels? for enc-dec). Returns scalar loss."""
+    if cfg.encoder_layers > 0:
+        return _forward_encdec(params, cfg, batch)
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x = embed_tokens(params, cfg, tokens, batch.get("prefix_embeds"))
+    positions = jnp.arange(S, dtype=jnp.int32)[None, :]
+    x = _scan_blocks(x, params["blocks"], cfg, positions, remat_policy=remat_policy)
+    nll, cnt = head_loss_chunked(params, cfg, x, batch["labels"])
+    return nll / jnp.maximum(cnt, 1.0)
+
+
+def _forward_encdec(params, cfg: ModelConfig, batch):
+    frames = batch["frames"]                       # [B, S_src, d] stub embeds
+    B, S_src, _ = frames.shape
+    x = frames.astype(jnp.dtype(cfg.dtype)) + params["enc_pos"][:S_src].astype(jnp.dtype(cfg.dtype))
+    enc_positions = jnp.arange(S_src, dtype=jnp.int32)[None, :]
+    x = _scan_blocks(x, params["enc_blocks"], cfg, enc_positions, causal=False)
+    enc_out = LY.rms_norm(x, params["ln_enc"], cfg.norm_eps)
+
+    tgt = batch["target_tokens"]                   # [B, S_tgt]
+    S_tgt = tgt.shape[1]
+    y = embed_tokens(params, cfg, tgt)
+    positions = jnp.arange(S_tgt, dtype=jnp.int32)[None, :]
+    y = _scan_blocks(y, params["dec_blocks"], cfg, positions, causal=True,
+                     enc_out=enc_out, enc_positions=enc_positions)
+    logits = lm_head(params, cfg, y)
+    return cross_entropy(logits, batch["target_labels"])
+
+
+# ----------------------------------------------------------------------------
+# decode (single token, unrolled layers, heterogeneous caches)
+# ----------------------------------------------------------------------------
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class LayerCache:
+    """Cache for one layer. Exactly one group of fields is populated."""
+    k: Optional[jnp.ndarray] = None          # [B, W, Hkv, hd] (ring or full)
+    v: Optional[jnp.ndarray] = None
+    kpos: Optional[jnp.ndarray] = None       # [W] absolute positions (-1 empty)
+    k2: Optional[jnp.ndarray] = None         # second attention of a pair layer
+    v2: Optional[jnp.ndarray] = None
+    kpos2: Optional[jnp.ndarray] = None
+    ssm_h: Optional[jnp.ndarray] = None      # [B, di, st] f32
+    ssm_tail: Optional[jnp.ndarray] = None   # [B, K-1, di]
+    rwkv_s: Optional[jnp.ndarray] = None     # [B, H, hd, hd] f32
+    rwkv_prev_tm: Optional[jnp.ndarray] = None  # [B, 1, d]
+    rwkv_prev_cm: Optional[jnp.ndarray] = None  # [B, 1, d]
+    xk: Optional[jnp.ndarray] = None         # cross-attn K [B, S_src, Hkv, hd]
+    xv: Optional[jnp.ndarray] = None
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class DecodeCache:
+    layers: Tuple[Any, ...]
+    pos: jnp.ndarray                          # int32 scalar: next position
+    enc_out: Optional[jnp.ndarray] = None     # whisper encoder states
+    enc_positions: Optional[jnp.ndarray] = None
+
+
+def _cache_len(cfg: ModelConfig, li: int, max_len: int) -> int:
+    w = layer_windows(cfg)[li]
+    return int(w) if w > 0 else max_len
+
+
+def make_decode_cache(cfg: ModelConfig, batch: int, max_len: int,
+                      dtype=None, stacked: bool | None = None) -> DecodeCache:
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    B, hd, Hkv = batch, cfg.head_dim, cfg.num_kv_heads
+    L = cfg.num_layers if cfg.encoder_layers == 0 else cfg.decoder_layers
+    if cfg.num_experts > 0 and cfg.moe_every == 2:
+        L = cfg.num_layers // 2
+    layers = []
+    for li in range(L):
+        c = LayerCache()
+        if cfg.rwkv:
+            H = cfg.d_model // cfg.rwkv_head_dim
+            c = LayerCache(
+                rwkv_s=jnp.zeros((B, H, cfg.rwkv_head_dim, cfg.rwkv_head_dim), jnp.float32),
+                rwkv_prev_tm=jnp.zeros((B, 1, cfg.d_model), dtype),
+                rwkv_prev_cm=jnp.zeros((B, 1, cfg.d_model), dtype))
+        else:
+            if not cfg.attention_free:
+                W = _cache_len(cfg, li, max_len)
+                c = dataclasses.replace(
+                    c,
+                    k=jnp.zeros((B, W, Hkv, hd), dtype),
+                    v=jnp.zeros((B, W, Hkv, hd), dtype),
+                    kpos=jnp.full((W,), -1, jnp.int32))
+                if cfg.num_experts > 0 and cfg.moe_every == 2:
+                    c = dataclasses.replace(
+                        c,
+                        k2=jnp.zeros((B, W, Hkv, hd), dtype),
+                        v2=jnp.zeros((B, W, Hkv, hd), dtype),
+                        kpos2=jnp.full((W,), -1, jnp.int32))
+            if cfg.hybrid_ssm or cfg.family == "ssm":
+                c = dataclasses.replace(
+                    c,
+                    ssm_h=jnp.zeros((B, cfg.ssm_inner, cfg.ssm_state), jnp.float32),
+                    ssm_tail=jnp.zeros((B, cfg.ssm_conv - 1, cfg.ssm_inner), dtype))
+            if cfg.cross_attention:
+                c = dataclasses.replace(
+                    c,
+                    xk=jnp.zeros((B, cfg.max_source_len, Hkv, hd), dtype),
+                    xv=jnp.zeros((B, cfg.max_source_len, Hkv, hd), dtype))
+        layers.append(c)
+    enc_out = None
+    enc_positions = None
+    if cfg.encoder_layers > 0:
+        enc_out = jnp.zeros((B, cfg.max_source_len, cfg.d_model), dtype)
+        enc_positions = jnp.arange(cfg.max_source_len, dtype=jnp.int32)[None, :]
+    if stacked is None:
+        stacked = cache_is_uniform(cfg)
+    if stacked:
+        st = jax.tree.map(lambda *xs: jnp.stack(xs), *layers)
+        return DecodeCache(layers=st, pos=jnp.zeros((), jnp.int32),
+                           enc_out=enc_out, enc_positions=enc_positions)
+    return DecodeCache(layers=tuple(layers), pos=jnp.zeros((), jnp.int32),
+                       enc_out=enc_out, enc_positions=enc_positions)
+
+
+def _layer_params(stacked, li: int):
+    return jax.tree.map(lambda a: a[li], stacked)
+
+
+def _decode_attention(x, p, cfg, kc, vc, kposc, pos):
+    """One-token attention against a (ring or full) cache.
+
+    Ring semantics make window filtering implicit: a ring of size W only
+    ever holds the last W positions; global layers use full-length caches.
+    Returns (out, new_k, new_v, new_kpos)."""
+    B = x.shape[0]
+    H, Hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    W = kc.shape[1]
+    q = jnp.einsum("bsd,dq->bsq", x, p["wq"])
+    k = jnp.einsum("bsd,dq->bsq", x, p["wk"])
+    v = jnp.einsum("bsd,dq->bsq", x, p["wv"])
+    if "bq" in p:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = LY.rotary(q.reshape(B, 1, H, hd), pos[None, None], cfg.rope_theta)
+    k = LY.rotary(k.reshape(B, 1, Hkv, hd), pos[None, None], cfg.rope_theta)
+    v = v.reshape(B, 1, Hkv, hd)
+    slot = jnp.mod(pos, W)
+    newk = jax.lax.dynamic_update_slice(kc, k.astype(kc.dtype), (0, slot, 0, 0))
+    newv = jax.lax.dynamic_update_slice(vc, v.astype(vc.dtype), (0, slot, 0, 0))
+    newpos = jax.lax.dynamic_update_slice(kposc, pos[None], (slot,))
+    valid = newpos >= 0
+    out = LY.attend(q, newk, newv,
+                    q_pos=pos[None, None], k_pos=newpos[None, :],
+                    causal=True, window=0, kv_valid=valid[None, :].repeat(B, 0))
+    out = jnp.einsum("bsq,qd->bsd", out.reshape(B, 1, H * hd), p["wo"])
+    return out, newk, newv, newpos
+
+
+def _decode_layer(x, p, c: LayerCache, cfg: ModelConfig, pos, enc_out, enc_positions):
+    """One layer of single-token decode; returns (x, new LayerCache)."""
+    B = x.shape[0]
+    h = LY.rms_norm(x, p["ln1"], cfg.norm_eps)
+    if cfg.rwkv:
+        mix, (prev_tm, s_new) = SM.rwkv_time_mix(
+            h, p, cfg, prev_x=c.rwkv_prev_tm, state=c.rwkv_s)
+        x = x + mix
+        h2 = LY.rms_norm(x, p["ln2"], cfg.norm_eps)
+        out, prev_cm = SM.rwkv_channel_mix(h2, p, prev_x=c.rwkv_prev_cm)
+        x = x + out
+        return x, dataclasses.replace(
+            c, rwkv_s=s_new, rwkv_prev_tm=prev_tm, rwkv_prev_cm=prev_cm)
+    att = None
+    newc = c
+    if not cfg.attention_free:
+        att, nk, nv, np_ = _decode_attention(h, p["attn"], cfg, c.k, c.v, c.kpos, pos)
+        newc = dataclasses.replace(newc, k=nk, v=nv, kpos=np_)
+    if cfg.hybrid_ssm or cfg.family == "ssm":
+        sout, (h_new, tail_new) = SM.mamba(
+            h, p["ssm"], cfg, state=c.ssm_h, conv_tail=c.ssm_tail)
+        newc = dataclasses.replace(newc, ssm_h=h_new, ssm_tail=tail_new)
+        att = sout if att is None else att * p["mix_attn"] + sout * p["mix_ssm"]
+    x = x + att
+    if cfg.cross_attention and enc_out is not None:
+        hx = LY.rms_norm(x, p["ln_x"], cfg.norm_eps)
+        qx = jnp.einsum("bsd,dq->bsq", hx, p["xattn"]["wq"]).reshape(B, 1, cfg.num_heads, cfg.head_dim)
+        xo = LY.attend(qx, newc.xk, newc.xv,
+                       q_pos=pos[None, None], k_pos=enc_positions[0][None, :],
+                       causal=False)
+        x = x + jnp.einsum("bsq,qd->bsd", xo.reshape(B, 1, cfg.q_dim), p["xattn"]["wo"])
+    if "ln3" in p:  # llama4 interleaved pair: second attention + MoE
+        h = LY.rms_norm(x, p["ln2"], cfg.norm_eps)
+        x = x + LY.mlp(h, p["mlp"], cfg.mlp_act)
+        h = LY.rms_norm(x, p["ln3"], cfg.norm_eps)
+        att2, nk2, nv2, np2 = _decode_attention(h, p["attn2"], cfg,
+                                                newc.k2, newc.v2, newc.kpos2, pos)
+        newc = dataclasses.replace(newc, k2=nk2, v2=nv2, kpos2=np2)
+        x = x + att2
+        h = LY.rms_norm(x, p["ln4"], cfg.norm_eps)
+        x = x + LY.moe(h, p["moe"], cfg, dense=True)
+    else:
+        h = LY.rms_norm(x, p["ln2"], cfg.norm_eps)
+        x = x + _ffn(h, p, cfg, moe_dense=True)
+    return x, newc
+
+
+def cache_is_uniform(cfg: ModelConfig) -> bool:
+    """True when every layer's cache has identical shapes (⇒ scan-able).
+
+    Only per-layer window heterogeneity (hymba's 3 global-attention layers
+    among SWA layers) breaks uniformity."""
+    w = layer_windows(cfg)
+    return bool((w == w[0]).all())
+
+
+def decode_step(params, cfg: ModelConfig, cache: DecodeCache, tokens):
+    """tokens: [B, 1] → (logits [B, 1, V], new cache).
+
+    Uniform-cache architectures decode under ``lax.scan`` over stacked layer
+    params + caches — this keeps each layer's FSDP weight gather live only
+    inside the loop body (an unrolled graph lets the scheduler hoist *all*
+    gathers, ballooning peak memory). Heterogeneous archs (hymba) unroll.
+    """
+    B = tokens.shape[0]
+    pos = cache.pos
+    x = embed_tokens(params, cfg, tokens)
+    x = act_constrain(x, ("batch", None, None))
+    stacked = params["dec_blocks"] if cfg.encoder_layers > 0 else params["blocks"]
+
+    if isinstance(cache.layers, LayerCache):  # stacked caches → scan
+        def body(xc, inp):
+            lp, lc = inp
+            xc = act_constrain(xc, ("batch", None, None))
+            xc, newc = _decode_layer(xc, lp, lc, cfg, pos, cache.enc_out,
+                                     cache.enc_positions)
+            return xc, newc
+        x, new_layers = jax.lax.scan(body, x, (stacked, cache.layers))
+        logits = lm_head(params, cfg, x)
+        return logits, dataclasses.replace(cache, layers=new_layers, pos=pos + 1)
+
+    new_layers = []
+    for li in range(len(cache.layers)):
+        p = _layer_params(stacked, li)
+        x, newc = _decode_layer(x, p, cache.layers[li], cfg, pos,
+                                cache.enc_out, cache.enc_positions)
+        new_layers.append(newc)
+    logits = lm_head(params, cfg, x)
+    return logits, dataclasses.replace(cache, layers=tuple(new_layers), pos=pos + 1)
+
+
+# ----------------------------------------------------------------------------
+# prefill: process a full prompt, emit decode caches
+# ----------------------------------------------------------------------------
+
+def prefill(params, cfg: ModelConfig, tokens, prefix_embeds=None, frames=None,
+            max_new_tokens: int = 64, moe_dense: bool = False):
+    """Process a prompt and return (last-token logits, DecodeCache).
+
+    Uses the unrolled per-layer path so heterogeneous caches (ring SWA vs
+    full global) are assembled directly. Full-attention caches are sized
+    ``S + max_new_tokens`` so decode has headroom before the ring wraps.
+    """
+    B, S = tokens.shape
+    positions = jnp.arange(S, dtype=jnp.int32)[None, :]
+    enc_out = enc_positions = None
+    if cfg.encoder_layers > 0:
+        assert frames is not None
+        S_src = frames.shape[1]
+        xe = frames.astype(jnp.dtype(cfg.dtype)) + params["enc_pos"][:S_src].astype(jnp.dtype(cfg.dtype))
+        enc_positions = jnp.arange(S_src, dtype=jnp.int32)[None, :]
+        xe = _scan_blocks(xe, params["enc_blocks"], cfg, enc_positions, causal=False, remat=False)
+        enc_out = LY.rms_norm(xe, params["ln_enc"], cfg.norm_eps)
+    x = embed_tokens(params, cfg, tokens, prefix_embeds)
+    stacked = params["dec_blocks"] if cfg.encoder_layers > 0 else params["blocks"]
+    windows = layer_windows(cfg)
+    cache = make_decode_cache(cfg, B, max_len=S + max_new_tokens,
+                              dtype=jnp.dtype(cfg.dtype), stacked=False)
+    new_layers = []
+    for li in range(len(cache.layers)):
+        p = _layer_params(stacked, li)
+        c = cache.layers[li]
+        h = LY.rms_norm(x, p["ln1"], cfg.norm_eps)
+        if cfg.rwkv:
+            mix, (prev_tm, s_new) = SM.rwkv_time_mix(h, p, cfg)
+            x = x + mix
+            h2 = LY.rms_norm(x, p["ln2"], cfg.norm_eps)
+            out, prev_cm = SM.rwkv_channel_mix(h2, p)
+            x = x + out
+            new_layers.append(dataclasses.replace(
+                c, rwkv_s=s_new, rwkv_prev_tm=prev_tm, rwkv_prev_cm=prev_cm))
+            continue
+        att = None
+        newc = c
+        if not cfg.attention_free:
+            Hkv, hd = cfg.num_kv_heads, cfg.head_dim
+            k = jnp.einsum("bsd,dq->bsq", h, p["attn"]["wk"])
+            v = jnp.einsum("bsd,dq->bsq", h, p["attn"]["wv"])
+            if "bk" in p["attn"]:
+                k, v = k + p["attn"]["bk"], v + p["attn"]["bv"]
+            k = LY.rotary(k.reshape(B, S, Hkv, hd), positions, cfg.rope_theta)
+            v = v.reshape(B, S, Hkv, hd)
+            att = LY.attention(h, p["attn"], cfg, positions=positions,
+                               causal=True, window=int(windows[li]))
+            # write the cache (ring layout: last W positions, slot = pos % W)
+            W = c.k.shape[1]
+            take = min(W, S)
+            ks, vs = k[:, -take:], v[:, -take:]
+            ppos = positions[0, -take:]
+            slots = jnp.mod(ppos, W)
+            newk = c.k.at[:, slots].set(ks.astype(c.k.dtype))
+            newv = c.v.at[:, slots].set(vs.astype(c.v.dtype))
+            newpos = c.kpos.at[slots].set(ppos)
+            newc = dataclasses.replace(newc, k=newk, v=newv, kpos=newpos)
+        if cfg.hybrid_ssm or cfg.family == "ssm":
+            sout, (h_new, tail_new) = SM.mamba(h, p["ssm"], cfg)
+            newc = dataclasses.replace(newc, ssm_h=h_new, ssm_tail=tail_new)
+            att = sout if att is None else att * p["mix_attn"] + sout * p["mix_ssm"]
+        x = x + att
+        if cfg.cross_attention and enc_out is not None:
+            hx = LY.rms_norm(x, p["ln_x"], cfg.norm_eps)
+            x = x + LY.attention(hx, p["xattn"], cfg, positions=positions,
+                                 kv=enc_out, kv_positions=enc_positions, causal=False)
+            xk = jnp.einsum("bsd,dq->bsq", enc_out, p["xattn"]["wk"]).reshape(
+                B, enc_out.shape[1], cfg.num_kv_heads, cfg.head_dim)
+            xv = jnp.einsum("bsd,dq->bsq", enc_out, p["xattn"]["wv"]).reshape(
+                B, enc_out.shape[1], cfg.num_kv_heads, cfg.head_dim)
+            newc = dataclasses.replace(newc, xk=xk.astype(newc.xk.dtype) if newc.xk is not None else xk,
+                                       xv=xv.astype(newc.xv.dtype) if newc.xv is not None else xv)
+        if "ln3" in p:
+            h = LY.rms_norm(x, p["ln2"], cfg.norm_eps)
+            x = x + LY.mlp(h, p["mlp"], cfg.mlp_act)
+            h = LY.rms_norm(x, p["ln3"], cfg.norm_eps)
+            # second attention of the pair: cache into the k2/v2 ring
+            Hkv, hd = cfg.num_kv_heads, cfg.head_dim
+            k2 = jnp.einsum("bsd,dq->bsq", h, p["attn2"]["wk"])
+            v2 = jnp.einsum("bsd,dq->bsq", h, p["attn2"]["wv"])
+            k2 = LY.rotary(k2.reshape(B, S, Hkv, hd), positions, cfg.rope_theta)
+            v2 = v2.reshape(B, S, Hkv, hd)
+            W2 = newc.k2.shape[1]
+            take2 = min(W2, S)
+            slots2 = jnp.mod(positions[0, -take2:], W2)
+            newc = dataclasses.replace(
+                newc,
+                k2=newc.k2.at[:, slots2].set(k2[:, -take2:].astype(newc.k2.dtype)),
+                v2=newc.v2.at[:, slots2].set(v2[:, -take2:].astype(newc.v2.dtype)),
+                kpos2=newc.kpos2.at[slots2].set(positions[0, -take2:]))
+            x = x + LY.attention(h, p["attn2"], cfg, positions=positions,
+                                 causal=True, window=int(windows[li]))
+            h = LY.rms_norm(x, p["ln4"], cfg.norm_eps)
+            x = x + LY.moe(h, p["moe"], cfg, dense=moe_dense)
+        else:
+            h = LY.rms_norm(x, p["ln2"], cfg.norm_eps)
+            x = x + _ffn(h, p, cfg, moe_dense)
+        new_layers.append(newc)
+    logits = lm_head(params, cfg, x[:, -1:])
+    out_layers = (jax.tree.map(lambda *xs: jnp.stack(xs), *new_layers)
+                  if cache_is_uniform(cfg) else tuple(new_layers))
+    return logits, DecodeCache(layers=out_layers,
+                               pos=jnp.asarray(S, jnp.int32),
+                               enc_out=enc_out, enc_positions=enc_positions)

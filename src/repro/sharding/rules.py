@@ -1,0 +1,141 @@
+"""Logical-axis → mesh-axis sharding rules (MaxText-style).
+
+Every parameter/activation declares *logical* axes (("layers", "embed",
+"mlp"), ("batch", "seq"), …). A rule table maps logical axes to mesh axes,
+subject to two guards applied per-array:
+
+  * divisibility — an axis is only sharded if its size divides evenly by the
+    mesh axis product (uneven vocab sizes like hymba's 32001 fall back to
+    replication rather than relying on GSPMD padding);
+  * uniqueness — a mesh axis is consumed at most once per array.
+
+Rules are resolved in priority order, so e.g. MoE weights give "expert" the
+first claim on the ``model`` axis and d_ff only shards when experts didn't
+(grok's E=8 < 16 ⇒ expert replication, d_ff tensor-parallel instead).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Mapping, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# axis → candidate mesh axes, in decreasing priority.
+# "fsdp" composite = ("pod", "data") — parameters/optimizer state are fully
+# sharded across all data-parallel devices (ZeRO-3); the pod axis carries no
+# parameter replica so cross-pod traffic is gradients + gather only.
+DEFAULT_RULES: Mapping[str, Sequence[Tuple[str, ...]]] = {
+    "expert": (("model",),),
+    "vocab": (("model",),),
+    "mlp": (("model",),),
+    "heads": (("model",),),
+    "kv_heads": (("model",),),
+    "qdim": (("model",),),        # fused H*hd projections (hymba's 25 heads)
+    "kvdim": (("model",),),
+    "embed": (("pod", "data"), ("data",)),
+    "ssm_inner": (("model",),),
+    "batch": (("pod", "data"), ("data",)),
+    "seq": (),                    # sequence kept unsharded by default
+    # long-context decode KV cache: prefer whatever axes the batch didn't
+    # take (B=1 long_500k → all 512 ways; B=128 decode_32k → "model")
+    "cache_seq": (("pod", "data", "model"), ("model",), ("pod", "data"), ("data",)),
+    "layers": (),
+    "window": (),
+    "state": (),
+    "conv": (),
+    "dt": (),
+    "frames": (),
+    "patches": (),
+    None: (),
+}
+
+# priority when several logical axes compete for the same mesh axis
+_PRIORITY = ("expert", "vocab", "mlp", "heads", "kv_heads", "qdim", "kvdim",
+             "ssm_inner", "batch", "cache_seq", "embed")
+
+
+def _mesh_size(mesh: Mesh, axes: Tuple[str, ...]) -> int:
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def logical_to_pspec(logical_axes: Sequence[str | None], shape: Sequence[int],
+                     mesh: Mesh, rules=None) -> P:
+    """Resolve one array's logical axes to a PartitionSpec."""
+    rules = rules or DEFAULT_RULES
+    assert len(logical_axes) == len(shape), (logical_axes, shape)
+    taken: set = set()
+    out: list = [None] * len(shape)
+    # resolve in global priority order so competition is deterministic
+    order = sorted(
+        range(len(shape)),
+        key=lambda i: _PRIORITY.index(logical_axes[i]) if logical_axes[i] in _PRIORITY else 99,
+    )
+    for i in order:
+        ax = logical_axes[i]
+        for cand in rules.get(ax, ()):  # type: ignore[arg-type]
+            cand = tuple(c for c in cand if c in mesh.shape)
+            if not cand or any(c in taken for c in cand):
+                continue
+            size = _mesh_size(mesh, cand)
+            if size > 1 and shape[i] % size == 0:
+                out[i] = cand if len(cand) > 1 else cand[0]
+                taken.update(cand)
+                break
+    return P(*out)
+
+
+def named_sharding(logical_axes, shape, mesh: Mesh, rules=None) -> NamedSharding:
+    return NamedSharding(mesh, logical_to_pspec(logical_axes, shape, mesh, rules))
+
+
+def constrain(x, logical_axes, mesh: Mesh, rules=None):
+    """Apply a sharding constraint from logical axes inside a pjitted fn."""
+    spec = logical_to_pspec(logical_axes, x.shape, mesh, rules)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+# ----------------------------------------------------------------------------
+# activation constraints (GSPMD propagation hints inside model code)
+# ----------------------------------------------------------------------------
+
+#: activation-axis rules differ from parameter rules: the embedding dim of an
+#: activation is *not* FSDP-sharded; only batch / heads / mlp-hidden / vocab
+#: dims shard.
+ACT_RULES: Mapping[str, Sequence[Tuple[str, ...]]] = {
+    "batch": (("pod", "data"), ("data",)),
+    "heads": (("model",),),
+    "act_mlp": (("model",),),
+    "vocab": (("model",),),
+    "expert": (("model",),),
+    # MoE expert-capacity dim: sharded over the *data* axes, so dispatch
+    # becomes a t_data → c_data all-to-all and the expert FFN keeps its
+    # hidden dim on "model" — no replicated (E, C, f) tensor ever exists
+    # (§Perf A2/A3; the all-reduce→all-to-all rewrite).
+    "moe_cap": (("pod", "data"), ("data",), ("model",)),
+    None: (),
+}
+
+_ACT_MESH: list = [None]  # set by the launch layer around lowering
+
+
+def set_activation_mesh(mesh: Optional[Mesh]):
+    """Install the mesh used by :func:`act_constrain` (None disables)."""
+    _ACT_MESH[0] = mesh
+
+
+def act_constrain(x, logical_axes):
+    """Best-effort activation sharding constraint; no-op without a mesh.
+
+    Model code calls this at propagation choke points (post-embedding, scan
+    body entry, attention head tensors, MLP hidden) so GSPMD keeps the batch
+    sharded through reshapes it would otherwise give up on.
+    """
+    mesh = _ACT_MESH[0]
+    if mesh is None:
+        return x
+    spec = logical_to_pspec(logical_axes, x.shape, mesh, ACT_RULES)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

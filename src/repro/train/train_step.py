@@ -1,0 +1,156 @@
+"""The pjit training step: microbatched, mixed-precision, fully sharded.
+
+Layout (DESIGN.md §4):
+  * params/optimizer state fp32, sharded by the logical rules (FSDP over
+    ("pod","data"), TP over "model", EP over "model");
+  * forward/backward in cfg.dtype (bf16) via a cast at step entry;
+  * global batch split into ``microbatches`` accumulated with ``lax.scan``
+    (bounds activation memory — the per-device live set is one microbatch);
+  * gradient all-reduce is inserted by GSPMD from the shardings; the
+    optimizer update is elementwise over identically-sharded trees.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models import params as MP
+from repro.models import transformer as T
+from repro.sharding import rules as shr
+from repro.train import optimizer as OPT
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class TrainState:
+    params: Any
+    opt: OPT.AdamWState
+    step: jnp.ndarray
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    microbatches: int = 8
+    opt: OPT.AdamWConfig = OPT.AdamWConfig()
+    remat: bool = True
+    remat_policy: str = "nothing"   # nothing | dots (§Perf C1)
+    moe_aux_weight: float = 0.0
+
+
+def init_state(cfg: ModelConfig, key) -> TrainState:
+    params = MP.init_params(cfg, key)
+    return TrainState(params=params, opt=OPT.init(params), step=jnp.zeros((), jnp.int32))
+
+
+def abstract_state(cfg: ModelConfig) -> TrainState:
+    params = MP.abstract_params(cfg)
+    z = lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32)
+    return TrainState(
+        params=params,
+        opt=OPT.AdamWState(mu=jax.tree.map(z, params), nu=jax.tree.map(z, params),
+                           step=jax.ShapeDtypeStruct((), jnp.int32)),
+        step=jax.ShapeDtypeStruct((), jnp.int32))
+
+
+def state_shardings(cfg: ModelConfig, mesh: Mesh) -> TrainState:
+    ps = MP.param_shardings(cfg, mesh)
+    scalar = NamedSharding(mesh, P())
+    return TrainState(
+        params=ps,
+        opt=OPT.AdamWState(mu=ps, nu=ps, step=scalar),
+        step=scalar)
+
+
+def batch_shardings(cfg: ModelConfig, mesh: Mesh, batch_specs: Dict[str, Any],
+                    microbatches: int) -> Dict[str, Any]:
+    """Microbatch-major layout: each input [B, ...] → [n_mb, B/n_mb, ...]
+    with the per-microbatch batch dim sharded over ("pod","data")."""
+    out = {}
+    for k, v in batch_specs.items():
+        shape = (microbatches, v.shape[0] // microbatches) + tuple(v.shape[1:])
+        axes = [None, "batch"] + [None] * (len(v.shape) - 1)
+        out[k] = NamedSharding(mesh, shr.logical_to_pspec(axes, shape, mesh))
+    return out
+
+
+def reshape_batch(batch: Dict[str, Any], microbatches: int):
+    return {k: v.reshape((microbatches, v.shape[0] // microbatches) + v.shape[1:])
+            for k, v in batch.items()}
+
+
+def make_train_step(cfg: ModelConfig, tcfg: TrainConfig, mesh: Optional[Mesh] = None):
+    """Returns train_step(state, batch) → (state, metrics).
+
+    ``batch`` arrives microbatch-major: each leaf [n_mb, mb, ...].
+
+    When a mesh is supplied, per-microbatch gradients are constrained to the
+    *parameter* shardings before accumulation — this makes GSPMD emit a
+    reduce-scatter onto each FSDP shard instead of an all-reduce of the full
+    gradient (≈ dp-fold less gradient traffic; see EXPERIMENTS.md §Perf A1).
+    """
+    cdtype = jnp.dtype(cfg.dtype)
+    gspecs = None
+    if mesh is not None:
+        from jax.sharding import NamedSharding
+        gspecs = jax.tree.map(lambda s: NamedSharding(mesh, s), MP.param_pspecs(cfg, mesh))
+
+    def loss_fn(cparams, mbatch):
+        return T.forward_train(cparams, cfg, mbatch, remat_policy=tcfg.remat_policy)
+
+    def train_step(state: TrainState, batch):
+        cparams = jax.tree.map(lambda a: a.astype(cdtype), state.params)
+
+        def mb_step(carry, mbatch):
+            gacc, lacc = carry
+            loss, grads = jax.value_and_grad(loss_fn)(cparams, mbatch)
+            if gspecs is not None:
+                grads = jax.tree.map(jax.lax.with_sharding_constraint, grads, gspecs)
+            gacc = jax.tree.map(lambda a, g: a + g.astype(jnp.float32), gacc, grads)
+            return (gacc, lacc + loss), None
+
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), state.params)
+        n_mb = jax.tree.leaves(batch)[0].shape[0]
+        (grads, loss_sum), _ = jax.lax.scan(mb_step, (zeros, 0.0), batch)
+        grads = jax.tree.map(lambda g: g / n_mb, grads)
+        new_params, new_opt, om = OPT.apply(state.params, grads, state.opt, tcfg.opt)
+        metrics = {"loss": loss_sum / n_mb, **om}
+        return TrainState(params=new_params, opt=new_opt, step=state.step + 1), metrics
+
+    return train_step
+
+
+def compile_train_step(cfg: ModelConfig, tcfg: TrainConfig, mesh: Mesh,
+                       batch_specs: Dict[str, Any], donate: bool = True):
+    """Lower + compile the pjit train step against abstract inputs.
+
+    Returns (lowered, compiled) — the dry-run's entry point.
+    """
+    step_fn = make_train_step(cfg, tcfg, mesh=mesh)
+    st_sh = state_shardings(cfg, mesh)
+    b_sh = batch_shardings(cfg, mesh, batch_specs, tcfg.microbatches)
+    metrics_sh = {k: NamedSharding(mesh, P()) for k in ("loss", "grad_norm", "lr")}
+    jt = jax.jit(
+        step_fn,
+        in_shardings=(st_sh, b_sh),
+        out_shardings=(st_sh, metrics_sh),
+        donate_argnums=(0,) if donate else (),
+    )
+    abs_state = abstract_state(cfg)
+    abs_batch = {k: jax.ShapeDtypeStruct(
+        (tcfg.microbatches, v.shape[0] // tcfg.microbatches) + tuple(v.shape[1:]), v.dtype)
+        for k, v in batch_specs.items()}
+    shr.set_activation_mesh(mesh)
+    try:
+        with mesh:
+            lowered = jt.lower(abs_state, abs_batch)
+            compiled = lowered.compile()
+    finally:
+        shr.set_activation_mesh(None)
+    return lowered, compiled

@@ -1,0 +1,82 @@
+"""Hoeffding CI (§4.3): empirical coverage, shrinkage, moment-form parity."""
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import bounds as B
+from repro.core import estimators as E
+from repro.kernels import ref as KR
+
+
+def _sample_ci(rng, N, m, rho, alpha=0.05):
+    xy = rng.multivariate_normal([0, 0], [[1, rho], [rho, 1]], size=N)
+    pop_r = np.corrcoef(xy[:, 0], xy[:, 1])[0, 1]
+    idx = rng.choice(N, size=m, replace=False)
+    a = np.zeros(256, np.float32)
+    b = np.zeros(256, np.float32)
+    mask = np.zeros(256, bool)
+    a[:m] = xy[idx, 0]
+    b[:m] = xy[idx, 1]
+    mask[:m] = True
+    c_low = float(min(xy[:, 0].min(), xy[:, 1].min()))
+    c_high = float(max(xy[:, 0].max(), xy[:, 1].max()))
+    ci = B.hoeffding_ci(jnp.asarray(a)[None], jnp.asarray(b)[None],
+                        jnp.asarray(mask)[None],
+                        jnp.asarray([c_low]), jnp.asarray([c_high]), alpha=alpha)
+    return pop_r, float(ci.lo[0]), float(ci.hi[0])
+
+
+def test_coverage_at_least_1_minus_alpha(rng):
+    hits = 0
+    trials = 60
+    for t in range(trials):
+        rho = rng.uniform(-0.9, 0.9)
+        pop_r, lo, hi = _sample_ci(rng, N=2000, m=128, rho=rho)
+        hits += int(lo <= pop_r <= hi)
+    # the bound is conservative: coverage should be ≥ 95% (usually ≈ 100%)
+    assert hits / trials >= 0.95, hits / trials
+
+
+def test_ci_shrinks_with_m(rng):
+    widths = []
+    for m in (16, 64, 256):
+        _, lo, hi = _sample_ci(rng, N=5000, m=m, rho=0.5)
+        widths.append(hi - lo)
+    assert widths[0] > widths[1] > widths[2]
+    # §4.3: error ∝ 1/√m — quadrupling m should ~halve the width
+    assert widths[1] / widths[2] > 1.5
+
+
+def test_fisher_z_se():
+    assert abs(float(B.fisher_z_se(jnp.asarray(103.0))) - 0.1) < 1e-6
+    # the max(4, m) floor keeps tiny samples finite
+    assert np.isfinite(float(B.fisher_z_se(jnp.asarray(1.0))))
+
+
+def test_moment_form_matches_direct(rng):
+    """hoeffding_from_moments (kernel/engine path) == bounds.hoeffding_ci."""
+    m = 100
+    a = np.zeros(128, np.float32)
+    b = np.zeros(128, np.float32)
+    mask = np.zeros(128, np.float32)
+    a[:m] = rng.normal(size=m)
+    b[:m] = 0.6 * a[:m] + 0.4 * rng.normal(size=m)
+    mask[:m] = 1.0
+    c_low, c_high = -4.0, 4.0
+    direct = B.hoeffding_ci(jnp.asarray(a)[None], jnp.asarray(b)[None],
+                            jnp.asarray(mask.astype(bool))[None],
+                            jnp.asarray([c_low]), jnp.asarray([c_high]))
+    w = jnp.asarray(mask)
+    mom = jnp.stack([w.sum()[None],
+                     (jnp.asarray(a) * w).sum()[None],
+                     (jnp.asarray(b) * w).sum()[None],
+                     (jnp.asarray(a) ** 2 * w).sum()[None],
+                     (jnp.asarray(b) ** 2 * w).sum()[None],
+                     (jnp.asarray(a) * jnp.asarray(b) * w).sum()[None]], -1)
+    lo2, hi2 = KR.hoeffding_from_moments(mom, jnp.asarray([c_low]), jnp.asarray([c_high]))
+    np.testing.assert_allclose(float(direct.lo[0]), float(lo2[0]), rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(float(direct.hi[0]), float(hi2[0]), rtol=2e-4, atol=2e-4)
+
+
+def test_sample_size_formula():
+    n = B.sample_size_for_accuracy(C=2.0, c_var=1.0, eps=0.1, alpha=0.05)
+    assert 1000 < n < 1e7

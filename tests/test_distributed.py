@@ -1,0 +1,162 @@
+"""Multi-device semantics on 8 fake CPU devices (subprocess: the device
+count must be set before jax initialises, so these tests shell out)."""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+_SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def _run(body: str, timeout=560):
+    prog = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import numpy as np
+        import jax, jax.numpy as jnp
+        assert len(jax.devices()) == 8
+    """) + textwrap.dedent(body)
+    env = dict(os.environ, PYTHONPATH=_SRC)
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run([sys.executable, "-c", prog], capture_output=True,
+                         text=True, timeout=timeout, env=env)
+    assert out.returncode == 0, out.stderr[-4000:]
+    return out.stdout
+
+
+def test_engine_query_8dev_matches_1dev():
+    _run("""
+        from repro.core import build_sketch
+        from repro.data.pipeline import Table, sbn_pair
+        from repro.engine import index as IX, query as Q
+        rng = np.random.default_rng(3)
+        kk = rng.choice(1<<30, size=3000, replace=False).astype(np.uint32)
+        xy = rng.multivariate_normal([0,0],[[1,.9],[.9,1]], size=3000).astype(np.float32)
+        tables = [Table(keys=kk, values=xy[:,1], name='planted')]
+        for i in range(31):
+            _, ty, _, _ = sbn_pair(rng, n_max=3000)
+            tables.append(Table(keys=ty.keys, values=ty.values, name=f'n{i}'))
+        idx = IX.build_index(tables, n=128, pad_to=32)
+        qsk = build_sketch(jnp.asarray(kk), jnp.asarray(xy[:,0]), n=128)
+        results = {}
+        for ndev in (1, 8):
+            mesh = jax.make_mesh((ndev,), ('shard',), devices=jax.devices()[:ndev])
+            shard = IX.shard_for_mesh(idx, mesh)
+            s, g, r, m = Q.query(shard, qsk, mesh, Q.QueryConfig(k=5))
+            results[ndev] = (np.asarray(g), np.asarray(r), np.asarray(m))
+        np.testing.assert_array_equal(results[1][0], results[8][0])
+        np.testing.assert_allclose(results[1][1], results[8][1], atol=1e-5)
+        assert int(results[8][0][0]) == 0
+        print('OK')
+    """)
+
+
+def test_distributed_sketch_build_8dev():
+    _run("""
+        from repro.engine.index import distributed_build
+        from repro.core.sketch import build_sketch
+        rng = np.random.default_rng(0)
+        keys = rng.integers(0, 3000, size=4096).astype(np.uint32)
+        vals = rng.normal(size=4096).astype(np.float32)
+        mesh = jax.make_mesh((8,), ('shard',))
+        dsk = distributed_build(jnp.asarray(keys), jnp.asarray(vals), mesh, n=64)
+        lsk = build_sketch(jnp.asarray(keys), jnp.asarray(vals), n=64)
+        dm = np.asarray(dsk.mask); lm = np.asarray(lsk.mask)
+        gd = dict(zip(np.asarray(dsk.key_hash)[dm].tolist(), np.asarray(dsk.values())[dm].tolist()))
+        gl = dict(zip(np.asarray(lsk.key_hash)[lm].tolist(), np.asarray(lsk.values())[lm].tolist()))
+        assert gd.keys() == gl.keys()
+        for k in gl: assert abs(gd[k]-gl[k]) < 1e-3
+        print('OK')
+    """)
+
+
+def test_train_step_2x2x2_mesh():
+    """FSDP(pod,data) × TP(model) training on a tiny model: loss finite,
+    param shardings honoured."""
+    _run("""
+        from repro.configs import registry as R
+        from repro.train import train_step as TS
+        from repro.launch import steps as ST
+        from repro.configs import shapes as SH
+        import dataclasses
+        cfg = R.get_smoke_config('tinyllama-1.1b')
+        mesh = jax.make_mesh((2,2,2), ('pod','data','model'))
+        spec = SH.ShapeSpec('tiny', 32, 8, 'train')
+        lowered, compiled = ST.compile_train(cfg, mesh, spec, microbatches=2)
+        txt = compiled.as_text()
+        assert 'all-reduce' in txt or 'all-gather' in txt  # collectives exist
+        # run it with real values
+        from repro.train.train_step import init_state, state_shardings
+        st = init_state(cfg, jax.random.PRNGKey(0))
+        sh = state_shardings(cfg, mesh)
+        st = jax.device_put(st, sh)
+        batch = {'tokens': jnp.ones((2, 4, 32), jnp.int32),
+                 'labels': jnp.ones((2, 4, 32), jnp.int32)}
+        from repro.sharding import rules as shr
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        bsh = TS.batch_shardings(cfg, mesh, {'tokens': jax.ShapeDtypeStruct((8,32), jnp.int32),
+                                             'labels': jax.ShapeDtypeStruct((8,32), jnp.int32)}, 2)
+        batch = {k: jax.device_put(v, bsh[k]) for k, v in batch.items()}
+        new_state, metrics = compiled(st, batch)
+        assert np.isfinite(float(metrics['loss']))
+        print('OK')
+    """)
+
+
+def test_serve_step_multi_device():
+    _run("""
+        from repro.configs import registry as R
+        from repro.configs import shapes as SH
+        from repro.launch import steps as ST
+        cfg = R.get_smoke_config('qwen1.5-0.5b')
+        mesh = jax.make_mesh((2,4), ('data','model'))
+        spec = SH.ShapeSpec('d', 64, 8, 'decode')
+        lowered, compiled = ST.compile_serve_step(cfg, mesh, spec, donate=False)
+        print('OK')
+    """)
+
+
+def test_compressed_psum_8dev_accuracy():
+    _run("""
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import PartitionSpec as P
+        from repro.train import compression as C
+        mesh = jax.make_mesh((8,), ('pod',))
+        rng = np.random.default_rng(1)
+        g = rng.normal(size=(8, 64)).astype(np.float32)   # one row per device
+        def f(gl, el):
+            out, err = C.compressed_psum(gl[0], el[0], 'pod')
+            return out[None], err[None]
+        fn = jax.jit(shard_map(f, mesh=mesh, in_specs=(P('pod'), P('pod')),
+                               out_specs=(P('pod'), P('pod')), check_rep=False))
+        out, err = fn(jnp.asarray(g), jnp.zeros_like(jnp.asarray(g)))
+        mean_true = g.mean(0)
+        for d in range(8):
+            np.testing.assert_allclose(np.asarray(out)[d], mean_true, atol=0.05)
+        print('OK')
+    """)
+
+
+def test_checkpoint_elastic_remesh():
+    """Save params sharded on a (4,2) mesh; restore onto (2,2,2) and (8,) —
+    logical arrays must be identical."""
+    _run("""
+        import tempfile
+        from repro.configs import registry as R
+        from repro.train import checkpoint as CK, train_step as TS
+        cfg = R.get_smoke_config('qwen1.5-0.5b')
+        st = TS.init_state(cfg, jax.random.PRNGKey(0))
+        mesh1 = jax.make_mesh((4,2), ('data','model'))
+        st1 = jax.device_put(st, TS.state_shardings(cfg, mesh1))
+        d = tempfile.mkdtemp()
+        CK.save(d, 5, st1)
+        for shape, names in (((2,2,2), ('pod','data','model')), ((8,), ('data',))):
+            mesh2 = jax.make_mesh(shape, names)
+            st2 = CK.restore(d, 5, TS.abstract_state(cfg), TS.state_shardings(cfg, mesh2))
+            for a, b in zip(jax.tree.leaves(st.params), jax.tree.leaves(st2.params)):
+                np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        print('OK')
+    """)

@@ -1,0 +1,109 @@
+"""Correlation estimators vs independent numpy oracles (incl. tie handling)."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import estimators as E
+
+
+def _mask_pad(x, n):
+    out = np.zeros(n, np.float32)
+    out[: len(x)] = x
+    m = np.zeros(n, bool)
+    m[: len(x)] = True
+    return jnp.asarray(out), jnp.asarray(m)
+
+
+def _np_pearson(x, y):
+    return float(np.corrcoef(x, y)[0, 1])
+
+
+def _np_avg_ranks(x):
+    order = np.argsort(x, kind="stable")
+    ranks = np.empty(len(x), float)
+    sx = x[order]
+    i = 0
+    while i < len(x):
+        j = i
+        while j + 1 < len(x) and sx[j + 1] == sx[i]:
+            j += 1
+        ranks[order[i:j + 1]] = (i + j) / 2 + 1
+        i = j + 1
+    return ranks
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 10000), m=st.integers(5, 120), ties=st.booleans())
+def test_pearson_spearman_vs_numpy(seed, m, ties):
+    r = np.random.default_rng(seed)
+    x = r.normal(size=m).astype(np.float32)
+    y = (0.5 * x + 0.5 * r.normal(size=m)).astype(np.float32)
+    if ties:
+        x = np.round(x * 2) / 2
+        y = np.round(y * 2) / 2
+    n = 128
+    xp, mask = _mask_pad(x, n)
+    yp, _ = _mask_pad(y, n)
+    if np.std(x) < 1e-6 or np.std(y) < 1e-6:
+        return
+    got_p = float(E.pearson(xp, yp, mask))
+    assert abs(got_p - _np_pearson(x, y)) < 1e-4
+    got_s = float(E.spearman(xp, yp, mask))
+    ref_s = _np_pearson(_np_avg_ranks(x), _np_avg_ranks(y))
+    assert abs(got_s - ref_s) < 1e-4
+
+
+def test_average_ranks_ties():
+    x = jnp.asarray(np.array([3.0, 1.0, 3.0, 2.0, 0.0, 0.0], np.float32))
+    m = jnp.ones(6, bool)
+    got = np.asarray(E.average_ranks(x, m))
+    np.testing.assert_allclose(got, [5.5, 3.0, 5.5, 4.0, 1.5, 1.5])
+
+
+def test_rank_invariance_spearman_rin(rng):
+    """Spearman/RIN are invariant under strictly monotone transforms."""
+    x = rng.normal(size=80).astype(np.float32)
+    y = (0.7 * x + 0.3 * rng.normal(size=80)).astype(np.float32)
+    xp, mask = _mask_pad(x, 128)
+    yp, _ = _mask_pad(y, 128)
+    xt, _ = _mask_pad(np.exp(2 * x).astype(np.float32), 128)  # monotone
+    for est in (E.spearman, E.rin):
+        a = float(est(xp, yp, mask))
+        b = float(est(xt, yp, mask))
+        assert abs(a - b) < 1e-4, est
+
+
+def test_qn_robust_to_outliers(rng):
+    x = rng.normal(size=100).astype(np.float32)
+    y = (0.9 * x + 0.1 * rng.normal(size=100)).astype(np.float32)
+    y_out = y.copy()
+    y_out[0] = 1000.0  # single catastrophic outlier
+    xp, mask = _mask_pad(x, 128)
+    yp, _ = _mask_pad(y_out, 128)
+    r_pearson = float(E.pearson(xp, yp, mask))
+    r_qn = float(E.qn_correlation(xp, yp, mask))
+    assert abs(r_pearson) < 0.5          # pearson destroyed by the outlier
+    assert r_qn > 0.6                    # qn survives
+
+
+def test_pm1_bootstrap_brackets_truth(rng):
+    x = rng.normal(size=200).astype(np.float32)
+    y = (0.8 * x + 0.2 * rng.normal(size=200)).astype(np.float32)
+    xp, mask = _mask_pad(x, 256)
+    yp, _ = _mask_pad(y, 256)
+    rb, lo, hi = E.pm1_bootstrap(xp, yp, mask, jax.random.PRNGKey(0))
+    r_true = _np_pearson(x, y)
+    assert float(lo) <= float(rb) <= float(hi)
+    assert float(lo) - 0.05 <= r_true <= float(hi) + 0.05
+
+
+def test_degenerate_inputs():
+    n = 64
+    x = jnp.zeros(n)
+    m = jnp.zeros(n, bool)
+    assert float(E.pearson(x, x, m)) == 0.0           # empty mask
+    m2 = jnp.asarray(np.arange(n) < 5)
+    const = jnp.ones(n)
+    assert float(E.pearson(const, const, m2)) == 0.0  # zero variance

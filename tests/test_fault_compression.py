@@ -1,0 +1,122 @@
+"""Fault-tolerance runtime + gradient compression correctness."""
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.train import compression as C
+from repro.train import fault as F
+
+
+# ---------------------------------------------------------------------------
+# straggler / preemption / restart
+# ---------------------------------------------------------------------------
+
+def test_straggler_monitor_flags_outlier():
+    flagged = []
+    mon = F.StragglerMonitor(min_samples=10, k=6.0,
+                             on_straggler=lambda s, d, t: flagged.append(s))
+    for i in range(20):
+        mon.record(i, 0.100 + 0.001 * (i % 3))
+    assert not flagged
+    assert mon.record(20, 1.5)  # 15× median
+    assert flagged == [20]
+
+
+def test_straggler_monitor_needs_warmup():
+    mon = F.StragglerMonitor(min_samples=10)
+    assert not mon.record(0, 100.0)  # no baseline yet
+
+
+def test_run_with_restart_resumes():
+    calls = []
+    ckpt = {"step": None}
+
+    def loop(resume):
+        calls.append(resume)
+        if len(calls) < 3:
+            ckpt["step"] = len(calls) * 10
+            raise RuntimeError("worker died")
+        return 100
+
+    out = F.run_with_restart(loop, lambda: ckpt["step"], max_restarts=5,
+                             backoff_s=0.0, sleep=lambda s: None)
+    assert out == 100
+    assert calls == [None, 10, 20]  # restarted from the latest checkpoint
+
+
+def test_run_with_restart_gives_up():
+    def loop(resume):
+        raise RuntimeError("always fails")
+    with pytest.raises(RuntimeError):
+        F.run_with_restart(loop, lambda: None, max_restarts=2, backoff_s=0.0,
+                           sleep=lambda s: None)
+
+
+# ---------------------------------------------------------------------------
+# int8 gradient compression with error feedback
+# ---------------------------------------------------------------------------
+
+def test_quantize_roundtrip_error_bound(rng):
+    g = jnp.asarray(rng.normal(size=1000).astype(np.float32))
+    q, s = C.quantize_int8(g)
+    err = np.abs(np.asarray(C.dequantize_int8(q, s)) - np.asarray(g)).max()
+    assert err <= float(s) / 2 + 1e-7  # half-ULP of the int8 grid
+
+
+def test_error_feedback_is_unbiased_over_time(rng):
+    """Accumulated dequantised outputs converge to accumulated true grads —
+    the error-feedback telescoping property."""
+    gs = rng.normal(size=(50, 256)).astype(np.float32)
+    err = jnp.zeros(256)
+    total_q = np.zeros(256)
+    for g in gs:
+        q, s, err = C.compress_with_feedback(jnp.asarray(g), err)
+        total_q += np.asarray(C.dequantize_int8(q, s))
+    total_true = gs.sum(0)
+    # residual is bounded by one quantisation step, NOT O(T)
+    resid = np.abs(total_q + np.asarray(err) - total_true).max()
+    assert resid < 1e-3, resid
+
+
+def test_compressed_psum_single_device(rng):
+    """Axis of size 1: compressed psum ≈ identity (within quantisation)."""
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+    mesh = jax.make_mesh((1,), ("d",))
+    g = jnp.asarray(rng.normal(size=(8, 16)).astype(np.float32))
+    err0 = jnp.zeros_like(g)
+
+    def f(g, e):
+        return C.compressed_psum(g, e, "d")
+
+    out, err = jax.jit(shard_map(f, mesh=mesh, in_specs=(P(), P()),
+                                 out_specs=(P(), P()), check_rep=False))(g, err0)
+    scale = float(jnp.max(jnp.abs(g))) / 127.0
+    np.testing.assert_allclose(np.asarray(out), np.asarray(g), atol=scale)
+    # g ≈ out + err exactly (error feedback holds the residual)
+    np.testing.assert_allclose(np.asarray(out) + np.asarray(err),
+                               np.asarray(g), atol=1e-6)
+
+
+def test_compressed_training_converges(rng):
+    """Toy quadratic trained with int8-compressed grads + error feedback
+    reaches the same optimum as exact gradients."""
+    w_true = rng.normal(size=16).astype(np.float32)
+
+    def loss_grad(w):
+        return w - jnp.asarray(w_true)  # grad of ½‖w−w*‖²
+
+    for compressed in (False, True):
+        w = jnp.zeros(16)
+        err = jnp.zeros(16)
+        for _ in range(300):
+            g = loss_grad(w)
+            if compressed:
+                q, s, err = C.compress_with_feedback(g, err)
+                g = C.dequantize_int8(q, s)
+            w = w - 0.1 * g
+        final = float(jnp.linalg.norm(w - jnp.asarray(w_true)))
+        assert final < 1e-2, (compressed, final)

@@ -1,0 +1,57 @@
+"""Hash function correctness: canonical vectors, parity, uniformity."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import hashing as H
+
+
+def test_murmur3_known_vectors():
+    # canonical smhasher vectors
+    assert H.murmur3_32_bytes(b"", 0) == 0
+    assert H.murmur3_32_bytes(b"hello", 0) == 0x248BFA47
+    assert H.murmur3_32_bytes(b"hello, world", 0) == 0x149BBB7F
+    assert H.murmur3_32_bytes(b"The quick brown fox jumps over the lazy dog",
+                              0x9747B28C) == 0x2FA826CD
+
+
+def test_jax_matches_bytes_u32(rng):
+    ks = rng.integers(0, 2**32, size=256, dtype=np.uint32)
+    jx = np.asarray(H.murmur3_32(jnp.asarray(ks), np.uint32(0)))
+    ref = np.array([H.murmur3_32_bytes(int(k).to_bytes(4, "little"), 0) for k in ks],
+                   dtype=np.uint32)
+    np.testing.assert_array_equal(jx, ref)
+
+
+def test_jax_matches_bytes_u64(rng):
+    ks = rng.integers(0, 2**63, size=64).astype(np.uint64)
+    with jax.experimental.enable_x64():
+        jx = np.asarray(H.murmur3_32(jnp.asarray(ks), np.uint32(0)))
+    ref = np.array([H.murmur3_32_bytes(int(k).to_bytes(8, "little"), 0) for k in ks],
+                   dtype=np.uint32)
+    np.testing.assert_array_equal(jx, ref)
+
+
+def test_string_ingest():
+    out = H.hash_string_keys(["2021-01", "2021-02", b"raw"])
+    assert out.dtype == np.uint32 and len(set(out.tolist())) == 3
+
+
+def test_fibonacci_bijective(rng):
+    ks = rng.integers(0, 2**32, size=4096, dtype=np.uint32)
+    ks = np.unique(ks)
+    fib = np.asarray(H.fibonacci_u32(jnp.asarray(ks)))
+    assert len(np.unique(fib)) == len(ks)  # odd multiplier ⇒ bijection
+
+
+def test_unit_interval_uniformity(rng):
+    """h_u over sequential keys should be ~U[0,1): coarse chi² check."""
+    ks = np.arange(100000, dtype=np.uint32)
+    kh = np.asarray(H.murmur3_32(jnp.asarray(ks)))
+    u = np.asarray(H.unit_interval(H.fibonacci_u32(jnp.asarray(kh))))
+    hist, _ = np.histogram(u, bins=20, range=(0, 1))
+    expected = len(ks) / 20
+    chi2 = float(np.sum((hist - expected) ** 2 / expected))
+    assert chi2 < 60.0, chi2  # dof=19; generous bound
+    assert 0.0 <= u.min() and u.max() < 1.0

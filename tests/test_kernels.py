@@ -1,0 +1,122 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps, interpret mode."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.ops import KernelConfig
+
+INTERP = KernelConfig("interpret")
+
+
+@pytest.mark.parametrize("nq,n,C", [(64, 64, 8), (128, 128, 32), (256, 128, 16),
+                                    (128, 256, 8), (256, 256, 64)])
+def test_sketch_join_sweep(rng, nq, n, C):
+    qk = rng.permutation(1 << 22)[:nq].astype(np.uint32)
+    ck = np.stack([rng.permutation(1 << 22)[:n].astype(np.uint32) for _ in range(C)])
+    ov = min(nq, n) // 2
+    ck[0, :ov] = qk[:ov]
+    if C > 3:
+        ck[3, :ov // 2] = qk[ov // 2:ov]
+    qv = rng.normal(size=nq).astype(np.float32)
+    cv = rng.normal(size=(C, n)).astype(np.float32)
+    qm = (rng.random(nq) < 0.85).astype(np.float32)
+    cm = (rng.random((C, n)) < 0.85).astype(np.float32)
+    args = [jnp.asarray(x) for x in (qk, qv, qm, ck, cv, cm)]
+    mr, ar, hr = ref.sketch_join_moments(*args)
+    mp, apal, hp = ops.sketch_join_moments(*args, INTERP)
+    np.testing.assert_allclose(np.asarray(mp), np.asarray(mr), rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(apal), np.asarray(ar), rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(hp), np.asarray(hr), rtol=1e-5, atol=1e-5)
+
+
+def test_sketch_join_blocked_accumulation(rng):
+    """block_n < n exercises the reduction-grid revisiting path."""
+    from repro.kernels import sketch_join as SJ
+    nq = n = 128
+    C = 16
+    qk = rng.permutation(1 << 22)[:nq].astype(np.uint32)
+    ck = np.stack([rng.permutation(1 << 22)[:n].astype(np.uint32) for _ in range(C)])
+    ck[1, :64] = qk[:64]
+    qv = rng.normal(size=nq).astype(np.float32)
+    cv = rng.normal(size=(C, n)).astype(np.float32)
+    ones_q = np.ones(nq, np.float32)
+    ones_c = np.ones((C, n), np.float32)
+    mr, ar, hr = ref.sketch_join_moments(*[jnp.asarray(x) for x in (qk, qv, ones_q, ck, cv, ones_c)])
+    mp, apal, hp = SJ.sketch_join_moments(
+        jnp.asarray(qk), jnp.asarray(qv), jnp.asarray(ones_q),
+        jnp.asarray(ck), jnp.asarray(cv), jnp.asarray(ones_c),
+        block_c=4, block_n=32, interpret=True)
+    np.testing.assert_allclose(np.asarray(mp), np.asarray(mr), rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(apal), np.asarray(ar), rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("R,n,ties", [(8, 64, False), (16, 256, True), (4, 512, True)])
+def test_rank_transform_sweep(rng, R, n, ties):
+    x = rng.normal(size=(R, n)).astype(np.float32)
+    if ties:
+        x = np.round(x * 3) / 3
+    mask = (rng.random((R, n)) < 0.8).astype(np.float32)
+    r_ref = ref.rank_transform(jnp.asarray(x), jnp.asarray(mask))
+    r_pal = ops.rank_transform(jnp.asarray(x), jnp.asarray(mask), INTERP)
+    np.testing.assert_allclose(np.asarray(r_pal), np.asarray(r_ref), atol=1e-5)
+
+
+def test_rank_transform_blocked(rng):
+    from repro.kernels import rank_transform as RT
+    x = rng.normal(size=(8, 128)).astype(np.float32)
+    mask = np.ones((8, 128), np.float32)
+    r_ref = ref.rank_transform(jnp.asarray(x), jnp.asarray(mask))
+    r_pal = RT.rank_transform(jnp.asarray(x), jnp.asarray(mask),
+                              block_r=2, block_n=32, interpret=True)
+    np.testing.assert_allclose(np.asarray(r_pal), np.asarray(r_ref), atol=1e-5)
+
+
+@pytest.mark.parametrize("m", [4096, 8192])
+def test_hash_build(rng, m):
+    keys = rng.integers(0, 2**32, size=m, dtype=np.uint32)
+    kh_r, fib_r, u_r = ref.hash_build(jnp.asarray(keys))
+    kh_p, fib_p, u_p = ops.hash_build(jnp.asarray(keys), INTERP)
+    np.testing.assert_array_equal(np.asarray(kh_p), np.asarray(kh_r))
+    np.testing.assert_array_equal(np.asarray(fib_p), np.asarray(fib_r))
+    np.testing.assert_allclose(np.asarray(u_p), np.asarray(u_r))
+
+
+@pytest.mark.parametrize(
+    "B,Hq,Hkv,Lq,Lk,D,causal,window,dtype",
+    [
+        (2, 4, 2, 256, 256, 64, True, 0, np.float32),
+        (1, 8, 8, 128, 128, 32, True, 64, np.float32),
+        (1, 4, 1, 128, 512, 64, True, 0, np.float32),     # GQA + decode-ish
+        (2, 2, 2, 256, 256, 128, False, 0, np.float32),
+        (1, 4, 2, 256, 256, 64, True, 0, np.dtype("bfloat16")),
+    ])
+def test_flash_attention_sweep(rng, B, Hq, Hkv, Lq, Lk, D, causal, window, dtype):
+    q = rng.normal(size=(B, Hq, Lq, D)).astype(np.float32)
+    k = rng.normal(size=(B, Hkv, Lk, D)).astype(np.float32)
+    v = rng.normal(size=(B, Hkv, Lk, D)).astype(np.float32)
+    qj, kj, vj = (jnp.asarray(t).astype(dtype) for t in (q, k, v))
+    o_ref = ref.flash_attention(qj, kj, vj, causal=causal, window=window)
+    o_pal = ops.flash_attention(qj, kj, vj, causal=causal, window=window, cfg=INTERP)
+    tol = 2e-2 if dtype == np.dtype("bfloat16") else 2e-3
+    np.testing.assert_allclose(np.asarray(o_pal, np.float32),
+                               np.asarray(o_ref, np.float32), rtol=tol, atol=tol)
+
+
+def test_pearson_from_moments_matches_core(rng):
+    from repro.core import estimators as E
+    nq = n = 128
+    qk = rng.permutation(1 << 22)[:nq].astype(np.uint32)
+    ck = qk[None].repeat(4, 0).copy()
+    ck[2] = rng.permutation(1 << 22)[:n].astype(np.uint32)
+    qv = rng.normal(size=nq).astype(np.float32)
+    cv = rng.normal(size=(4, n)).astype(np.float32)
+    ones = np.ones_like
+    mom, aligned, hit = ref.sketch_join_moments(
+        jnp.asarray(qk), jnp.asarray(qv), jnp.asarray(ones(qv)),
+        jnp.asarray(ck), jnp.asarray(cv), jnp.asarray(ones(cv)))
+    r = ref.pearson_from_moments(mom)
+    for c in range(4):
+        rc = float(E.pearson(jnp.asarray(qv) * hit[c], aligned[c], hit[c] > 0))
+        assert abs(float(r[c]) - rc) < 1e-5

@@ -1,0 +1,114 @@
+"""Sketch construction/merge semantics vs a pure-python oracle (+hypothesis)."""
+import collections
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import hashing as H
+from repro.core import sketch as S
+
+
+def _oracle(keys, values, agg: S.Agg, n: int):
+    """Aggregate per murmur key, order by Fibonacci hash, take bottom-n."""
+    kh = np.asarray(H.murmur3_32(jnp.asarray(keys.astype(np.uint32))))
+    groups = collections.defaultdict(list)
+    for k, v in zip(kh.tolist(), values.tolist()):
+        if np.isfinite(v):
+            groups[k].append(v)
+    red = {S.Agg.MEAN: np.mean, S.Agg.SUM: np.sum, S.Agg.MIN: np.min,
+           S.Agg.MAX: np.max, S.Agg.COUNT: len,
+           S.Agg.FIRST: lambda xs: xs[0], S.Agg.LAST: lambda xs: xs[-1]}[agg]
+    fib = lambda k: int((int(k) * int(H.FIBONACCI_MULTIPLIER)) % (1 << 32))
+    bot = sorted(groups, key=fib)[:n]
+    return {k: float(red(groups[k])) for k in bot}
+
+
+def _got(sk: S.CorrelationSketch):
+    m = np.asarray(sk.mask)
+    return {int(k): float(v) for k, v in
+            zip(np.asarray(sk.key_hash)[m], np.asarray(sk.values())[m])}
+
+
+@pytest.mark.parametrize("agg", list(S.Agg))
+def test_build_matches_oracle(rng, agg):
+    keys = rng.integers(0, 300, size=1500).astype(np.uint32)
+    vals = rng.normal(size=1500).astype(np.float32)
+    sk = S.build_sketch(jnp.asarray(keys), jnp.asarray(vals), n=64, agg=agg)
+    ref = _oracle(keys, vals, agg, 64)
+    got = _got(sk)
+    assert got.keys() == ref.keys()
+    for k in ref:
+        assert abs(got[k] - ref[k]) < 1e-4 * max(1.0, abs(ref[k])), (agg, k)
+
+
+@pytest.mark.parametrize("agg", list(S.Agg))
+def test_streaming_equals_batch(rng, agg):
+    keys = rng.integers(0, 500, size=3000).astype(np.uint32)
+    vals = rng.normal(size=3000).astype(np.float32)
+    whole = S.build_sketch(jnp.asarray(keys), jnp.asarray(vals), n=64, agg=agg)
+    chunked = S.build_sketch_streaming(keys, vals, n=64, agg=agg, chunk=256)
+    assert _got(whole) == pytest.approx(_got(chunked), rel=1e-5, abs=1e-5)
+    np.testing.assert_allclose(float(whole.col_min), float(chunked.col_min))
+    np.testing.assert_allclose(float(whole.rows), float(chunked.rows))
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 10_000),
+       n=st.sampled_from([8, 32, 64]),
+       split=st.floats(0.1, 0.9),
+       agg=st.sampled_from(list(S.Agg)))
+def test_merge_closure_property(seed, n, split, agg):
+    """KMV ⊕ closure: merge(sketch(A), sketch(B)) == sketch(A ⧺ B),
+    including cross-chunk re-aggregation of repeated keys."""
+    r = np.random.default_rng(seed)
+    m = int(r.integers(50, 800))
+    keys = r.integers(0, max(m // 3, 2), size=m).astype(np.uint32)
+    vals = r.normal(size=m).astype(np.float32)
+    cut = max(1, min(m - 1, int(m * split)))
+    s1 = S.build_sketch(jnp.asarray(keys[:cut]), jnp.asarray(vals[:cut]),
+                        n=n, agg=agg, order_offset=0.0)
+    s2 = S.build_sketch(jnp.asarray(keys[cut:]), jnp.asarray(vals[cut:]),
+                        n=n, agg=agg, order_offset=float(cut))
+    merged = S.merge(s1, s2)
+    whole = S.build_sketch(jnp.asarray(keys), jnp.asarray(vals), n=n, agg=agg)
+    gm, gw = _got(merged), _got(whole)
+    assert gm.keys() == gw.keys()
+    for k in gw:
+        assert abs(gm[k] - gw[k]) < 1e-3 * max(1.0, abs(gw[k]))
+
+
+def test_nan_values_dropped(rng):
+    keys = np.arange(100, dtype=np.uint32)
+    vals = rng.normal(size=100).astype(np.float32)
+    vals[::7] = np.nan
+    sk = S.build_sketch(jnp.asarray(keys), jnp.asarray(vals), n=128)
+    assert int(sk.n_valid()) == int(np.isfinite(vals).sum())
+    assert np.isfinite(np.asarray(sk.values())).all()
+    assert float(sk.rows) == float(np.isfinite(vals).sum())
+
+
+def test_distinct_estimate_accuracy(rng):
+    for d in (1000, 20000):
+        keys = rng.choice(1 << 30, size=d, replace=False).astype(np.uint32)
+        vals = rng.normal(size=d).astype(np.float32)
+        sk = S.build_sketch(jnp.asarray(keys), jnp.asarray(vals), n=256)
+        est = float(sk.distinct_estimate())
+        assert abs(est - d) / d < 0.25, (d, est)
+
+
+def test_small_table_exact():
+    keys = np.array([1, 2, 3], np.uint32)
+    vals = np.array([1.0, 2.0, 3.0], np.float32)
+    sk = S.build_sketch(jnp.asarray(keys), jnp.asarray(vals), n=64)
+    assert int(sk.n_valid()) == 3
+    assert float(sk.distinct_estimate()) == 3.0  # not full ⇒ exact count
+
+
+def test_stack_sketches(rng):
+    sks = [S.build_sketch(jnp.asarray(rng.integers(0, 100, 50).astype(np.uint32)),
+                          jnp.asarray(rng.normal(size=50).astype(np.float32)), n=32)
+           for _ in range(4)]
+    st_ = S.stack_sketches(sks)
+    assert st_.key_hash.shape == (4, 32)

