@@ -1,25 +1,44 @@
-"""§5.5 query evaluation: end-to-end top-k latency over an indexed corpus.
+"""§5.5 query evaluation: end-to-end top-k latency + batched throughput.
 
-Builds a sharded index and measures per-query latency (retrieve + score +
-rank, jitted), reporting the fraction under 100 ms / 200 ms as in §5.5.
+Builds a sharded index and measures
+
+  * the sequential single-query loop (one dispatch per query — the paper's
+    §5.5 setting, reporting the fraction under 100 ms / 200 ms), and
+  * the batched engine at B ∈ {1, 8, 32}: per-dispatch latency percentiles
+    and queries/sec, where one index scan is amortised over the batch.
+
+Emits a ``BENCH_query_latency.json`` artifact with p50/p90/p99 and
+throughput per batch size.
 """
 from __future__ import annotations
 
+import json
+import os
 import time
 
 import numpy as np
 import jax
-import jax.numpy as jnp
 
-from repro.core import build_sketch
 from repro.data.pipeline import Table, sbn_pair
 from repro.engine import index as IX
 from repro.engine import query as Q
+from repro.engine import serve as SV
 from repro.launch.mesh import make_host_mesh
+
+BATCH_SIZES = (1, 8, 32)
+ARTIFACT = "BENCH_query_latency.json"
+
+
+def _percentiles(lats_ms):
+    lats_ms = np.asarray(lats_ms)
+    return dict(p50=float(np.percentile(lats_ms, 50)),
+                p90=float(np.percentile(lats_ms, 90)),
+                p99=float(np.percentile(lats_ms, 99)))
 
 
 def run(n_tables: int = 512, n_queries: int = 40, n_sketch: int = 256,
-        n_rows: int = 10000, seed: int = 4):
+        n_rows: int = 10000, seed: int = 4, repeats: int = 3,
+        artifact: str | None = ARTIFACT):
     rng = np.random.default_rng(seed)
     tables, queries = [], []
     for i in range(n_tables):
@@ -33,27 +52,66 @@ def run(n_tables: int = 512, n_queries: int = 40, n_sketch: int = 256,
     idx = IX.build_index(tables, n=n_sketch, pad_to=pad)
     shard = IX.shard_for_mesh(idx, mesh)
     qcfg = Q.QueryConfig(k=10, scorer="s4")
-    qfn = Q.make_query_fn(mesh, shard.num_columns, n_sketch, qcfg)
 
-    lats = []
-    for i, qt in enumerate(queries):
-        qsk = build_sketch(jnp.asarray(qt.keys), jnp.asarray(qt.values), n=n_sketch)
-        qa = IX.query_arrays(qsk)
+    # -- sequential baseline: one dispatch per query -------------------------
+    qfn = Q.make_query_fn(mesh, shard.num_columns, n_sketch, qcfg)
+    qsks = SV.build_query_sketches([q.keys for q in queries],
+                                   [q.values for q in queries], n=n_sketch)
+    qas = [IX.query_arrays(jax.tree.map(lambda a, i=i: a[i], qsks))
+           for i in range(len(queries))]
+    seq_lats = []
+    for qa in qas:
         t0 = time.perf_counter()
-        s, g, r, m = qfn(*qa, shard)
-        jax.block_until_ready(s)
-        lats.append((time.perf_counter() - t0) * 1e3)
-    lats = np.array(lats[1:])  # drop compile
-    return dict(n_tables=n_tables, queries=len(lats),
-                mean_ms=float(lats.mean()), p50=float(np.percentile(lats, 50)),
-                p90=float(np.percentile(lats, 90)), p99=float(np.percentile(lats, 99)),
-                frac_under_100ms=float(np.mean(lats < 100)),
-                frac_under_200ms=float(np.mean(lats < 200)))
+        out = qfn(*qa, shard)
+        jax.block_until_ready(out)
+        seq_lats.append((time.perf_counter() - t0) * 1e3)
+    seq_lats_post = np.array(seq_lats[1:])  # drop compile
+    seq = dict(_percentiles(seq_lats_post),
+               mean_ms=float(seq_lats_post.mean()),
+               qps=(len(qas) - 1) / max(float(np.sum(seq_lats_post)) / 1e3, 1e-12),
+               frac_under_100ms=float(np.mean(seq_lats_post < 100)),
+               frac_under_200ms=float(np.mean(seq_lats_post < 200)))
+
+    # -- batched engine at B ∈ {1, 8, 32} ------------------------------------
+    batched = {}
+    prep = None
+    for B in BATCH_SIZES:
+        srv = SV.QueryServer(mesh, shard, qcfg, buckets=(B,), prep=prep)
+        srv.warmup()
+        prep = srv.prep()  # share the index sort structure across servers
+        for _ in range(repeats):
+            srv.query_batch(qsks)
+        stats = srv.throughput()
+        batched[B] = dict(p50=stats["dispatch_p50_ms"],
+                          p90=stats["dispatch_p90_ms"],
+                          p99=stats["dispatch_p99_ms"],
+                          dispatches=stats["dispatches"],
+                          per_query_ms=stats["per_query_ms"],
+                          qps=stats["qps"])
+
+    result = dict(n_tables=n_tables, queries=len(queries), n_sketch=n_sketch,
+                  seq=seq, batched=batched,
+                  speedup_b32_vs_seq=batched[32]["qps"] / max(seq["qps"], 1e-12))
+    if artifact:
+        with open(artifact, "w") as f:
+            json.dump(result, f, indent=2)
+
+    # flat record for the benchmarks/run.py CSV printer
+    flat = dict(n_tables=n_tables, queries=len(queries))
+    for k, v in seq.items():
+        flat[f"seq_{k}"] = v
+    for B, rec in batched.items():
+        for k in ("p50", "p90", "p99", "per_query_ms", "qps"):
+            flat[f"b{B}_{k}"] = rec[k]
+    flat["speedup_b32_vs_seq"] = result["speedup_b32_vs_seq"]
+    return flat
 
 
 def main():
     r = run()
-    print("sec5p5_query_latency," + ",".join(f"{k}={v}" for k, v in r.items()))
+    print("sec5p5_query_latency," + ",".join(f"{k}={v:.4g}" if isinstance(v, float)
+                                             else f"{k}={v}" for k, v in r.items()))
+    print(f"wrote {os.path.abspath(ARTIFACT)}")
 
 
 if __name__ == "__main__":

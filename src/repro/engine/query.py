@@ -1,4 +1,4 @@
-"""Distributed top-k join-correlation query evaluation.
+"""Distributed top-k join-correlation query evaluation, single or batched.
 
 Per query (paper Defn. 3, engine form):
 
@@ -14,6 +14,14 @@ Per query (paper Defn. 3, engine form):
 
 ``make_query_fn`` returns a jitted shard_map program; the same code runs on
 1 CPU device (tests) or the 512-chip production mesh (dry-run).
+
+Batched mode (``batch=B``): the same program scores B query sketches against
+every shard in one dispatch — query arrays carry a leading ``[B]`` axis, the
+intersect kernels are vmapped over it (bit-identical per row to the
+single-query path), the s4 normalisation collectives reduce a ``[B]`` vector
+(per-query min/max, *not* pooled across the batch), and the result is
+``[B, k]``. One index scan is amortised over the whole request batch — see
+``repro.engine.serve`` for the bucketing/caching layer on top.
 """
 from __future__ import annotations
 
@@ -30,6 +38,10 @@ from jax.experimental.shard_map import shard_map
 from repro.engine.index import IndexShard
 from repro.kernels import ops as K
 from repro.kernels.ops import KernelConfig
+
+#: sentinel key hash for padded candidate slots — never matches a real key
+#: because real slots are masked separately anyway.
+_PAD_KEY = np.uint32(0xFFFFFFFF)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -63,11 +75,15 @@ def _sortmerge_moments(q_kh, q_val, q_mask, kh, vals, mask):
     default; the Pallas kernel keeps the n² tile in VMEM instead.
     """
     PAD = jnp.uint32(0xFFFFFFFF)
-    qk = jnp.where(q_mask > 0, q_kh, PAD)
+    # A real key hashing to the PAD sentinel is treated as non-matchable on
+    # both the single and batched sortmerge paths (keeps them bit-identical;
+    # the sentinel is indistinguishable from padding once sorted).
+    q_eff = jnp.where(q_kh != PAD, q_mask, 0.0)
+    qk = jnp.where(q_eff > 0, q_kh, PAD)
     order = jnp.argsort(qk)
     qk_s = qk[order]
-    qv_s = (q_val * q_mask)[order]
-    qm_s = q_mask[order]
+    qv_s = (q_val * q_eff)[order]
+    qm_s = q_eff[order]
 
     ck = jnp.where(mask > 0, kh, PAD)               # [C, n]
     pos = jnp.searchsorted(qk_s, ck.reshape(-1)).reshape(ck.shape)
@@ -81,60 +97,219 @@ def _sortmerge_moments(q_kh, q_val, q_mask, kh, vals, mask):
     return mom, a, b, w
 
 
-def _score_block(q_kh, q_val, q_mask, kh, vals, mask, qcfg: QueryConfig):
-    """moments → (r, m) for one candidate block."""
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class PreppedShard:
+    """Precomputed candidate-side sort structure for the batched intersect.
+
+    Both arrays are laid out like the (padded, per-``score_chunk``-block)
+    index: for each block of ``chunk`` candidate rows, ``dk`` holds the
+    block's sorted distinct-key table (flat length chunk·n, PAD-filled tail)
+    and ``sid`` maps every original slot to its segment id in that table
+    (``chunk·n`` = the never-written dump column for invalid slots). They
+    depend only on (index keys, score_chunk) — compute once per index with
+    ``make_prep_fn`` and reuse for every dispatch.
+    """
+    dk: jnp.ndarray    # u32 [Cp, n]
+    sid: jnp.ndarray   # i32 [Cp, n]
+
+
+def _prep_block(kh, mask):
+    """Sort one candidate block's keys into the (dk, sid) lookup structure."""
+    Mb = kh.shape[0] * kh.shape[1]
+    PAD = jnp.uint32(0xFFFFFFFF)
+    ck = jnp.where(mask > 0, kh, PAD).reshape(-1)            # [Mb]
+    sort_idx = jnp.argsort(ck)
+    ck_s = ck[sort_idx]
+    new_seg = jnp.concatenate([jnp.ones((1,), jnp.int32),
+                               (ck_s[1:] != ck_s[:-1]).astype(jnp.int32)])
+    seg_sorted = jnp.cumsum(new_seg) - 1                     # [Mb], segment ids
+    # dk[s] = key of segment s (every write in a segment carries the same
+    # key); unfilled tail stays PAD so dk is ascending end to end
+    dk = jnp.full((Mb,), PAD, ck.dtype).at[seg_sorted].set(ck_s)
+    # original slot → segment id, via the inverse permutation (scatter, not
+    # a second argsort); invalid candidate slots point at the never-written
+    # dump column Mb
+    rank = jnp.zeros((Mb,), jnp.int32).at[sort_idx].set(
+        jnp.arange(Mb, dtype=jnp.int32))
+    sid = seg_sorted[rank]
+    sid = jnp.where(mask.reshape(-1) > 0, sid, Mb)
+    return dk.reshape(kh.shape), sid.reshape(kh.shape).astype(jnp.int32)
+
+
+def _sortmerge_moments_batched(q_kh, q_val, q_mask, kh, vals, mask, prep=None):
+    """Leading-query-axis sortmerge: q_* are [B, n_q], candidates shared.
+
+    This is where batching actually pays: the candidate keys are sorted into
+    a distinct-key segment table *shared across the whole batch* (and across
+    dispatches, when a precomputed ``prep`` is passed — see ``make_prep_fn``),
+    each query's n_q keys binary-search that shared table (1-D searches —
+    XLA CPU collapses batch-dim gathers into scalar loops, so a naive
+    per-row vmap of `_sortmerge_moments` is slower than the sequential loop
+    it replaces), membership lands in a ``[B, D]`` table with one scatter
+    per query key, and a shared-index gather fans it back out to
+    ``[B, C, n]``.
+
+    Exactness: every float that comes out is either an untouched copy of a
+    query/candidate value or a true zero (sketch keys are distinct within a
+    row, so each membership cell is written at most once — no accumulation),
+    and the final moment sums run over the same slot order as the
+    single-query path. Batched results are therefore bit-identical to B
+    sequential calls.
+    """
+    B, nq = q_kh.shape
+    C, n = kh.shape
+    M = C * n
+    # the membership scatter below runs in int32 flat index space
+    assert B * (M + 1) < 2**31, (
+        f"batch {B} × block {M} overflows int32 scatter indices; "
+        f"lower QueryConfig.score_chunk")
+    PAD = jnp.uint32(0xFFFFFFFF)
+
+    if prep is None:
+        dk, sid = _prep_block(kh, mask)
+    else:
+        dk, sid = prep
+    dk = dk.reshape(-1)
+    sid = sid.reshape(-1)
+
+    # -- per-query membership: one 1-D search + one scatter per key ---------
+    qk = jnp.where(q_mask > 0, q_kh, PAD)                    # [B, nq]
+    qv = (q_val * q_mask).reshape(-1)
+    pos = jnp.clip(jnp.searchsorted(dk, qk.reshape(-1)), 0, M - 1)
+    hit = (dk[pos] == qk.reshape(-1)) & (q_mask.reshape(-1) > 0) \
+        & (qk.reshape(-1) != PAD)
+    row = jnp.repeat(jnp.arange(B, dtype=jnp.int32), nq) * (M + 1)
+    # misses target index B*(M+1): out of bounds → dropped by the scatter
+    flat = jnp.where(hit, row + pos.astype(jnp.int32), B * (M + 1))
+    q_hit = jnp.zeros((B * (M + 1),), jnp.float32).at[flat].set(1.0)
+    q_val_tab = jnp.zeros((B * (M + 1),), jnp.float32).at[flat].set(qv)
+
+    # -- fan back out with the shared per-slot segment ids ------------------
+    w = jnp.take(q_hit.reshape(B, M + 1), sid, axis=-1).reshape(B, C, n)
+    a = jnp.take(q_val_tab.reshape(B, M + 1), sid, axis=-1).reshape(B, C, n)
+    b = vals[None] * w
+    mom = jnp.stack([w.sum(-1), a.sum(-1), b.sum(-1), (a * a).sum(-1),
+                     (b * b).sum(-1), (a * b).sum(-1)], -1)
+    return mom, a, b, w
+
+
+def _rank_rows(x, w, qcfg: QueryConfig):
+    """rank_transform over the last axis for arbitrary leading dims."""
+    shape = x.shape
+    r = K.rank_transform(x.reshape(-1, shape[-1]), w.reshape(-1, shape[-1]),
+                         qcfg.kernels)
+    return r.reshape(shape)
+
+
+def _score_block(q_kh, q_val, q_mask, kh, vals, mask, qcfg: QueryConfig,
+                 prep=None):
+    """moments → (r, m) for one candidate block.
+
+    Query arrays are ``[n_q]`` (single) or ``[B, n_q]`` (batched); candidate
+    arrays are always ``[C, n]``. Returns moments ``[..., C, 6]``, r ``[..., C]``.
+    """
+    batched = q_kh.ndim == 2
     if qcfg.kernels.backend == "xla" and qcfg.intersect == "sortmerge":
-        mom, a, b, w = _sortmerge_moments(q_kh, q_val, q_mask, kh, vals, mask)
+        if batched:
+            mom, a, b, w = _sortmerge_moments_batched(
+                q_kh, q_val, q_mask, kh, vals, mask, prep=prep)
+        else:
+            mom, a, b, w = _sortmerge_moments(q_kh, q_val, q_mask, kh, vals, mask)
         if qcfg.estimator == "spearman":
-            ra = K.rank_transform(a, w, qcfg.kernels)
-            rb = K.rank_transform(b, w, qcfg.kernels)
+            ra = _rank_rows(a, w, qcfg)
+            rb = _rank_rows(b, w, qcfg)
             r = K.pearson_from_moments(_moments_from(ra, rb, w))
         else:
             r = K.pearson_from_moments(mom)
         return mom, r
-    mom, aligned, hit = K.sketch_join_moments(
-        q_kh, q_val, q_mask, kh, vals, mask, qcfg.kernels)
+    join = (K.sketch_join_moments_batched if batched else K.sketch_join_moments)
+    mom, aligned, hit = join(q_kh, q_val, q_mask, kh, vals, mask, qcfg.kernels)
     if qcfg.estimator == "spearman":
-        qv = jnp.broadcast_to(q_val[None, :] * hit, aligned.shape)
-        ra = K.rank_transform(qv, hit, qcfg.kernels)
-        rb = K.rank_transform(aligned, hit, qcfg.kernels)
+        qv = jnp.broadcast_to(q_val[..., None, :] * hit, aligned.shape)
+        ra = _rank_rows(qv, hit, qcfg)
+        rb = _rank_rows(aligned, hit, qcfg)
         r = K.pearson_from_moments(_moments_from(ra, rb, hit))
     else:
         r = K.pearson_from_moments(mom)
     return mom, r
 
 
-def score_shard(q_kh, q_val, q_mask, q_cmin, q_cmax, shard: IndexShard,
-                qcfg: QueryConfig, axis_names=None):
-    """Score every candidate in a shard; returns (scores, r, m, ci_len).
+def _chunk_layout(C: int, score_chunk: int):
+    """(chunk, pad, nb) of the candidate streaming loop for a C-row shard."""
+    chunk = min(score_chunk, C)
+    pad = (-C) % chunk
+    return chunk, pad, (C + pad) // chunk
+
+
+def _shard_stats(q_kh, q_val, q_mask, q_cmin, q_cmax, shard: IndexShard,
+                 qcfg: QueryConfig, prep: Optional[PreppedShard] = None):
+    """Chunked scan over a shard's candidates → (r, m, ci_len), each [..., C].
 
     Candidates stream through in ``score_chunk`` blocks under ``lax.map`` so
     the (chunk, n_q, n) match tensor stays O(chunk·n²) regardless of shard
     size (§Perf E1 — a 2 M-column index would otherwise need a TB-scale
-    equality tensor per device).
+    equality tensor per device). Shards whose size is not a chunk multiple
+    are padded up with masked candidates (dropped again before returning) —
+    memory stays bounded for any C.
     """
+    batched = q_kh.ndim == 2
     C = shard.key_hash.shape[0]
-    chunk = min(qcfg.score_chunk, C)
-    if C % chunk == 0 and C > chunk:
-        nb = C // chunk
+    chunk, pad, nb = _chunk_layout(C, qcfg.score_chunk)
+    kh, vals, mask = shard.key_hash, shard.values, shard.mask
+    if pad:
+        kh = jnp.pad(kh, ((0, pad), (0, 0)), constant_values=_PAD_KEY)
+        vals = jnp.pad(vals, ((0, pad), (0, 0)))
+        mask = jnp.pad(mask, ((0, pad), (0, 0)))
+    Cp = C + pad
+    if prep is not None:
+        assert prep.dk.shape[0] == Cp, (prep.dk.shape, Cp)
+    if nb > 1:
         resh = lambda a: a.reshape((nb, chunk) + a.shape[1:])
+        have_prep = prep is not None
+        blocks_prep = ((resh(prep.dk), resh(prep.sid)) if have_prep
+                       else (jnp.zeros((nb, 0)), jnp.zeros((nb, 0))))
 
         def one(args):
-            kh, vals, mask = args
-            return _score_block(q_kh, q_val, q_mask, kh, vals, mask, qcfg)
+            ckh, cvals, cmask, cdk, csid = args
+            return _score_block(q_kh, q_val, q_mask, ckh, cvals, cmask, qcfg,
+                                prep=(cdk, csid) if have_prep else None)
 
-        mom, r = jax.lax.map(one, (resh(shard.key_hash), resh(shard.values),
-                                   resh(shard.mask)))
-        mom = mom.reshape(C, mom.shape[-1])
-        r = r.reshape(C)
+        mom, r = jax.lax.map(one, (resh(kh), resh(vals), resh(mask),
+                                   *blocks_prep))
+        # lax.map stacks the chunk axis in front: [nb, ..., chunk, ·] → [..., Cp, ·]
+        mom = jnp.moveaxis(mom, 0, -3).reshape(q_kh.shape[:-1] + (Cp, mom.shape[-1]))
+        r = jnp.moveaxis(r, 0, -2).reshape(q_kh.shape[:-1] + (Cp,))
+        mom = mom[..., :C, :]
+        r = r[..., :C]
     else:
-        mom, r = _score_block(q_kh, q_val, q_mask, shard.key_hash,
-                              shard.values, shard.mask, qcfg)
-    m = mom[:, 0]
-    c_lo = jnp.minimum(q_cmin, shard.col_min)
-    c_hi = jnp.maximum(q_cmax, shard.col_max)
+        mom, r = _score_block(q_kh, q_val, q_mask, kh, vals, mask, qcfg,
+                              prep=(prep.dk, prep.sid) if prep is not None else None)
+    m = mom[..., 0]
+    if batched:
+        c_lo = jnp.minimum(q_cmin[:, None], shard.col_min[None, :])
+        c_hi = jnp.maximum(q_cmax[:, None], shard.col_max[None, :])
+    else:
+        c_lo = jnp.minimum(q_cmin, shard.col_min)
+        c_hi = jnp.maximum(q_cmax, shard.col_max)
     lo, hi = K.hoeffding_from_moments(mom, c_lo, c_hi, alpha=qcfg.alpha)
-    ci_len = hi - lo
+    return r, m, hi - lo
+
+
+def score_shard(q_kh, q_val, q_mask, q_cmin, q_cmax, shard: IndexShard,
+                qcfg: QueryConfig, axis_names=None,
+                prep: Optional[PreppedShard] = None):
+    """Score every candidate in a shard; returns (scores, r, m, ci_len).
+
+    Accepts a single query (``q_kh: [n_q]``) or a batch (``q_kh: [B, n_q]``,
+    ``q_cmin/q_cmax: [B]``); outputs gain the same leading axis. The s4
+    normalisation is computed per query row — a ``[B]`` pmin/pmax across
+    shards — so each batched query sees exactly the normalisation it would
+    get alone. ``prep`` (batched sortmerge path only) supplies the
+    precomputed candidate sort structure so it is not rebuilt per dispatch.
+    """
+    r, m, ci_len = _shard_stats(q_kh, q_val, q_mask, q_cmin, q_cmax, shard,
+                                qcfg, prep=prep)
     eligible = m >= qcfg.min_sample
 
     if qcfg.scorer == "s1":
@@ -142,51 +317,109 @@ def score_shard(q_kh, q_val, q_mask, q_cmin, q_cmax, shard: IndexShard,
     elif qcfg.scorer == "s2":
         se_z = 1.0 - 1.0 / jnp.sqrt(jnp.maximum(m, 4.0) - 3.0)
         s = jnp.abs(r) * se_z
-    else:  # s4: globally list-normalised Hoeffding CI factor
+    else:  # s4: globally list-normalised Hoeffding CI factor, per query row
         big = jnp.float32(3.4e38)
-        lmin = jnp.min(jnp.where(eligible, ci_len, big))
-        lmax = jnp.max(jnp.where(eligible, ci_len, -big))
+        lmin = jnp.min(jnp.where(eligible, ci_len, big), axis=-1)
+        lmax = jnp.max(jnp.where(eligible, ci_len, -big), axis=-1)
         if axis_names:  # global normalisation across shards
             lmin = jax.lax.pmin(lmin, axis_names)
             lmax = jax.lax.pmax(lmax, axis_names)
         rng = jnp.maximum(lmax - lmin, 1e-12)
-        f = jnp.clip(1.0 - (jnp.minimum(ci_len, lmax) - lmin) / rng, 0.0, 1.0)
+        f = jnp.clip(1.0 - (jnp.minimum(ci_len, lmax[..., None]) - lmin[..., None])
+                     / rng[..., None], 0.0, 1.0)
         s = jnp.abs(r) * f
     s = jnp.where(eligible, s, -jnp.inf)
     return s, r, m, ci_len
 
 
-def make_query_fn(mesh, C_total: int, n: int, qcfg: QueryConfig):
-    """Build the jitted distributed query program for a given index shape."""
+def make_prep_fn(mesh, C_total: int, n: int, qcfg: QueryConfig):
+    """Build a jitted program that precomputes the per-shard candidate sort
+    structure (`PreppedShard`) for the batched query path. Run it once per
+    resident index + score_chunk config; pass its result to the query
+    program built with ``make_query_fn(..., batch=B, with_prep=True)``.
+    """
     axes = tuple(mesh.axis_names)
     ndev = int(mesh.devices.size)
     assert C_total % ndev == 0
+
+    def local(shard: IndexShard):
+        kh, mask = shard.key_hash, shard.mask
+        C = kh.shape[0]
+        chunk, pad, nb = _chunk_layout(C, qcfg.score_chunk)
+        if pad:
+            kh = jnp.pad(kh, ((0, pad), (0, 0)), constant_values=_PAD_KEY)
+            mask = jnp.pad(mask, ((0, pad), (0, 0)))
+        resh = lambda a: a.reshape((nb, chunk) + a.shape[1:])
+        dk, sid = jax.lax.map(lambda ab: _prep_block(*ab),
+                              (resh(kh), resh(mask)))
+        return PreppedShard(dk=dk.reshape(C + pad, n),
+                            sid=sid.reshape(C + pad, n))
+
+    spec = P(axes)
+    shard_specs = IndexShard(key_hash=spec, values=spec, mask=spec,
+                             col_min=spec, col_max=spec, rows=spec)
+    fn = shard_map(local, mesh=mesh, in_specs=(shard_specs,),
+                   out_specs=PreppedShard(dk=spec, sid=spec),
+                   check_rep=False)
+    return jax.jit(fn)
+
+
+def make_query_fn(mesh, C_total: int, n: int, qcfg: QueryConfig,
+                  batch: Optional[int] = None, with_prep: bool = False):
+    """Build the jitted distributed query program for a given index shape.
+
+    ``batch=None`` keeps the legacy single-query signature (query arrays
+    ``[n]``, results ``[k]``). ``batch=B`` compiles a program that takes
+    query arrays with a leading ``[B]`` axis and returns ``[B, k]`` results
+    bit-identical to B sequential single-query calls, while scanning the
+    index once per dispatch instead of once per query. With
+    ``with_prep=True`` (batched only) the returned callable takes a trailing
+    `PreppedShard` operand (from ``make_prep_fn``) so the candidate sort
+    structure is resident instead of rebuilt per dispatch.
+    """
+    axes = tuple(mesh.axis_names)
+    ndev = int(mesh.devices.size)
+    assert C_total % ndev == 0
+    assert not (with_prep and batch is None), "prep applies to the batched path"
     k = qcfg.k
 
-    def local(q_kh, q_val, q_mask, q_cmin, q_cmax, shard: IndexShard):
+    def local(q_kh, q_val, q_mask, q_cmin, q_cmax, shard: IndexShard,
+              *rest):
+        if batch is not None:  # the advertised static batch size is binding
+            assert q_kh.shape[0] == batch, (q_kh.shape, batch)
+        else:
+            assert q_kh.ndim == 1, q_kh.shape
         s, r, m, _ = score_shard(q_kh, q_val, q_mask, q_cmin, q_cmax, shard,
-                                 qcfg, axis_names=axes)
-        kk = min(k, s.shape[0])
+                                 qcfg, axis_names=axes,
+                                 prep=rest[0] if rest else None)
+        Cl = s.shape[-1]
+        kk = min(k, Cl)
         top_s, top_i = jax.lax.top_k(s, kk)
         # global candidate ids: shard offset + local index
         lin = jax.lax.axis_index(axes[0])
         for ax in axes[1:]:
             lin = lin * jax.lax.axis_size(ax) + jax.lax.axis_index(ax)
-        gids = top_i.astype(jnp.int32) + lin.astype(jnp.int32) * s.shape[0]
-        # gather the per-device top-k everywhere (tiny)
-        all_s = jax.lax.all_gather(top_s, axes, tiled=True)
-        all_g = jax.lax.all_gather(gids, axes, tiled=True)
-        all_r = jax.lax.all_gather(r[top_i], axes, tiled=True)
-        all_m = jax.lax.all_gather(m[top_i], axes, tiled=True)
+        gids = top_i.astype(jnp.int32) + lin.astype(jnp.int32) * Cl
+        # gather the per-device top-k everywhere (tiny); concat on the
+        # candidate axis — the last one — so batched rows stay separate
+        cat = s.ndim - 1
+        gather = lambda x: jax.lax.all_gather(x, axes, axis=cat, tiled=True)
+        all_s = gather(top_s)
+        all_g = gather(gids)
+        all_r = gather(jnp.take_along_axis(r, top_i, axis=-1))
+        all_m = gather(jnp.take_along_axis(m, top_i, axis=-1))
         fs, fi = jax.lax.top_k(all_s, k)
-        return fs, all_g[fi], all_r[fi], all_m[fi]
+        take = lambda x: jnp.take_along_axis(x, fi, axis=-1)
+        return fs, take(all_g), take(all_r), take(all_m)
 
     spec_sharded = P(axes)
     shard_specs = IndexShard(
         key_hash=spec_sharded, values=spec_sharded, mask=spec_sharded,
         col_min=spec_sharded, col_max=spec_sharded, rows=spec_sharded)
-    fn = shard_map(local, mesh=mesh,
-                   in_specs=(P(), P(), P(), P(), P(), shard_specs),
+    in_specs = (P(), P(), P(), P(), P(), shard_specs)
+    if with_prep:
+        in_specs += (PreppedShard(dk=spec_sharded, sid=spec_sharded),)
+    fn = shard_map(local, mesh=mesh, in_specs=in_specs,
                    out_specs=(P(), P(), P(), P()),
                    check_rep=False)  # outputs are replicated by construction
     return jax.jit(fn)

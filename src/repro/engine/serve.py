@@ -1,0 +1,222 @@
+"""Batched request serving on top of the distributed query engine.
+
+The engine (`repro.engine.query`) compiles one program per (batch, index
+shape, config); this module is the request-facing layer that makes those
+programs serve an arbitrary query stream efficiently:
+
+  * **batched sketch construction** — incoming query columns are cut into
+    fixed-length row chunks, sketched with one vmapped `build_sketch` call,
+    and the per-query chunk sketches folded with the (exact) KMV merge;
+  * **pad-to-bucket batching** — request batches are padded up to a small
+    set of bucket sizes (default 1/8/32) so the compile cache stays tiny
+    while any batch size is served;
+  * **compile cache** — programs are cached on ``(B, C, n, qcfg)``; warming
+    the buckets once makes every later dispatch compile-free.
+
+Padding rows are copies of the last real query; because the s4 normalisation
+is per query row, they cannot perturb real results, and they are sliced off
+before returning.
+"""
+from __future__ import annotations
+
+import time
+from collections import deque
+from typing import Deque, Dict, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.sketch import Agg, CorrelationSketch, build_sketch, merge
+from repro.engine import query as Q
+from repro.engine.index import IndexShard, query_arrays
+
+
+def build_query_sketches(keys_list: Sequence[np.ndarray],
+                         values_list: Sequence[np.ndarray], *,
+                         n: int, agg: Agg = Agg.MEAN,
+                         chunk: int = 8192) -> CorrelationSketch:
+    """Sketch a batch of query columns in one vmapped pass.
+
+    Every column is padded to a common number of fixed-length ``chunk`` row
+    blocks (validity-masked), all blocks are sketched with a single vmapped
+    `build_sketch`, and each query's block sketches are folded with the KMV
+    merge — exact by the closure property, identical to sketching each
+    column alone. Returns a `CorrelationSketch` whose leaves carry a leading
+    ``[NQ]`` axis, ready for `repro.engine.index.query_arrays`.
+    """
+    assert len(keys_list) == len(values_list) and keys_list, "empty query batch"
+    nq = len(keys_list)
+    # ragged layout: only real chunks are materialised and sketched, so one
+    # long query costs its own chunks, not nq × its chunk count. (The fold
+    # below still runs max-chunk-count rounds over all nq rows, but each
+    # round is an n-sized merge — noise next to the chunk-sized builds.)
+    counts = [max(1, -(-len(k) // chunk)) for k in keys_list]
+    starts = np.cumsum([0] + counts)
+    total = int(starts[-1])
+    keys = np.zeros((total, chunk), np.uint32)
+    vals = np.zeros((total, chunk), np.float32)
+    valid = np.zeros((total, chunk), bool)
+    offs = np.zeros((total,), np.float32)
+    for i, (k, v) in enumerate(zip(keys_list, values_list)):
+        m = len(k)
+        s = starts[i]
+        flat_k = np.zeros(counts[i] * chunk, np.uint32)
+        flat_v = np.zeros(counts[i] * chunk, np.float32)
+        flat_k[:m] = np.asarray(k, np.uint32)
+        flat_v[:m] = np.asarray(v, np.float32)
+        keys[s:s + counts[i]] = flat_k.reshape(counts[i], chunk)
+        vals[s:s + counts[i]] = flat_v.reshape(counts[i], chunk)
+        valid[s:s + counts[i]] = (np.arange(counts[i] * chunk) < m).reshape(
+            counts[i], chunk)
+        offs[s:s + counts[i]] = np.arange(counts[i], dtype=np.float32) * chunk
+
+    build = jax.vmap(lambda k, v, ok, off: build_sketch(
+        k, v, n=n, agg=agg, valid=ok, order_offset=off))
+    parts = build(jnp.asarray(keys), jnp.asarray(vals), jnp.asarray(valid),
+                  jnp.asarray(offs))
+
+    # fold round j merges chunk j into every query that still has one;
+    # exhausted queries keep their fold result via the per-row select
+    out = jax.tree.map(lambda a: a[jnp.asarray(starts[:-1])], parts)
+    for j in range(1, max(counts)):
+        sel = np.array([starts[i] + j if counts[i] > j else 0 for i in range(nq)])
+        has = jnp.asarray(np.array([counts[i] > j for i in range(nq)]))
+        nxt = jax.tree.map(lambda a: a[jnp.asarray(sel)], parts)
+        merged = jax.vmap(merge)(out, nxt)
+        out = jax.tree.map(
+            lambda m_, o: jnp.where(has.reshape((nq,) + (1,) * (o.ndim - 1)), m_, o),
+            merged, out)
+    return out
+
+
+class QueryServer:
+    """Bucketed multi-query serving over one resident sharded index."""
+
+    def __init__(self, mesh, shard: IndexShard, qcfg: Q.QueryConfig,
+                 buckets: Sequence[int] = (1, 8, 32), prep=None):
+        self.mesh = mesh
+        self.shard = shard
+        self.qcfg = qcfg
+        self.buckets = tuple(sorted(set(int(b) for b in buckets)))
+        assert self.buckets and all(b > 0 for b in self.buckets)
+        self.C = shard.num_columns
+        self.n = shard.sketch_size
+        self._cache: Dict[tuple, object] = {}
+        #: a PreppedShard built for the same (shard, qcfg) may be shared
+        #: across servers to avoid recomputing it (see `prep()`)
+        self._prep = prep
+        # only the XLA sortmerge intersect consumes the precomputed sort
+        # structure; don't build/ship two index-sized arrays otherwise
+        self._use_prep = (qcfg.kernels.backend == "xla"
+                          and qcfg.intersect == "sortmerge")
+        #: per-dispatch telemetry: (bucket B, real queries, seconds) — a
+        #: bounded window so a long-lived server doesn't leak; totals for
+        #: qps are kept separately and never reset
+        self.dispatch_log: Deque[Tuple[int, int, float]] = deque(maxlen=4096)
+        self._total_queries = 0
+        self._total_dispatches = 0
+        self._total_s = 0.0
+
+    # -- compile cache -------------------------------------------------------
+    def prep(self):
+        """Device-resident candidate sort structure (built once per index)."""
+        if not self._use_prep:
+            return None
+        if self._prep is None:
+            fn = Q.make_prep_fn(self.mesh, self.C, self.n, self.qcfg)
+            self._prep = jax.block_until_ready(fn(self.shard))
+        return self._prep
+
+    def query_fn(self, B: int):
+        key = (B, self.C, self.n, self.qcfg)
+        fn = self._cache.get(key)
+        if fn is None:
+            fn = Q.make_query_fn(self.mesh, self.C, self.n, self.qcfg,
+                                 batch=B, with_prep=self._use_prep)
+            self._cache[key] = fn
+        return fn
+
+    def warmup(self):
+        """Compile every bucket program once (zero-row dummy queries)."""
+        for B in self.buckets:
+            qa = (jnp.full((B, self.n), 0xFFFFFFFF, jnp.uint32),
+                  jnp.zeros((B, self.n), jnp.float32),
+                  jnp.zeros((B, self.n), jnp.float32),
+                  jnp.zeros((B,), jnp.float32), jnp.zeros((B,), jnp.float32))
+            jax.block_until_ready(self.query_fn(B)(*qa, self.shard,
+                                                   *self._prep_args()))
+
+    def _prep_args(self):
+        prep = self.prep()
+        return (prep,) if prep is not None else ()
+
+    # -- batching ------------------------------------------------------------
+    def bucket_for(self, nq: int) -> int:
+        for b in self.buckets:
+            if b >= nq:
+                return b
+        return self.buckets[-1]
+
+    def _dispatch(self, qa, nq: int):
+        """Run one ≤max-bucket slice: pad to its bucket, query, slice back."""
+        B = self.bucket_for(nq)
+        pad = B - nq
+        if pad:
+            qa = tuple(jnp.concatenate(
+                [a, jnp.broadcast_to(a[nq - 1:nq], (pad,) + a.shape[1:])])
+                for a in qa)
+        prep_args = self._prep_args()
+        t0 = time.perf_counter()
+        out = self.query_fn(B)(*qa, self.shard, *prep_args)
+        jax.block_until_ready(out)
+        dt = time.perf_counter() - t0
+        self.dispatch_log.append((B, nq, dt))
+        self._total_queries += nq
+        self._total_dispatches += 1
+        self._total_s += dt
+        return tuple(o[:nq] for o in out)
+
+    def query_batch(self, sketches: CorrelationSketch):
+        """Serve a batch of query sketches (leading [NQ] axis) → [NQ, k] results.
+
+        Batches larger than the biggest bucket are served in max-bucket
+        slices; the tail slice pads up to the smallest fitting bucket. Only
+        the real queries' rows are returned.
+        """
+        qa = query_arrays(sketches)
+        nq = int(qa[0].shape[0])
+        if nq == 0:
+            empty = lambda dt: jnp.zeros((0, self.qcfg.k), dt)
+            return (empty(jnp.float32), empty(jnp.int32),
+                    empty(jnp.float32), empty(jnp.float32))
+        bmax = self.buckets[-1]
+        outs = []
+        for s in range(0, nq, bmax):
+            e = min(s + bmax, nq)
+            outs.append(self._dispatch(tuple(a[s:e] for a in qa), e - s))
+        return tuple(jnp.concatenate(parts) for parts in zip(*outs))
+
+    def query_columns(self, keys_list, values_list, *, chunk: int = 8192):
+        """Convenience: raw query columns → sketches → batched top-k."""
+        sks = build_query_sketches(keys_list, values_list, n=self.n,
+                                   chunk=chunk)
+        return self.query_batch(sks)
+
+    # -- telemetry -----------------------------------------------------------
+    def throughput(self) -> dict:
+        """Latency/throughput numbers: lifetime totals for queries/qps,
+        percentiles over the bounded recent-dispatch window."""
+        if not self._total_queries:
+            return dict(queries=0, dispatches=0, total_s=0.0, qps=0.0,
+                        dispatch_p50_ms=0.0, dispatch_p90_ms=0.0,
+                        dispatch_p99_ms=0.0, per_query_ms=0.0)
+        lat_ms = np.array([t * 1e3 for _, _, t in self.dispatch_log])
+        return dict(
+            queries=self._total_queries, dispatches=self._total_dispatches,
+            total_s=self._total_s,
+            qps=self._total_queries / max(self._total_s, 1e-12),
+            dispatch_p50_ms=float(np.percentile(lat_ms, 50)),
+            dispatch_p90_ms=float(np.percentile(lat_ms, 90)),
+            dispatch_p99_ms=float(np.percentile(lat_ms, 99)),
+            per_query_ms=1e3 * self._total_s / max(self._total_queries, 1))

@@ -49,6 +49,23 @@ def sketch_join_moments(q_kh, q_val, q_mask, c_kh, c_val, c_mask,
     return _ref.sketch_join_moments(q_kh, q_val, q_mask, c_kh, c_val, c_mask)
 
 
+def sketch_join_moments_batched(q_kh, q_val, q_mask, c_kh, c_val, c_mask,
+                                cfg: KernelConfig = KernelConfig()):
+    """Batched-query join: q_* carry a leading [B] axis, candidates shared.
+
+    The Pallas kernel is single-query; batching goes through its vmap rule
+    (one grid launch per row). The XLA path uses the batched reference
+    oracle, which is bit-identical per row to the single-query call.
+    """
+    if cfg.use_pallas:
+        return jax.vmap(
+            lambda a, b, c: _sj.sketch_join_moments(
+                a, b, c.astype(jnp.float32), c_kh, c_val,
+                c_mask.astype(jnp.float32), interpret=cfg.interpret))(
+                    q_kh, q_val, q_mask)
+    return _ref.sketch_join_moments_batched(q_kh, q_val, q_mask, c_kh, c_val, c_mask)
+
+
 def rank_transform(x, mask, cfg: KernelConfig = KernelConfig()):
     if cfg.use_pallas:
         return _rt.rank_transform(x, mask, interpret=cfg.interpret)

@@ -48,6 +48,20 @@ def sketch_join_moments(q_kh, q_val, q_mask, c_kh, c_val, c_mask):
     return moments, aligned_b, hit
 
 
+def sketch_join_moments_batched(q_kh, q_val, q_mask, c_kh, c_val, c_mask):
+    """Leading-query-axis variant: q_* are [B, nq], candidates are shared
+    [C, n]; returns (moments [B, C, 6], aligned_b [B, C, nq], hit [B, C, nq]).
+
+    Implemented as a vmap of the single-query oracle so each batch row's
+    floating-point schedule — and therefore its result, bitwise — matches a
+    standalone call. This is the semantic ground truth for the batched
+    engine path (`repro.engine.query.make_query_fn(..., batch=B)`).
+    """
+    return jax.vmap(
+        lambda a, b, c: sketch_join_moments(a, b, c, c_kh, c_val, c_mask))(
+            q_kh, q_val, q_mask)
+
+
 def pearson_from_moments(moments):
     """Pearson r per candidate from the 6 accumulated moments."""
     m, sa, sb, saa, sbb, sab = [moments[..., i] for i in range(6)]

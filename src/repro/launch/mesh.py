@@ -21,6 +21,21 @@ def make_production_mesh(*, multi_pod: bool = False):
     return jax.make_mesh(shape, axes)
 
 
+def make_abstract_mesh(shape: tuple[int, ...], axis_names: tuple[str, ...]):
+    """Version-compatible ``jax.sharding.AbstractMesh`` constructor.
+
+    jax ≤ 0.4.x takes one tuple of (name, size) pairs; newer releases take
+    positional (axis_sizes, axis_names). Device-free either way, so sharding
+    rules can be evaluated without real hardware.
+    """
+    from jax.sharding import AbstractMesh
+
+    try:
+        return AbstractMesh(tuple(zip(axis_names, shape)))
+    except TypeError:
+        return AbstractMesh(tuple(shape), tuple(axis_names))
+
+
 def make_host_mesh(ndev: int | None = None, name: str = "shard"):
     """Flat mesh over however many (possibly fake) devices exist — used by
     the engine (column-sharded index) and CPU tests."""

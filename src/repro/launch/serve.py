@@ -25,6 +25,9 @@ def main():
     ap.add_argument("--scorer", default="s4", choices=("s1", "s2", "s4"))
     ap.add_argument("--rows-max", type=int, default=20000)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--batch", type=int, default=0,
+                    help="serve through the batched engine with this request "
+                         "batch size (0 = sequential single-query loop)")
     args = ap.parse_args()
 
     import jax
@@ -33,6 +36,7 @@ def main():
     from repro.data.pipeline import Table, sbn_pair, skewed_pair
     from repro.engine import index as IX
     from repro.engine import query as Q
+    from repro.engine import serve as SV
     from repro.launch.mesh import make_host_mesh
 
     rng = np.random.default_rng(args.seed)
@@ -57,6 +61,25 @@ def main():
     shard = IX.shard_for_mesh(idx, mesh)
 
     qcfg = Q.QueryConfig(k=args.k, estimator=args.estimator, scorer=args.scorer)
+
+    if args.batch > 0:
+        # only buckets the request loop can actually select (≤ args.batch)
+        buckets = tuple(b for b in (1, 8, 32) if b < args.batch) + (args.batch,)
+        srv = SV.QueryServer(mesh, shard, qcfg, buckets=buckets)
+        srv.warmup()
+        qsks = SV.build_query_sketches([q.keys for q in queries],
+                                       [q.values for q in queries],
+                                       n=args.sketch_size)
+        for s in range(0, len(queries), args.batch):
+            batch = jax.tree.map(lambda a, s=s: a[s:s + args.batch], qsks)
+            srv.query_batch(batch)
+        st = srv.throughput()
+        print(f"batched serving (B≤{args.batch}): {st['queries']} queries in "
+              f"{st['dispatches']} dispatches — per-query {st['per_query_ms']:.2f} ms, "
+              f"{st['qps']:.0f} queries/sec, dispatch p50 {st['dispatch_p50_ms']:.1f} ms "
+              f"p99 {st['dispatch_p99_ms']:.1f} ms")
+        return
+
     qfn = Q.make_query_fn(mesh, shard.num_columns, args.sketch_size, qcfg)
 
     lat = []

@@ -8,6 +8,70 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 import numpy as np
 import pytest
 
+# ---------------------------------------------------------------------------
+# hypothesis shim: property tests use the real library when it is installed
+# and fall back to a deterministic mini-implementation otherwise, so tier-1
+# collects and runs in a clean environment. Test modules import the trio via
+# ``from conftest import given, settings, st``.
+# ---------------------------------------------------------------------------
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    class _Strategy:
+        """A deterministic sampler standing in for a hypothesis strategy."""
+
+        def __init__(self, draw):
+            self._draw = draw
+
+        def draw(self, rng):
+            return self._draw(rng)
+
+    class st:  # noqa: N801 — mirrors `hypothesis.strategies as st`
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(lambda r: int(r.integers(min_value, max_value + 1)))
+
+        @staticmethod
+        def floats(min_value, max_value):
+            return _Strategy(lambda r: float(r.uniform(min_value, max_value)))
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda r: bool(r.integers(0, 2)))
+
+        @staticmethod
+        def sampled_from(seq):
+            items = list(seq)
+            return _Strategy(lambda r: items[int(r.integers(0, len(items)))])
+
+    def settings(max_examples=10, **_kw):
+        def deco(fn):
+            fn._shim_max_examples = max_examples
+            return fn
+        return deco
+
+    def given(**strats):
+        def deco(fn):
+            # A bare no-arg wrapper (not functools.wraps, which would expose
+            # the strategy parameters as pytest fixtures): every drawn value
+            # is injected here.
+            def wrapper():
+                # @settings sits above @given, so it annotates this wrapper;
+                # cap the fallback at 10 examples to keep tier-1 fast.
+                n = min(getattr(wrapper, "_shim_max_examples", 10), 10)
+                for i in range(n):
+                    rng = np.random.default_rng(0xC0FFEE + i)
+                    drawn = {k: s.draw(rng) for k, s in strats.items()}
+                    fn(**drawn)
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            return wrapper
+        return deco
+
 
 @pytest.fixture
 def rng():

@@ -165,9 +165,9 @@ def test_sharding_rules_divisibility_guard():
 
 
 def test_sharding_rules_priority():
-    from jax.sharding import AbstractMesh
+    from repro.launch.mesh import make_abstract_mesh
     from repro.sharding import rules as shr
-    mesh = AbstractMesh((2, 2), ("data", "model"))  # 1 real device is fine
+    mesh = make_abstract_mesh((2, 2), ("data", "model"))  # 1 real device is fine
     # expert gets "model" first; mlp falls back to nothing (model taken)
     spec = shr.logical_to_pspec(("expert", "embed", "mlp"), (4, 8, 6), mesh)
     assert spec[0] == "model"

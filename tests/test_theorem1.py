@@ -10,7 +10,7 @@ import collections
 
 import numpy as np
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+from conftest import given, settings, st  # hypothesis or deterministic fallback
 
 from repro.core import hashing as H
 from repro.core import sketch as S
