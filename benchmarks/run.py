@@ -17,11 +17,12 @@ def main() -> None:
     ap.add_argument("--fast", action="store_true",
                     help="smaller corpora (CI-sized)")
     ap.add_argument("--only", default=None,
-                    help="comma-separated subset: accuracy,rmse,ranking,runtime,latency,roofline")
+                    help="comma-separated subset: accuracy,rmse,ranking,runtime,latency,ingest,roofline")
     args = ap.parse_args()
 
-    from benchmarks import (bench_accuracy, bench_query_latency, bench_ranking,
-                            bench_rmse, bench_roofline, bench_runtime)
+    from benchmarks import (bench_accuracy, bench_ingest, bench_query_latency,
+                            bench_ranking, bench_rmse, bench_roofline,
+                            bench_runtime)
 
     fast = args.fast
     suites = {
@@ -38,10 +39,14 @@ def main() -> None:
         "latency": lambda: bench_query_latency.run(
             n_tables=128 if fast else 512, n_queries=12 if fast else 40,
             n_rows=4000 if fast else 10000),
+        "ingest": lambda: bench_ingest.run(
+            n_cols=8 if fast else 32, n_rows=131072 if fast else 1_000_000,
+            chunk=16384 if fast else 65536,
+            artifact=None if fast else bench_ingest.ARTIFACT),
     }
     names = {"accuracy": "fig3_accuracy", "rmse": "fig4_rmse",
              "ranking": "table1_ranking", "runtime": "table2_runtime",
-             "latency": "sec5p5_query_latency"}
+             "latency": "sec5p5_query_latency", "ingest": "ingest"}
     only = set(args.only.split(",")) if args.only else None
 
     for key, fn in suites.items():

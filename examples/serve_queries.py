@@ -1,112 +1,118 @@
-"""End-to-end driver: serve batched top-k join-correlation queries against a
-sharded sketch index (the paper's system, Defn. 3 + §5.5).
+"""End-to-end driver: fused table ingest + batched top-k join-correlation
+serving against a sharded sketch index (the paper's system, Defn. 3 + §5.5).
 
-Builds an index over a synthetic open-data-like collection, then serves the
-query stream through the batched engine (`repro.engine.serve`): query columns
-are sketched in one vmapped pass, requests are padded to bucket sizes
-(default 1/8/32) against a warm compile cache, and every dispatch amortises
-one index scan over the whole batch. Reports per-query latency percentiles,
-throughput, the sequential-loop baseline, and result quality vs ground truth.
+Builds an index over a corpus of **wide tables** with the fused ingest
+engine (`repro.engine.ingest`: key column hashed once per table, all columns
+sketched in one scanned device program), persists the query-side sort
+structure on the index, then serves the query stream through the batched
+engine (`repro.engine.serve`): query columns are sketched in one vmapped
+pass, and each request batch is covered by the bucket mix the server
+measured to be cheapest at warmup. Reports ingest throughput, per-query
+latency percentiles, throughput, and result quality vs planted ground truth.
 
-    PYTHONPATH=src python examples/serve_queries.py [--tables 600] [--queries 50]
+    PYTHONPATH=src python examples/serve_queries.py [--groups 40] [--cols 8]
 """
 import argparse
 import time
 
 import numpy as np
-import jax
-import jax.numpy as jnp
 
-from repro.data.pipeline import Table, sbn_pair, skewed_pair
+from repro.data.pipeline import Table, multi_column_group
 from repro.engine import index as IX
 from repro.engine import query as Q
 from repro.engine import serve as SV
 from repro.launch.mesh import make_host_mesh
 
 
+def make_corpus(rng, n_groups: int, n_cols: int, n_queries: int):
+    """Wide tables with a planted signal: each group's columns mix a latent
+    factor with known per-column correlation (`multi_column_group`); the
+    matching query column *is* (a subsample of) the latent, so its
+    best-correlated index column is known exactly."""
+    groups, queries = [], []
+    for i in range(n_groups):
+        g = multi_column_group(rng, n_cols=n_cols, n_max=8000, name=f"g{i}",
+                               keep_latent=True)
+        latent = g.meta.pop("latent")
+        groups.append(g)
+        if len(queries) < n_queries:
+            m = g.keys.shape[0]
+            rs = np.asarray(g.meta["r"])
+            sel = rng.choice(m, size=max(int(m * rng.uniform(0.3, 1.0)), 64),
+                             replace=False)
+            target = i * n_cols + int(np.argmax(np.abs(rs)))
+            queries.append((Table(keys=g.keys[sel], values=latent[sel]),
+                            target, float(np.max(np.abs(rs)))))
+    return groups, queries
+
+
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--tables", type=int, default=600)
-    ap.add_argument("--queries", type=int, default=50)
+    ap.add_argument("--groups", type=int, default=40,
+                    help="number of wide tables in the corpus")
+    ap.add_argument("--cols", type=int, default=8,
+                    help="numeric columns per table")
+    ap.add_argument("--queries", type=int, default=32)
     ap.add_argument("--sketch-size", type=int, default=256)
     ap.add_argument("--k", type=int, default=10)
     ap.add_argument("--buckets", type=int, nargs="+", default=[1, 8, 32])
-    ap.add_argument("--batch", type=int, default=32,
-                    help="request batch size of the simulated client stream")
-    ap.add_argument("--seq-baseline", action="store_true",
-                    help="also time the sequential single-query loop")
     args = ap.parse_args()
 
     rng = np.random.default_rng(7)
-    print(f"[1/4] generating {args.tables} tables + {args.queries} queries with known truth")
-    tables, queries = [], []
-    for i in range(args.tables):
-        tx, ty, r, c = (sbn_pair if i % 2 else skewed_pair)(rng, n_max=8000)
-        tables.append(Table(keys=ty.keys, values=ty.values, name=f"t{i}"))
-        if len(queries) < args.queries:
-            queries.append((tx, i, r * 1.0))  # query joins table i with corr ≈ r
+    C = args.groups * args.cols
+    print(f"[1/4] generating {args.groups} tables × {args.cols} columns "
+          f"(+{args.queries} queries with planted truth)")
+    groups, queries = make_corpus(rng, args.groups, args.cols, args.queries)
 
     mesh = make_host_mesh()
     ndev = int(mesh.devices.size)
-    pad = ((args.tables + ndev - 1) // ndev) * ndev
+    pad = ((C + ndev - 1) // ndev) * ndev
     t0 = time.time()
-    idx = IX.build_index(tables, n=args.sketch_size, pad_to=pad)
+    idx = IX.build_index(groups, n=args.sketch_size, pad_to=pad)
+    build_s = time.time() - t0
     shard = IX.shard_for_mesh(idx, mesh)
-    print(f"[2/4] index built over {ndev} device(s) in {time.time()-t0:.1f}s "
-          f"({idx.shard.key_hash.nbytes/2**20:.1f} MiB of key hashes)")
+    rows = sum(g.values.shape[1] for g in groups)
+    print(f"[2/4] fused ingest: {C} columns / {rows} rows in {build_s:.1f}s "
+          f"({C / build_s:.0f} cols/s) over {ndev} device(s)")
 
     qcfg = Q.QueryConfig(k=args.k, scorer="s4")
-    srv = SV.QueryServer(mesh, shard, qcfg, buckets=args.buckets)
+    IX.precompute_prep(idx, mesh, shard, qcfg)      # persisted on the index
+    srv = SV.QueryServer(mesh, shard, qcfg, buckets=args.buckets, index=idx)
     t0 = time.time()
     srv.warmup()
-    print(f"[3/4] compiled {len(srv.buckets)} bucket programs "
-          f"(B ∈ {{{', '.join(map(str, srv.buckets))}}}) in {time.time()-t0:.1f}s")
+    plan = srv.plan_batches(len(queries))
+    print(f"[3/4] compiled {len(srv.buckets)} bucket programs in "
+          f"{time.time()-t0:.1f}s; measured-cost plan for {len(queries)} "
+          f"queries: {plan}")
 
-    # batched sketch construction for the whole stream, then bucketed serving
     t0 = time.time()
     qsks = SV.build_query_sketches([t.keys for t, _, _ in queries],
                                    [t.values for t, _, _ in queries],
                                    n=args.sketch_size)
     sketch_s = time.time() - t0
-    hits, mrr = 0, 0.0
-    all_g = []
-    for s in range(0, len(queries), args.batch):
-        batch = jax.tree.map(lambda a, s=s: a[s:s + args.batch], qsks)
-        _, g, _, _ = srv.query_batch(batch)
-        all_g.append(np.asarray(g))
-    all_g = np.concatenate(all_g)
-    for (tx, target_idx, r_true), ranked in zip(queries, all_g):
+    _, g, _, _ = srv.query_batch(qsks)
+    all_g = np.asarray(g)
+
+    hits, mrr, strong = 0, 0.0, 0
+    for (tq, target_idx, r_best), ranked in zip(queries, all_g):
+        if r_best <= 0.3:
+            continue
+        strong += 1
         ranked = ranked.tolist()
-        if abs(r_true) > 0.3 and target_idx in ranked:
+        if target_idx in ranked:
             hits += 1
             mrr += 1.0 / (ranked.index(target_idx) + 1)
 
     stats = srv.throughput()
-    strong = sum(1 for _, _, r in queries if abs(r) > 0.3)
-    print(f"[4/4] served {len(queries)} queries in {stats['dispatches']} dispatches "
-          f"(+{sketch_s:.2f}s batched sketch build):")
+    print(f"[4/4] served {len(queries)} queries in {stats['dispatches']} "
+          f"dispatches (+{sketch_s:.2f}s batched sketch build):")
     print(f"      dispatch p50 {stats['dispatch_p50_ms']:.1f} ms, "
           f"p90 {stats['dispatch_p90_ms']:.1f} ms, p99 {stats['dispatch_p99_ms']:.1f} ms")
     print(f"      per-query {stats['per_query_ms']:.2f} ms → "
           f"{stats['qps']:.0f} queries/sec")
-    print(f"      recall@{args.k} of strongly-correlated targets: {hits}/{strong} "
+    print(f"      recall@{args.k} of planted targets: {hits}/{strong} "
           f"(MRR {mrr/max(strong,1):.2f})")
     print(f"      paper §5.5 reference: 94% of queries < 100 ms on 1.5k tables")
-
-    if args.seq_baseline:
-        seqfn = Q.make_query_fn(mesh, shard.num_columns, args.sketch_size, qcfg)
-        lats = []
-        for i in range(len(queries)):
-            qa = IX.query_arrays(jax.tree.map(lambda a, i=i: a[i], qsks))
-            t0 = time.time()
-            out = seqfn(*qa, shard)
-            jax.block_until_ready(out)
-            lats.append((time.time() - t0) * 1e3)
-        lats = np.array(lats[1:])
-        qps = 1e3 / lats.mean()
-        print(f"      sequential baseline: p50 {np.percentile(lats,50):.1f} ms "
-              f"→ {qps:.0f} queries/sec "
-              f"({stats['qps']/qps:.1f}× speedup from batching)")
 
 
 if __name__ == "__main__":

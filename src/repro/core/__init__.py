@@ -3,7 +3,9 @@ from repro.core.sketch import (  # noqa: F401
     Agg,
     CorrelationSketch,
     build_sketch,
+    build_sketch_cols,
     build_sketch_streaming,
+    empty_sketch_cols,
     merge,
     stack_sketches,
 )

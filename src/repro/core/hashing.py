@@ -130,6 +130,25 @@ def hash_string_keys(keys, seed: int = int(DEFAULT_SEED)) -> np.ndarray:
     return out
 
 
+#: Hash value reserved as the padding sentinel by the sketch/index layers —
+#: both in key space (PAD_KEY) and in Fibonacci space (PAD_FIB).
+#: A *real* key can murmur-hash to this value (murmur3 is a bijection on
+#: uint32 single-block keys, so exactly one key does), and exactly one other
+#: key hash Fibonacci-maps onto it (the multiplier is odd ⇒ bijective); such
+#: rows must be excluded from KMV slots at build time — the query path
+#: already treats the key sentinel as non-matchable, and a slot whose
+#: Fibonacci value equals PAD_FIB would tie with padding in the bottom-n
+#: top_k, where the tie-break can silently drop it. `sentinel_safe` is the
+#: shared guard: it reserves both preimages (2 of 2^32 values).
+SENTINEL_HASH = np.uint32(0xFFFFFFFF)
+
+
+def sentinel_safe(key_hash: jnp.ndarray) -> jnp.ndarray:
+    """Mask of hashes usable as sketch keys: neither the key-space sentinel
+    nor the (unique) preimage of the Fibonacci-space sentinel."""
+    return (key_hash != SENTINEL_HASH) & (fibonacci_u32(key_hash) != SENTINEL_HASH)
+
+
 def fibonacci_u32(key_hash: jnp.ndarray) -> jnp.ndarray:
     """``h_u`` as raw uint32: golden-ratio multiplicative hash of h(k).
 

@@ -206,6 +206,151 @@ def _bottom_n(key_hash, acc, cnt, order, valid, n: int):
 
 
 # ----------------------------------------------------------------------------
+# fused multi-column combination (shared key column)
+# ----------------------------------------------------------------------------
+
+def _combine_bottom_cols(kh, acc, cnt, order, valid, row_live, n: int, agg: Agg):
+    """Fused `_combine_duplicates` + `_bottom_n` for C columns sharing a key.
+
+    ``kh``/``order``/``row_live`` are per-row ``[m]`` (one join-key column);
+    ``acc``/``cnt``/``valid`` carry a leading ``[C]`` column axis. The rows
+    are sorted **once** by (Fibonacci hash, row order) — the expensive
+    O(m log m) step — and every column reuses that permutation: per-column
+    work is gathers, segment reductions and a rank/scatter, all O(m). Because
+    the shared sort is fib-ascending, the bottom-n selection degenerates to
+    "first n segments with ≥1 valid row for this column" — a cumsum rank
+    instead of a per-column top_k.
+
+    Output is bit-identical to running `_combine_duplicates` → `_bottom_n`
+    per column: segments contain the same valid rows in the same order (a
+    column's invalid rows contribute exact zeros / ±inf identities), and the
+    emitted slots are the same keys in the same fib-ascending order.
+    """
+    m = kh.shape[0]
+    fib = jnp.where(row_live, hashing.fibonacci_u32(kh), PAD_FIB)
+    ordm = jnp.where(row_live, order, jnp.inf)
+    sort_idx = jnp.lexsort((ordm, fib))
+    kh_s = jnp.where(row_live, kh, PAD_KEY)[sort_idx]
+    ord_s = ordm[sort_idx]
+    starts = jnp.concatenate([jnp.ones((1,), bool), kh_s[1:] != kh_s[:-1]])
+    seg = jnp.cumsum(starts.astype(jnp.int32)) - 1  # [m], fib-ascending ids
+
+    def seg_sum(x):
+        return jax.ops.segment_sum(x, seg, num_segments=m)
+
+    def one_column(acc_c, cnt_c, valid_c):
+        val_s = valid_c[sort_idx]
+        acc_s = acc_c[sort_idx]
+        cnt_s = cnt_c[sort_idx]
+        if agg in (Agg.MEAN, Agg.SUM, Agg.COUNT):
+            acc_g = seg_sum(acc_s)
+        elif agg == Agg.MIN:
+            acc_g = jax.ops.segment_min(jnp.where(val_s, acc_s, jnp.inf), seg,
+                                        num_segments=m)
+        elif agg == Agg.MAX:
+            acc_g = jax.ops.segment_max(jnp.where(val_s, acc_s, -jnp.inf), seg,
+                                        num_segments=m)
+        elif agg == Agg.FIRST:
+            first_ord = jax.ops.segment_min(jnp.where(val_s, ord_s, jnp.inf),
+                                            seg, num_segments=m)
+            acc_g = seg_sum(jnp.where(val_s & (ord_s == first_ord[seg]), acc_s, 0.0))
+        elif agg == Agg.LAST:
+            last_ord = jax.ops.segment_max(jnp.where(val_s, ord_s, -jnp.inf),
+                                           seg, num_segments=m)
+            acc_g = seg_sum(jnp.where(val_s & (ord_s == last_ord[seg]), acc_s, 0.0))
+        else:  # pragma: no cover
+            raise ValueError(agg)
+        cnt_g = seg_sum(jnp.where(val_s, cnt_s, 0.0))
+        if agg == Agg.FIRST:
+            ord_g = jax.ops.segment_min(jnp.where(val_s, ord_s, jnp.inf), seg,
+                                        num_segments=m)
+        else:
+            ord_g = jax.ops.segment_max(jnp.where(val_s, ord_s, -jnp.inf), seg,
+                                        num_segments=m)
+        has = seg_sum(val_s.astype(jnp.float32)) > 0      # segment has a valid row
+        rep = starts & has[seg]                           # this column's reps
+        # Selection by *gather*, not scatter (batched scatters with
+        # per-column indices hit XLA:CPU's scalar path): the cumulative rep
+        # count is monotone, so the row of the j-th valid rep is a binary
+        # search, and output slot j is a plain gather from it.
+        rank = jnp.cumsum(rep.astype(jnp.int32))
+        pos = jnp.searchsorted(rank, jnp.arange(1, n + 1, dtype=rank.dtype))
+        ok = jnp.arange(n) < rank[-1]
+        posc = jnp.clip(pos, 0, m - 1)
+        segp = seg[posc]
+        out_kh = jnp.where(ok, kh_s[posc], PAD_KEY)
+        out_acc = jnp.where(ok, acc_g[segp], 0.0).astype(acc_c.dtype)
+        out_cnt = jnp.where(ok, cnt_g[segp], 0.0)
+        out_ord = jnp.where(ok, ord_g[segp], 0.0)
+        return out_kh, out_acc, out_cnt, out_ord, ok
+
+    return jax.vmap(one_column)(acc, cnt, valid)
+
+
+def _build_cols_from_hashed(kh, values, row_valid, order, n: int, agg: Agg):
+    """Stacked sketch ``[C, n]`` for one chunk of C columns sharing join-key
+    hashes ``kh [m]``. ``row_valid`` masks chunk padding."""
+    live = row_valid & hashing.sentinel_safe(kh)
+    values = values.astype(jnp.float32)
+    valid = row_valid[None, :] & jnp.isfinite(values)     # [C, m] — col stats
+    slot_valid = valid & hashing.sentinel_safe(kh)[None, :]
+    if agg == Agg.COUNT:
+        acc = jnp.zeros(values.shape, jnp.float32)
+    else:
+        acc = jnp.where(slot_valid, values, 0.0)
+    cnt = slot_valid.astype(jnp.float32)
+    kh_b, acc_b, cnt_b, ord_b, mask_b = _combine_bottom_cols(
+        kh, acc, cnt, order, slot_valid, live, n, agg)
+    col_min = jnp.min(jnp.where(valid, values, jnp.inf), axis=-1)
+    col_max = jnp.max(jnp.where(valid, values, -jnp.inf), axis=-1)
+    rows = jnp.sum(valid.astype(jnp.float32), axis=-1)
+    return CorrelationSketch(key_hash=kh_b, acc=acc_b, cnt=cnt_b, order=ord_b,
+                             mask=mask_b, col_min=col_min, col_max=col_max,
+                             rows=rows, agg=agg)
+
+
+@functools.partial(jax.jit, static_argnames=("n", "agg", "pre_hashed"))
+def build_sketch_cols(
+    keys: jnp.ndarray,
+    values: jnp.ndarray,
+    *,
+    n: int,
+    agg: Agg = Agg.MEAN,
+    valid: Optional[jnp.ndarray] = None,
+    order_offset: jnp.ndarray | float = 0.0,
+    pre_hashed: bool = False,
+) -> CorrelationSketch:
+    """Sketch **all C columns of a table at once** against one key column.
+
+    ``keys`` is ``[m]``, ``values`` is ``[C, m]``; the murmur hash of the key
+    column is computed once and shared, as is the fib-order sort (see
+    `_combine_bottom_cols`). Returns a stacked sketch with leading ``[C]``
+    axis, bit-identical per column to C separate `build_sketch` calls.
+    """
+    m = keys.shape[0]
+    if valid is None:
+        valid = jnp.ones((m,), bool)
+    kh = keys.astype(jnp.uint32) if pre_hashed else hashing.murmur3_32(keys)
+    order = jnp.arange(m, dtype=jnp.float32) + order_offset
+    return _build_cols_from_hashed(kh, values, valid, order, n, agg)
+
+
+def empty_sketch_cols(C: int, n: int, agg: Agg = Agg.MEAN) -> CorrelationSketch:
+    """Identity element of `merge`, stacked ``[C, n]`` (scan/fold carry init)."""
+    return CorrelationSketch(
+        key_hash=jnp.full((C, n), PAD_KEY, jnp.uint32),
+        acc=jnp.zeros((C, n), jnp.float32),
+        cnt=jnp.zeros((C, n), jnp.float32),
+        order=jnp.zeros((C, n), jnp.float32),
+        mask=jnp.zeros((C, n), bool),
+        col_min=jnp.full((C,), jnp.inf, jnp.float32),
+        col_max=jnp.full((C,), -jnp.inf, jnp.float32),
+        rows=jnp.zeros((C,), jnp.float32),
+        agg=agg,
+    )
+
+
+# ----------------------------------------------------------------------------
 # construction
 # ----------------------------------------------------------------------------
 
@@ -247,7 +392,15 @@ def build_sketch(
         raise ValueError(agg)
     cnt = valid.astype(jnp.float32)
 
-    kh_c, acc_c, cnt_c, ord_c, valid_c = _combine_duplicates(kh, acc, cnt, order, valid, agg)
+    # Sentinel guard: a real key whose murmur hash collides with PAD_KEY can
+    # never match at query time (the serve path masks it), and one whose
+    # Fibonacci hash collides with PAD_FIB ties with padding in the bottom-n
+    # top_k — so neither may occupy a KMV slot, otherwise
+    # `_combine_duplicates`/`_bottom_n` silently fold them into the padding
+    # region. Their rows still count toward the column statistics: the
+    # values exist in the column.
+    slot_valid = valid & hashing.sentinel_safe(kh)
+    kh_c, acc_c, cnt_c, ord_c, valid_c = _combine_duplicates(kh, acc, cnt, order, slot_valid, agg)
     kh_b, acc_b, cnt_b, ord_b, mask_b = _bottom_n(kh_c, acc_c, cnt_c, ord_c, valid_c, n)
 
     vmasked = jnp.where(valid, values, jnp.inf)

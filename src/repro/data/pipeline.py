@@ -53,6 +53,75 @@ class Table:
     meta: dict = dataclasses.field(default_factory=dict)
 
 
+@dataclasses.dataclass
+class TableGroup:
+    """One relational table: a join-key column shared by C numeric columns.
+
+    This is the ingest-engine granularity (`repro.engine.ingest`): every
+    column of the group is sketched against the *same* key column in one
+    fused device program. `columns()` exposes the per-column ⟨K, X⟩ view for
+    oracle/baseline paths.
+    """
+    keys: np.ndarray             # [m] uint32 (hash-ready ids)
+    values: np.ndarray           # [C, m] float32
+    name: str = ""
+    column_names: List[str] = dataclasses.field(default_factory=list)
+    meta: dict = dataclasses.field(default_factory=dict)
+
+    @property
+    def num_columns(self) -> int:
+        return self.values.shape[0]
+
+    def column_name(self, c: int) -> str:
+        if c < len(self.column_names):
+            return self.column_names[c]
+        return f"{self.name or 'table'}.c{c}"
+
+    def columns(self) -> List[Table]:
+        return [Table(keys=self.keys, values=self.values[c],
+                      name=self.column_name(c), meta=self.meta)
+                for c in range(self.num_columns)]
+
+
+def multi_column_group(rng, n_cols: int = 16, n_max: int = 100_000,
+                       key_space: int = 1 << 30, name: str = "",
+                       nan_frac: float = 0.01,
+                       n_rows: Optional[int] = None,
+                       keep_latent: bool = False) -> TableGroup:
+    """A wide table with known cross-column structure: every column is a
+    noisy mix of a shared latent factor, so column i correlates with the
+    latent with a known r_i (stored in ``meta['r']``). Missing values are
+    sprinkled per column — the regime the fused ingest must mask exactly.
+
+    ``n_rows`` fixes the row count (default: drawn from [512, n_max));
+    ``keep_latent`` stashes the latent column in ``meta['latent']`` so
+    callers can plant queries with an exactly-known best-correlated column.
+    """
+    m = int(n_rows) if n_rows else int(rng.integers(512, n_max))
+    keys = rng.choice(key_space, size=m, replace=False).astype(np.uint32)
+    latent = rng.standard_normal(m).astype(np.float32)
+    rs = rng.uniform(-1, 1, size=n_cols)
+    vals = np.empty((n_cols, m), np.float32)
+    for c in range(n_cols):
+        noise = rng.standard_normal(m)
+        vals[c] = (rs[c] * latent
+                   + np.sqrt(max(1 - rs[c] ** 2, 0.0)) * noise).astype(np.float32)
+        if nan_frac > 0:
+            vals[c, rng.random(m) < nan_frac] = np.nan
+    meta = {"r": rs.tolist()}
+    if keep_latent:
+        meta["latent"] = latent
+    return TableGroup(keys=keys, values=vals, name=name,
+                      column_names=[f"{name}.c{c}" for c in range(n_cols)],
+                      meta=meta)
+
+
+def group_corpus(rng, n_groups: int, n_cols: int = 16, n_max: int = 100_000):
+    """A corpus of wide tables — the §5.5-style ingest workload."""
+    return [multi_column_group(rng, n_cols=n_cols, n_max=n_max, name=f"g{i}")
+            for i in range(n_groups)]
+
+
 def sbn_pair(rng, n_max: int = 500_000, r: Optional[float] = None,
              key_space: int = 1 << 30) -> Tuple[Table, Table, float, float]:
     """One Synthetic-Bivariate-Normal table pair (§5.1 SBN):

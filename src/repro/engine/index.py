@@ -14,7 +14,7 @@ kernel. Collective traffic per query is O(devices × k), independent of C.
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence, Union
 
 import jax
 import jax.numpy as jnp
@@ -22,7 +22,8 @@ import numpy as np
 
 from repro.core import hashing
 from repro.core.sketch import Agg, CorrelationSketch, build_sketch_streaming
-from repro.data.pipeline import Table
+from repro.data.pipeline import Table, TableGroup
+from repro.engine import ingest
 
 
 @jax.tree_util.register_dataclass
@@ -47,10 +48,18 @@ class IndexShard:
 
 @dataclasses.dataclass
 class SketchIndex:
-    """Host handle: device arrays + column catalog."""
+    """Host handle: device arrays + column catalog.
+
+    ``prep_cache`` persists the query-side candidate sort structure
+    (`repro.engine.query.PreppedShard`) computed against this index: it
+    depends only on (index keys, device layout, score_chunk), so it is built
+    once at index time — `precompute_prep` — and every `QueryServer` for any
+    batch bucket then gets it as a cache lookup instead of recomputing.
+    """
     shard: IndexShard
     names: List[str]
     n: int
+    prep_cache: Dict[tuple, object] = dataclasses.field(default_factory=dict)
 
     @property
     def num_columns(self) -> int:
@@ -63,35 +72,100 @@ def query_arrays(sk: CorrelationSketch):
             sk.col_min, sk.col_max)
 
 
-def build_index(tables: Sequence[Table], *, n: int = 256, agg: Agg = Agg.MEAN,
-                chunk: int = 65536, pad_to: Optional[int] = None) -> SketchIndex:
-    """Sketch every ⟨K, X⟩ column pair and stack into an index.
+class _IndexArrays:
+    """Preallocated ``[C, n]`` host staging arrays the ingest engine writes
+    finished sketch stacks into — no per-column Python list, no
+    `stack_sketches`. One slice-assign per table group."""
+
+    def __init__(self, target: int, n: int):
+        self.kh = np.full((target, n), 0xFFFFFFFF, np.uint32)
+        self.vals = np.zeros((target, n), np.float32)
+        self.mask = np.zeros((target, n), np.float32)
+        self.cmin = np.zeros((target,), np.float32)
+        self.cmax = np.zeros((target,), np.float32)
+        self.rows = np.zeros((target,), np.float32)
+
+    def write(self, row0: int, sk: CorrelationSketch) -> int:
+        """Copy a stacked ``[C, n]`` sketch into rows [row0, row0+C)."""
+        C = sk.key_hash.shape[0]
+        sl = slice(row0, row0 + C)
+        self.kh[sl] = np.asarray(sk.key_hash)
+        self.vals[sl] = np.asarray(sk.values())
+        self.mask[sl] = np.asarray(sk.mask, np.float32)
+        self.cmin[sl] = np.asarray(sk.col_min, np.float32)
+        self.cmax[sl] = np.asarray(sk.col_max, np.float32)
+        self.rows[sl] = np.asarray(sk.rows, np.float32)
+        return row0 + C
+
+    def to_shard(self) -> IndexShard:
+        return IndexShard(key_hash=jnp.asarray(self.kh), values=jnp.asarray(self.vals),
+                          mask=jnp.asarray(self.mask), col_min=jnp.asarray(self.cmin),
+                          col_max=jnp.asarray(self.cmax), rows=jnp.asarray(self.rows))
+
+
+def build_index(tables: Sequence[Union[Table, TableGroup]], *, n: int = 256,
+                agg: Agg = Agg.MEAN, chunk: int = 65536,
+                pad_to: Optional[int] = None,
+                engine: str = "fused") -> SketchIndex:
+    """Sketch every column and stack into an index.
+
+    ``tables`` may mix single-column `Table`s and multi-column `TableGroup`s;
+    groups go through the fused ingest engine (`repro.engine.ingest`) which
+    hashes the join-key column once and sketches all columns of the group in
+    one device program. ``engine="loop"`` keeps the legacy per-column
+    `build_sketch_streaming` path (the benchmark baseline) — results are
+    bit-identical either way.
 
     ``pad_to``: round the column count up (invalid padding columns) so the
     index divides evenly across a device mesh.
     """
-    sketches = [build_sketch_streaming(t.keys, t.values, n=n, agg=agg, chunk=chunk)
-                for t in tables]
-    names = [t.name or f"col{i}" for i, t in enumerate(tables)]
-    C = len(sketches)
+    if engine not in ("fused", "loop"):
+        raise ValueError(f"unknown ingest engine {engine!r}: use 'fused' or 'loop'")
+    names: List[str] = []
+    for i, t in enumerate(tables):
+        if isinstance(t, TableGroup):
+            names.extend(t.column_name(c) for c in range(t.num_columns))
+        else:
+            names.append(t.name or f"col{i}")
+    C = len(names)
     target = pad_to if pad_to and pad_to >= C else C
-    kh = np.full((target, n), 0xFFFFFFFF, np.uint32)
-    vals = np.zeros((target, n), np.float32)
-    mask = np.zeros((target, n), np.float32)
-    cmin = np.zeros((target,), np.float32)
-    cmax = np.zeros((target,), np.float32)
-    rows = np.zeros((target,), np.float32)
-    for i, sk in enumerate(sketches):
-        kh[i] = np.asarray(sk.key_hash)
-        vals[i] = np.asarray(sk.values())
-        mask[i] = np.asarray(sk.mask, np.float32)
-        cmin[i] = float(sk.col_min)
-        cmax[i] = float(sk.col_max)
-        rows[i] = float(sk.rows)
-    shard = IndexShard(key_hash=jnp.asarray(kh), values=jnp.asarray(vals),
-                       mask=jnp.asarray(mask), col_min=jnp.asarray(cmin),
-                       col_max=jnp.asarray(cmax), rows=jnp.asarray(rows))
-    return SketchIndex(shard=shard, names=names, n=n)
+    arrays = _IndexArrays(target, n)
+    row = 0
+    for t in tables:
+        if engine == "loop":
+            cols = t.columns() if isinstance(t, TableGroup) else [t]
+            for col in cols:
+                sk = build_sketch_streaming(col.keys, col.values, n=n, agg=agg,
+                                            chunk=chunk)
+                row = arrays.write(row, jax.tree.map(lambda a: a[None], sk))
+        else:
+            values = t.values if isinstance(t, TableGroup) else t.values[None, :]
+            sk = ingest.sketch_table(t.keys, values, n=n, agg=agg, chunk=chunk)
+            row = arrays.write(row, sk)
+    return SketchIndex(shard=arrays.to_shard(), names=names, n=n)
+
+
+#: wide-table corpora read most naturally as a list of groups
+build_index_groups = build_index
+
+
+def precompute_prep(index: SketchIndex, mesh, shard: IndexShard, qcfg):
+    """Build (or look up) the query-side `PreppedShard` for this index on
+    this mesh — §"prep" of `repro.engine.query`. Stored in
+    ``index.prep_cache`` keyed by (device count, score_chunk), so serving
+    layers share one copy per layout instead of recomputing per server.
+    Returns None for configs whose intersect path doesn't consume prep.
+    """
+    from repro.engine import query as Q
+    if not (qcfg.kernels.backend == "xla" and qcfg.intersect == "sortmerge"):
+        return None
+    key = (int(mesh.devices.size), int(qcfg.score_chunk))
+    prep = index.prep_cache.get(key)
+    if prep is None:
+        fn = Q.make_prep_fn(mesh, shard.num_columns, index.n, qcfg)
+        prep = jax.block_until_ready(fn(shard))
+        index.prep_cache[key] = prep
+    return prep
 
 
 def shard_for_mesh(index: SketchIndex, mesh) -> IndexShard:

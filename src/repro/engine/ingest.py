@@ -1,0 +1,193 @@
+"""Fused multi-column ingest engine: device-resident streaming sketch build
+at **table granularity** (paper §3.4, scaled for §5.5-sized corpora).
+
+The per-column streaming loop (`build_sketch_streaming`) pays, for every
+64Ki-row chunk of every column: one murmur hash of the *same* key column,
+one O(m log m) sort, one device dispatch for the build and one for the
+merge — a table with C columns costs C× the hashing/sorting and ~2·C·nb
+host round-trips. This engine collapses all of it:
+
+* **shared key hash** — the join-key column is murmur-hashed once per
+  ingest block and shared by every value column of the table;
+* **shared sort** — each chunk is sorted once by (Fibonacci hash, row
+  order); all C columns reuse the permutation and segment ids, so
+  per-column work drops from O(m log m) to O(m) gathers + segment sums
+  (`repro.core.sketch._combine_bottom_cols`, vmapped over the ``[C]``
+  column axis);
+* **single dispatch per table** — chunks stream through a `lax.scan`
+  whose carry is the stacked ``[C, n]`` partial sketch, so there is no
+  per-chunk (let alone per-column) host round-trip. Tables larger than
+  one resident block stream block-by-block through the same compiled
+  program, carrying the partial sketch across dispatches;
+* **direct index writes** — finished sketches arrive as ``[C, n]`` stacks
+  and are copied straight into the preallocated index arrays
+  (`repro.engine.index.build_index_groups`), never through a Python list
+  of per-column sketches.
+
+Memory layout: an ingest block is ``keys [nb, chunk]`` (uint32) +
+``values [nb, C, chunk]`` (f32) + a validity mask, i.e. the chunk axis is
+leading so `lax.scan` slices one ``[C, chunk]`` panel per step and the
+whole block streams through a fixed footprint.
+
+Exactness: every step is the KMV merge closure (`repro.core.sketch.merge`
+docstring), so the result is bit-identical to the per-column loop — the
+acceptance test asserts this for all aggregations.
+
+The distributed story is `tree_merge` / `distributed_build_table`: shard
+rows across devices, run the fused local build, all-gather the (tiny)
+``[C, n]`` partials and fold them in log2(ndev) vmapped merge rounds.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Sequence
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import hashing
+from repro.core.sketch import (Agg, CorrelationSketch, _build_cols_from_hashed,
+                               empty_sketch_cols, merge)
+
+#: chunk rows per scan step (the paper's streaming granularity)
+DEFAULT_CHUNK = 65536
+#: chunks resident per dispatch: block × chunk rows stream per program call
+DEFAULT_BLOCK = 16
+
+
+def merge_cols(a: CorrelationSketch, b: CorrelationSketch) -> CorrelationSketch:
+    """`merge` vmapped over the leading column axis of stacked sketches."""
+    if a.agg != b.agg:
+        raise ValueError(f"cannot merge sketches with different aggs: {a.agg} vs {b.agg}")
+    return jax.vmap(merge)(a, b)
+
+
+@functools.partial(jax.jit, static_argnames=("n", "agg", "pre_hashed"))
+def _ingest_block(carry: CorrelationSketch, keys_b, values_b, valid_b,
+                  offsets_b, *, n: int, agg: Agg, pre_hashed: bool):
+    """One compiled dispatch: scan ``block`` chunks into the carry sketch.
+
+    ``keys_b [nb, chunk]``, ``values_b [nb, C, chunk]``, ``valid_b [nb,
+    chunk]``, ``offsets_b [nb]``; the key hash is computed once for the whole
+    block, then each scan step folds one chunk of all C columns.
+    """
+    kh_b = (keys_b.astype(jnp.uint32) if pre_hashed
+            else hashing.murmur3_32(keys_b))
+
+    def step(sk, xs):
+        kh, vals, ok, off = xs
+        order = jnp.arange(kh.shape[0], dtype=jnp.float32) + off
+        part = _build_cols_from_hashed(kh, vals, ok, order, n, agg)
+        return merge_cols(sk, part), None
+
+    carry, _ = jax.lax.scan(step, carry, (kh_b, values_b, valid_b, offsets_b))
+    return carry
+
+
+def sketch_table(keys, values, *, n: int = 256, agg: Agg = Agg.MEAN,
+                 chunk: int = DEFAULT_CHUNK, block: int = DEFAULT_BLOCK,
+                 pre_hashed: bool = False) -> CorrelationSketch:
+    """Sketch every column of one table in (at most a few) fused dispatches.
+
+    ``keys [m]`` is the table's join-key column, ``values [C, m]`` its
+    numeric columns. Tables up to ``block·chunk`` rows go through a single
+    device program; larger tables stream resident blocks through the same
+    compiled program, carrying the stacked partial sketch across dispatches.
+    Returns a `CorrelationSketch` with leading ``[C]`` axis, bit-identical
+    per column to `build_sketch_streaming` on that column.
+    """
+    keys = np.asarray(keys)
+    values = np.asarray(values, np.float32)
+    if values.ndim == 1:
+        values = values[None, :]
+    C, m = values.shape
+    assert keys.shape == (m,), (keys.shape, values.shape)
+    if m == 0:
+        raise ValueError("empty input")
+    nb = -(-m // chunk)
+    sk = empty_sketch_cols(C, n, agg)
+    s = 0
+    while s < nb:
+        # Full blocks stream at `block` chunks; the tail runs in
+        # power-of-two blocks (largest ≤ remainder) so no all-padding chunk
+        # is ever sorted and the jit cache stays O(log block): a 17-chunk
+        # table is [16, 1], not 16 + 15 chunks of zeros.
+        rem = nb - s
+        nbb = block if rem >= block else 1 << (rem.bit_length() - 1)
+        lo, hi = s * chunk, min((s + nbb) * chunk, m)
+        kb = np.zeros((nbb * chunk,), keys.dtype)
+        vb = np.zeros((C, nbb * chunk), np.float32)
+        kb[: hi - lo] = keys[lo:hi]
+        vb[:, : hi - lo] = values[:, lo:hi]
+        ok = (np.arange(nbb * chunk) < (hi - lo))
+        offs = (lo + np.arange(nbb, dtype=np.float32) * chunk)
+        s += nbb
+        sk = _ingest_block(
+            sk,
+            jnp.asarray(kb).reshape(nbb, chunk),
+            jnp.asarray(vb).reshape(C, nbb, chunk).transpose(1, 0, 2),
+            jnp.asarray(ok).reshape(nbb, chunk),
+            jnp.asarray(offs),
+            n=n, agg=agg, pre_hashed=pre_hashed)
+    return sk
+
+
+# ----------------------------------------------------------------------------
+# tree-merge: the distributed story
+# ----------------------------------------------------------------------------
+
+def tree_merge(parts: CorrelationSketch, merge_fn=merge_cols) -> CorrelationSketch:
+    """Fold P partial sketches (leading ``[P]`` axis) in log2(P) vmapped
+    rounds. Exact for any P by the merge closure; the tree shape only changes
+    wall-clock, not results (merge is associative — tested). Works under jit
+    (P is static), so it is also the per-device fold of the sharded build."""
+    P = jax.tree.leaves(parts)[0].shape[0]
+    while P > 1:
+        even = (P // 2) * 2
+        a = jax.tree.map(lambda x: x[0:even:2], parts)
+        b = jax.tree.map(lambda x: x[1:even:2], parts)
+        m = jax.vmap(merge_fn)(a, b)
+        if P % 2:
+            m = jax.tree.map(lambda x, t: jnp.concatenate([x, t[None]]),
+                             m, jax.tree.map(lambda x: x[-1], parts))
+        parts = m
+        P = P // 2 + P % 2
+    return jax.tree.map(lambda x: x[0], parts)
+
+
+def distributed_build_table(keys, values, mesh, *, n: int = 256,
+                            agg: Agg = Agg.MEAN, pre_hashed: bool = False):
+    """Row-sharded fused table build: local `[C, n]` sketches on every
+    device, one all-gather of the partials, then a replicated tree fold.
+
+    ``keys [m]`` / ``values [C, m]`` with m divisible by the device count.
+    Collective traffic is O(ndev · C · n) — independent of m.
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    axes = tuple(mesh.axis_names)
+    ndev = int(mesh.devices.size)
+    values = jnp.asarray(values)
+    if values.ndim == 1:
+        values = values[None, :]
+    m = keys.shape[0]
+    assert m % ndev == 0, (m, ndev)
+
+    def local(keys_l, values_l, offset_l):
+        kh = (keys_l.astype(jnp.uint32) if pre_hashed
+              else hashing.murmur3_32(keys_l))
+        order = jnp.arange(kh.shape[0], dtype=jnp.float32) + offset_l[0]
+        ok = jnp.ones(kh.shape, bool)
+        sk = _build_cols_from_hashed(kh, values_l, ok, order, n, agg)
+        gathered = jax.tree.map(
+            lambda a: jax.lax.all_gather(a, axes, tiled=False), sk)
+        return tree_merge(gathered)
+
+    offsets = jnp.arange(ndev, dtype=jnp.float32) * (m // ndev)
+    fn = shard_map(local, mesh=mesh,
+                   in_specs=(P(axes), P(None, axes), P(axes)),
+                   out_specs=P(),
+                   check_rep=False)  # replicated by the all-gather + fold
+    return fn(jnp.asarray(keys), values, offsets)

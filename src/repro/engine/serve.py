@@ -11,7 +11,15 @@ programs serve an arbitrary query stream efficiently:
     set of bucket sizes (default 1/8/32) so the compile cache stays tiny
     while any batch size is served;
   * **compile cache** — programs are cached on ``(B, C, n, qcfg)``; warming
-    the buckets once makes every later dispatch compile-free.
+    the buckets once makes every later dispatch compile-free;
+  * **per-bucket score_chunk** — large batches shrink the candidate block so
+    the ``[B, chunk, n]`` intersect intermediates stay cache-resident
+    (``B × chunk`` is held ≈ constant); without this, B=32 dispatches run
+    ~2× slower per query than B=8 on cache-bound hosts;
+  * **measured-cost planning** — `warmup()` times each bucket program, and
+    `query_batch` covers a request batch with the cheapest mix of bucket
+    dispatches under those measured costs instead of always padding to the
+    largest bucket.
 
 Padding rows are copies of the last real query; because the s4 normalisation
 is per query row, they cannot perturb real results, and they are sliced off
@@ -19,9 +27,11 @@ before returning.
 """
 from __future__ import annotations
 
+import dataclasses
+import functools
 import time
 from collections import deque
-from typing import Deque, Dict, Sequence, Tuple
+from typing import Deque, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -29,7 +39,7 @@ import numpy as np
 
 from repro.core.sketch import Agg, CorrelationSketch, build_sketch, merge
 from repro.engine import query as Q
-from repro.engine.index import IndexShard, query_arrays
+from repro.engine.index import IndexShard, SketchIndex, precompute_prep, query_arrays
 
 
 def build_query_sketches(keys_list: Sequence[np.ndarray],
@@ -90,26 +100,64 @@ def build_query_sketches(keys_list: Sequence[np.ndarray],
     return out
 
 
+@functools.lru_cache(maxsize=1024)
+def _plan_cover(nq: int, buckets: tuple, costs: tuple) -> tuple:
+    """Min-cost cover of ``nq`` queries by bucket dispatches: exact DP over
+    per-dispatch ``costs`` (a tuple of (bucket, seconds) pairs). Parent
+    pointers + one backtrack keep it O(nq·buckets) time, O(nq) memory."""
+    cost = dict(costs)
+    best = [0.0] * (nq + 1)
+    take = [0] * (nq + 1)
+    for q in range(1, nq + 1):
+        best[q], take[q] = min((best[max(0, q - b)] + cost[b], b)
+                               for b in buckets)
+    plan = []
+    q = nq
+    while q > 0:
+        plan.append(take[q])
+        q = max(0, q - take[q])
+    return tuple(sorted(plan))   # dispatch order is cost-irrelevant; be stable
+
+
 class QueryServer:
-    """Bucketed multi-query serving over one resident sharded index."""
+    """Bucketed multi-query serving over one resident sharded index.
+
+    ``index``: optional `SketchIndex` host handle — when given, the
+    candidate sort structure (`PreppedShard`) is looked up in / persisted to
+    ``index.prep_cache`` so every server (and every bucket's score_chunk)
+    shares one copy per layout. ``batch_rows``: per-dispatch candidate-row
+    budget — the effective ``score_chunk`` of a bucket is shrunk toward
+    ``batch_rows / B`` (floored at 64 rows, never raised above the
+    configured value), keeping the ``[B, chunk, n]`` intersect tensors
+    cache-resident at large B (defaults to ``8 × qcfg.score_chunk``, i.e.
+    buckets up to 8 run the configured chunk unchanged).
+    """
 
     def __init__(self, mesh, shard: IndexShard, qcfg: Q.QueryConfig,
-                 buckets: Sequence[int] = (1, 8, 32), prep=None):
+                 buckets: Sequence[int] = (1, 8, 32), prep=None,
+                 index: Optional[SketchIndex] = None,
+                 batch_rows: Optional[int] = None):
         self.mesh = mesh
         self.shard = shard
         self.qcfg = qcfg
+        self.index = index
         self.buckets = tuple(sorted(set(int(b) for b in buckets)))
         assert self.buckets and all(b > 0 for b in self.buckets)
+        self.batch_rows = int(batch_rows or 8 * qcfg.score_chunk)
         self.C = shard.num_columns
         self.n = shard.sketch_size
         self._cache: Dict[tuple, object] = {}
-        #: a PreppedShard built for the same (shard, qcfg) may be shared
-        #: across servers to avoid recomputing it (see `prep()`)
-        self._prep = prep
+        #: PreppedShards keyed by effective score_chunk; a legacy ``prep``
+        #: argument seeds the base-chunk entry
+        self._preps: Dict[int, object] = {}
+        if prep is not None:
+            self._preps[qcfg.score_chunk] = prep
         # only the XLA sortmerge intersect consumes the precomputed sort
         # structure; don't build/ship two index-sized arrays otherwise
         self._use_prep = (qcfg.kernels.backend == "xla"
                           and qcfg.intersect == "sortmerge")
+        #: measured seconds per dispatch for each bucket (filled by warmup)
+        self._bucket_cost: Dict[int, float] = {}
         #: per-dispatch telemetry: (bucket B, real queries, seconds) — a
         #: bounded window so a long-lived server doesn't leak; totals for
         #: qps are kept separately and never reset
@@ -119,36 +167,63 @@ class QueryServer:
         self._total_s = 0.0
 
     # -- compile cache -------------------------------------------------------
-    def prep(self):
-        """Device-resident candidate sort structure (built once per index)."""
+    def qcfg_for(self, B: int) -> Q.QueryConfig:
+        """Bucket-B query config: score_chunk shrunk toward the row budget
+        (floored at 64 rows, and never *raised* above the configured value —
+        a user-lowered score_chunk is a memory bound and stays binding)."""
+        chunk = min(self.qcfg.score_chunk, max(64, self.batch_rows // B))
+        if chunk == self.qcfg.score_chunk:
+            return self.qcfg
+        return dataclasses.replace(self.qcfg, score_chunk=chunk)
+
+    def prep(self, B: Optional[int] = None):
+        """Device-resident candidate sort structure for bucket B's chunking
+        (built once per (index, score_chunk) — a cache lookup when the index
+        handle carries a persisted prep)."""
         if not self._use_prep:
             return None
-        if self._prep is None:
-            fn = Q.make_prep_fn(self.mesh, self.C, self.n, self.qcfg)
-            self._prep = jax.block_until_ready(fn(self.shard))
-        return self._prep
+        qcfg = self.qcfg_for(B) if B is not None else self.qcfg
+        prep = self._preps.get(qcfg.score_chunk)
+        if prep is None:
+            if self.index is not None:
+                prep = precompute_prep(self.index, self.mesh, self.shard, qcfg)
+            else:
+                fn = Q.make_prep_fn(self.mesh, self.C, self.n, qcfg)
+                prep = jax.block_until_ready(fn(self.shard))
+            self._preps[qcfg.score_chunk] = prep
+        return prep
 
     def query_fn(self, B: int):
-        key = (B, self.C, self.n, self.qcfg)
+        qcfg = self.qcfg_for(B)
+        key = (B, self.C, self.n, qcfg)
         fn = self._cache.get(key)
         if fn is None:
-            fn = Q.make_query_fn(self.mesh, self.C, self.n, self.qcfg,
+            fn = Q.make_query_fn(self.mesh, self.C, self.n, qcfg,
                                  batch=B, with_prep=self._use_prep)
             self._cache[key] = fn
         return fn
 
-    def warmup(self):
-        """Compile every bucket program once (zero-row dummy queries)."""
+    def warmup(self, cost_reps: int = 2):
+        """Compile every bucket program once (zero-row dummy queries) and
+        measure its dispatch cost, so `plan_batches` can pick buckets from
+        observed per-query cost instead of assuming bigger is cheaper."""
         for B in self.buckets:
             qa = (jnp.full((B, self.n), 0xFFFFFFFF, jnp.uint32),
                   jnp.zeros((B, self.n), jnp.float32),
                   jnp.zeros((B, self.n), jnp.float32),
                   jnp.zeros((B,), jnp.float32), jnp.zeros((B,), jnp.float32))
-            jax.block_until_ready(self.query_fn(B)(*qa, self.shard,
-                                                   *self._prep_args()))
+            fn = self.query_fn(B)
+            args = qa + (self.shard,) + self._prep_args(B)
+            jax.block_until_ready(fn(*args))  # compile
+            ts = []
+            for _ in range(max(cost_reps, 1)):
+                t0 = time.perf_counter()
+                jax.block_until_ready(fn(*args))
+                ts.append(time.perf_counter() - t0)
+            self._bucket_cost[B] = float(np.median(ts))
 
-    def _prep_args(self):
-        prep = self.prep()
+    def _prep_args(self, B: Optional[int] = None):
+        prep = self.prep(B)
         return (prep,) if prep is not None else ()
 
     # -- batching ------------------------------------------------------------
@@ -158,15 +233,26 @@ class QueryServer:
                 return b
         return self.buckets[-1]
 
-    def _dispatch(self, qa, nq: int):
-        """Run one ≤max-bucket slice: pad to its bucket, query, slice back."""
-        B = self.bucket_for(nq)
+    def plan_batches(self, nq: int) -> List[int]:
+        """Cover ``nq`` queries with bucket dispatches of minimal measured
+        cost (exact DP over the warmup timings). Before warmup — no costs
+        yet — fall back to the legacy greedy max-bucket slicing."""
+        if not self._bucket_cost or nq <= 0:
+            bmax = self.buckets[-1]
+            full, tail = divmod(nq, bmax)
+            return [bmax] * full + ([self.bucket_for(tail)] if tail else [])
+        costs = tuple(sorted(self._bucket_cost.items()))
+        return list(_plan_cover(nq, self.buckets, costs))
+
+    def _dispatch(self, qa, nq: int, B: Optional[int] = None):
+        """Run one ≤bucket slice: pad to its bucket, query, slice back."""
+        B = self.bucket_for(nq) if B is None else B
         pad = B - nq
         if pad:
             qa = tuple(jnp.concatenate(
                 [a, jnp.broadcast_to(a[nq - 1:nq], (pad,) + a.shape[1:])])
                 for a in qa)
-        prep_args = self._prep_args()
+        prep_args = self._prep_args(B)
         t0 = time.perf_counter()
         out = self.query_fn(B)(*qa, self.shard, *prep_args)
         jax.block_until_ready(out)
@@ -180,9 +266,9 @@ class QueryServer:
     def query_batch(self, sketches: CorrelationSketch):
         """Serve a batch of query sketches (leading [NQ] axis) → [NQ, k] results.
 
-        Batches larger than the biggest bucket are served in max-bucket
-        slices; the tail slice pads up to the smallest fitting bucket. Only
-        the real queries' rows are returned.
+        The batch is covered by the bucket plan of `plan_batches` (measured
+        per-dispatch costs after `warmup()`; greedy max-bucket before). Only
+        the real queries' rows are returned, in request order.
         """
         qa = query_arrays(sketches)
         nq = int(qa[0].shape[0])
@@ -190,11 +276,12 @@ class QueryServer:
             empty = lambda dt: jnp.zeros((0, self.qcfg.k), dt)
             return (empty(jnp.float32), empty(jnp.int32),
                     empty(jnp.float32), empty(jnp.float32))
-        bmax = self.buckets[-1]
         outs = []
-        for s in range(0, nq, bmax):
-            e = min(s + bmax, nq)
-            outs.append(self._dispatch(tuple(a[s:e] for a in qa), e - s))
+        s = 0
+        for B in self.plan_batches(nq):
+            e = min(s + B, nq)
+            outs.append(self._dispatch(tuple(a[s:e] for a in qa), e - s, B=B))
+            s = e
         return tuple(jnp.concatenate(parts) for parts in zip(*outs))
 
     def query_columns(self, keys_list, values_list, *, chunk: int = 8192):

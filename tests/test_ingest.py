@@ -1,0 +1,323 @@
+"""Fused multi-column ingest engine: bit-exact equivalence with the
+per-column loop, merge algebra (associativity/commutativity/identity),
+sentinel-hash guard, and the serve-layer bucket planner."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import hashing as H
+from repro.core import sketch as S
+from repro.data.pipeline import Table, TableGroup, group_corpus
+from repro.engine import index as IX
+from repro.engine import ingest as G
+
+
+def _fields(sk, c=None):
+    take = (lambda a: a) if c is None else (lambda a: a[c])
+    return {f: np.asarray(take(getattr(sk, f)))
+            for f in ("key_hash", "acc", "cnt", "order", "mask",
+                      "col_min", "col_max", "rows")}
+
+
+def _assert_bit_identical(got, want, ctx=""):
+    for f, a in got.items():
+        assert np.array_equal(a, want[f]), (ctx, f, a, want[f])
+
+
+def _valid_dict(sk, c=None):
+    kh, vals, m = sk.key_hash, sk.values(), np.asarray(sk.mask)
+    if c is not None:
+        kh, vals, m = kh[c], vals[c], m[c]
+    return dict(zip(np.asarray(kh)[m].tolist(), np.asarray(vals)[m].tolist()))
+
+
+# ---------------------------------------------------------------------------
+# fused multi-column build == per-column loop, bit for bit
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("agg", list(S.Agg))
+def test_fused_table_build_bit_identical_to_loop(rng, agg):
+    m, C, n = 7000, 5, 64
+    keys = rng.integers(0, 1500, size=m).astype(np.uint32)
+    vals = rng.normal(size=(C, m)).astype(np.float32)
+    vals[1, ::7] = np.nan                      # per-column missing data
+    vals[3, 100:400] = np.nan
+    fused = G.sketch_table(keys, vals, n=n, agg=agg, chunk=1024, block=3)
+    for c in range(C):
+        ref = S.build_sketch_streaming(keys, vals[c], n=n, agg=agg, chunk=1024)
+        _assert_bit_identical(_fields(fused, c), _fields(ref), (agg, c))
+
+
+def test_fused_single_chunk_matches_build_sketch(rng):
+    """`build_sketch_cols` (one chunk, all columns) == C `build_sketch`s."""
+    m, C, n = 1200, 4, 32
+    keys = rng.integers(0, 300, size=m).astype(np.uint32)
+    vals = rng.normal(size=(C, m)).astype(np.float32)
+    valid = np.arange(m) < (m - 77)            # padded tail
+    fused = S.build_sketch_cols(jnp.asarray(keys), jnp.asarray(vals), n=n,
+                                valid=jnp.asarray(valid), order_offset=5.0)
+    for c in range(C):
+        ref = S.build_sketch(jnp.asarray(keys), jnp.asarray(vals[c]), n=n,
+                             valid=jnp.asarray(valid), order_offset=5.0)
+        _assert_bit_identical(_fields(fused, c), _fields(ref), c)
+
+
+# ---------------------------------------------------------------------------
+# merge algebra
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("agg", list(S.Agg))
+def test_streaming_equals_oneshot_uneven_chunks(rng, agg):
+    """Chunk layout must never change the sketch: odd sizes, a tail shorter
+    than the sketch, and chunk ≫ m all reduce to the one-shot build."""
+    m, n = 3001, 64
+    keys = rng.integers(0, 700, size=m).astype(np.uint32)
+    vals = rng.normal(size=m).astype(np.float32)
+    whole = S.build_sketch(jnp.asarray(keys), jnp.asarray(vals), n=n, agg=agg)
+    for chunk in (37, 512, 3000, 4096):
+        got = S.build_sketch_streaming(keys, vals, n=n, agg=agg, chunk=chunk)
+        assert _valid_dict(got) == pytest.approx(_valid_dict(whole),
+                                                 rel=1e-5, abs=1e-5), chunk
+        np.testing.assert_array_equal(np.asarray(got.key_hash),
+                                      np.asarray(whole.key_hash))
+        assert float(got.rows) == float(whole.rows)
+
+
+@pytest.mark.parametrize("agg", list(S.Agg))
+def test_merge_associative_commutative(rng, agg):
+    m, n = 2400, 32
+    keys = rng.integers(0, 400, size=m).astype(np.uint32)
+    vals = rng.normal(size=m).astype(np.float32)
+    cuts = (0, 800, 1500, m)
+    parts = [S.build_sketch(jnp.asarray(keys[a:b]), jnp.asarray(vals[a:b]),
+                            n=n, agg=agg, order_offset=float(a))
+             for a, b in zip(cuts[:-1], cuts[1:])]
+    a, b, c = parts
+    left = S.merge(S.merge(a, b), c)
+    right = S.merge(a, S.merge(b, c))
+    ab, ba = S.merge(a, b), S.merge(b, a)
+    for x, y in ((left, right), (ab, ba)):
+        gx, gy = _valid_dict(x), _valid_dict(y)
+        assert gx.keys() == gy.keys()
+        for k in gx:
+            assert abs(gx[k] - gy[k]) < 1e-4 * max(1.0, abs(gy[k])), (agg, k)
+    # the whole build is the canonical fold result
+    whole = S.build_sketch(jnp.asarray(keys), jnp.asarray(vals), n=n, agg=agg)
+    gl, gw = _valid_dict(left), _valid_dict(whole)
+    assert gl.keys() == gw.keys()
+    for k in gw:
+        assert abs(gl[k] - gw[k]) < 1e-3 * max(1.0, abs(gw[k])), (agg, k)
+
+
+def test_empty_sketch_is_merge_identity(rng):
+    m, C, n = 500, 3, 32
+    keys = rng.integers(0, 100, size=m).astype(np.uint32)
+    vals = rng.normal(size=(C, m)).astype(np.float32)
+    sk = S.build_sketch_cols(jnp.asarray(keys), jnp.asarray(vals), n=n)
+    empty = S.empty_sketch_cols(C, n)
+    for merged in (G.merge_cols(empty, sk), G.merge_cols(sk, empty)):
+        _assert_bit_identical(_fields(merged), _fields(sk))
+
+
+def test_tree_merge_equals_linear_fold(rng):
+    m, C, n = 4000, 3, 32
+    keys = rng.integers(0, 900, size=m).astype(np.uint32)
+    vals = rng.normal(size=(C, m)).astype(np.float32)
+    for P in (2, 3, 5):
+        parts = [S.build_sketch_cols(jnp.asarray(keys[s::P]),
+                                     jnp.asarray(vals[:, s::P]), n=n)
+                 for s in range(P)]
+        stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *parts)
+        tree = G.tree_merge(stacked)
+        lin = parts[0]
+        for p in parts[1:]:
+            lin = G.merge_cols(lin, p)
+        for c in range(C):
+            gt, gl = _valid_dict(tree, c), _valid_dict(lin, c)
+            assert gt.keys() == gl.keys(), (P, c)
+            for k in gl:
+                assert abs(gt[k] - gl[k]) < 1e-4 * max(1.0, abs(gl[k])), (P, c)
+
+
+# ---------------------------------------------------------------------------
+# sentinel guard: the one key that murmur-hashes to PAD_KEY
+# ---------------------------------------------------------------------------
+
+def _murmur_preimage_u32(target: int, seed: int = int(H.DEFAULT_SEED)) -> int:
+    """Invert murmur3-32 on single-block (uint32) keys: every mixing step is
+    a bijection on Z_2^32, so the preimage is unique and computable."""
+    M = 1 << 32
+    inv = lambda x: pow(int(x), -1, M)
+    rotr = lambda x, r: ((x >> r) | (x << (32 - r))) & (M - 1)
+    unxs = lambda y, s: y ^ (y >> s) ^ ((y >> s) >> s)  # inverse xor-shift
+    h = target
+    h = unxs(h, 16)
+    h = (h * inv(H._F2)) % M
+    h = unxs(h, 13)
+    h = (h * inv(H._F1)) % M
+    h = unxs(h, 16)
+    h ^= 4                                   # length xor
+    h = ((h - int(H._N1)) * inv(5)) % M      # undo h*5 + N1
+    h = rotr(h, 13)
+    k = h ^ seed                             # undo h ^= k'
+    k = (k * inv(H._C2)) % M
+    k = rotr(k, 15)
+    k = (k * inv(H._C1)) % M
+    return k
+
+
+def test_sentinel_preimage_inverts_murmur():
+    key = _murmur_preimage_u32(0xFFFFFFFF)
+    got = int(np.asarray(H.murmur3_32(jnp.asarray([key], dtype=jnp.uint32)))[0])
+    assert got == 0xFFFFFFFF
+
+
+@pytest.mark.parametrize("fused", [False, True])
+def test_sentinel_key_not_treated_as_padding(rng, fused):
+    """A real key hashing to 0xFFFFFFFF must be excluded from KMV slots (the
+    query path can never match it) but still counted in the column stats —
+    not silently folded into the padding region."""
+    bad = _murmur_preimage_u32(0xFFFFFFFF)
+    keys = np.concatenate([[bad], rng.integers(0, 50, size=99).astype(np.uint32)]).astype(np.uint32)
+    vals = np.concatenate([[1e6], rng.normal(size=99)]).astype(np.float32)
+    if fused:
+        sk = jax.tree.map(lambda a: a[0],
+                          G.sketch_table(keys, vals[None, :], n=128, chunk=64))
+    else:
+        sk = S.build_sketch(jnp.asarray(keys), jnp.asarray(vals), n=128)
+    kh, mask = np.asarray(sk.key_hash), np.asarray(sk.mask)
+    assert not (kh[mask] == 0xFFFFFFFF).any()      # no sentinel in valid slots
+    assert float(sk.rows) == 100.0                 # row still counted in stats
+    assert float(sk.col_max) == 1e6                # its value still bounds C_high
+    # merging sketches that saw the sentinel key stays consistent
+    merged = S.merge(sk, S.build_sketch(jnp.asarray(keys[:50]),
+                                        jnp.asarray(vals[:50]), n=128))
+    mm = np.asarray(merged.mask)
+    assert not (np.asarray(merged.key_hash)[mm] == 0xFFFFFFFF).any()
+
+
+def test_fib_sentinel_preimage_excluded_identically(rng):
+    """The one key whose *Fibonacci* hash equals PAD_FIB would tie with
+    padding in `_bottom_n`'s top_k (tie-break can drop it) while the fused
+    rank selection would keep it — both paths must exclude it instead."""
+    M = 1 << 32
+    kh_star = (0xFFFFFFFF * pow(int(H.FIBONACCI_MULTIPLIER), -1, M)) % M
+    assert int(np.asarray(H.fibonacci_u32(jnp.asarray([kh_star],
+                                          dtype=jnp.uint32)))[0]) == 0xFFFFFFFF
+    bad = _murmur_preimage_u32(kh_star)
+    keys = np.concatenate([[bad] * 3, rng.integers(0, 40, size=97)
+                           ]).astype(np.uint32)
+    vals = rng.normal(size=100).astype(np.float32)
+    loop = S.build_sketch(jnp.asarray(keys), jnp.asarray(vals), n=128)
+    fused = jax.tree.map(lambda a: a[0],
+                         G.sketch_table(keys, vals[None, :], n=128, chunk=32))
+    _assert_bit_identical(_fields(fused), _fields(loop))
+    kh, mask = np.asarray(loop.key_hash), np.asarray(loop.mask)
+    assert not (kh[mask] == kh_star).any()         # reserved fib preimage
+    assert float(loop.rows) == 100.0               # rows still in col stats
+
+
+# ---------------------------------------------------------------------------
+# index integration + distributed story
+# ---------------------------------------------------------------------------
+
+def test_build_index_fused_equals_loop(rng):
+    groups = group_corpus(rng, 2, n_cols=3, n_max=2000)
+    mixed = [groups[0], Table(keys=groups[0].keys,
+                              values=groups[0].values[0] * 2.0, name="solo"),
+             groups[1]]
+    fused = IX.build_index(mixed, n=32, pad_to=8)
+    loop = IX.build_index(mixed, n=32, pad_to=8, engine="loop")
+    assert fused.names == loop.names and fused.num_columns == 7
+    for f in ("key_hash", "values", "mask", "col_min", "col_max", "rows"):
+        np.testing.assert_array_equal(np.asarray(getattr(fused.shard, f)),
+                                      np.asarray(getattr(loop.shard, f)))
+
+
+def test_table_group_columns_view(rng):
+    g = group_corpus(rng, 1, n_cols=4, n_max=1000)[0]
+    cols = g.columns()
+    assert len(cols) == 4 and all(c.keys is g.keys for c in cols)
+    assert [c.name for c in cols] == [g.column_name(i) for i in range(4)]
+
+
+def test_prep_cache_persisted_on_index(rng):
+    from repro.engine import query as Q
+    from repro.engine import serve as SV
+    groups = group_corpus(rng, 2, n_cols=2, n_max=1500)
+    idx = IX.build_index(groups, n=32, pad_to=4)
+    mesh = jax.make_mesh((1,), ("shard",))
+    shard = IX.shard_for_mesh(idx, mesh)
+    qcfg = Q.QueryConfig(k=3, scorer="s4")
+    prep = IX.precompute_prep(idx, mesh, shard, qcfg)
+    assert prep is not None and len(idx.prep_cache) == 1
+    srv = SV.QueryServer(mesh, shard, qcfg, buckets=(1, 2), index=idx)
+    assert srv.prep(1) is prep                     # lookup, not recompute
+    # bucket with a shrunk score_chunk gets its own cached entry
+    srv2 = SV.QueryServer(mesh, shard, qcfg, buckets=(2,), index=idx,
+                          batch_rows=2 * 64)
+    p2 = srv2.prep(2)
+    assert p2 is not None and len(idx.prep_cache) == 2
+
+
+# ---------------------------------------------------------------------------
+# serve-layer planning (measured-cost bucket cover)
+# ---------------------------------------------------------------------------
+
+def _mk_server(buckets=(1, 8, 32)):
+    from repro.engine import query as Q
+    from repro.engine import serve as SV
+    rng = np.random.default_rng(3)
+    groups = group_corpus(rng, 2, n_cols=2, n_max=1200)
+    idx = IX.build_index(groups, n=32, pad_to=4)
+    mesh = jax.make_mesh((1,), ("shard",))
+    shard = IX.shard_for_mesh(idx, mesh)
+    return SV.QueryServer(mesh, shard, Q.QueryConfig(k=3), buckets=buckets,
+                          index=idx)
+
+
+def test_plan_batches_measured_costs():
+    srv = _mk_server()
+    # B=8 strictly cheapest per query → 40 queries = five 8-dispatches
+    srv._bucket_cost = {1: 0.004, 8: 0.010, 32: 0.060}
+    assert srv.plan_batches(40) == [8, 8, 8, 8, 8]
+    # make the big bucket economical → it should be used
+    srv._bucket_cost = {1: 0.004, 8: 0.010, 32: 0.020}
+    assert srv.plan_batches(40) == [8, 32]
+    assert sum(srv.plan_batches(33)) >= 33
+    # without measurements: legacy greedy max-bucket fallback
+    srv._bucket_cost = {}
+    assert srv.plan_batches(40) == [32, 8]
+
+
+def test_qcfg_for_shrinks_score_chunk():
+    srv = _mk_server()
+    assert srv.qcfg_for(1).score_chunk == srv.qcfg.score_chunk
+    assert srv.qcfg_for(8).score_chunk == srv.qcfg.score_chunk
+    assert srv.qcfg_for(32).score_chunk == max(64, srv.batch_rows // 32)
+
+
+def test_planned_serving_matches_sequential(rng):
+    """End-to-end: whatever plan the server picks, results must equal the
+    sequential single-query engine row for row."""
+    from repro.engine import query as Q
+    from repro.engine import serve as SV
+    groups = group_corpus(rng, 3, n_cols=2, n_max=1500)
+    idx = IX.build_index(groups, n=64, pad_to=6)
+    mesh = jax.make_mesh((1,), ("shard",))
+    shard = IX.shard_for_mesh(idx, mesh)
+    qcfg = Q.QueryConfig(k=4, scorer="s4")
+    srv = SV.QueryServer(mesh, shard, qcfg, buckets=(1, 2), index=idx)
+    srv.warmup()
+    qts = [Table(keys=g.keys, values=g.values[0]) for g in groups]
+    out = srv.query_columns([t.keys for t in qts], [t.values for t in qts])
+    assert all(o.shape == (3, 4) for o in out)
+    seqfn = Q.make_query_fn(mesh, shard.num_columns, 64, qcfg)
+    sks = SV.build_query_sketches([t.keys for t in qts],
+                                  [t.values for t in qts], n=64)
+    for i in range(3):
+        ref = seqfn(*IX.query_arrays(jax.tree.map(lambda a, i=i: a[i], sks)),
+                    shard)
+        for got, want in zip(out, ref):
+            np.testing.assert_array_equal(np.asarray(got[i]), np.asarray(want))
