@@ -1,0 +1,88 @@
+"""Measure tier-1 line coverage of src/repro/{core,engine} without coverage.py.
+
+The dev container has no pytest-cov, so the CI coverage gate's fail-under
+baseline was measured with this tool: a sys.settrace line tracer scoped to
+the target files (executed lines), divided by the executable-line count
+derived from code objects (`co_lines`, the same source coverage.py uses).
+Numbers track pytest-cov within a couple of points; the CI threshold is set
+a few points under the measurement to absorb the methodology gap.
+
+    PYTHONPATH=src python .github/measure_coverage.py [pytest args...]
+"""
+import os
+import sys
+import threading
+
+TARGETS = tuple(os.path.abspath(os.path.join("src", "repro", d)) + os.sep
+                for d in ("core", "engine"))
+executed = {}
+_match = {}   # raw co_filename → normalized path | None (modules may be
+              # imported via relative or ..-containing sys.path entries)
+
+
+def _norm(fn):
+    path = _match.get(fn)
+    if path is None and fn not in _match:
+        ap = os.path.abspath(fn)
+        path = ap if ap.startswith(TARGETS) else None
+        _match[fn] = path
+    return path
+
+
+def _global_trace(frame, event, arg):
+    if event != "call":
+        return None
+    if _norm(frame.f_code.co_filename) is None:
+        return None
+    return _local_trace
+
+
+def _local_trace(frame, event, arg):
+    if event == "line":
+        executed.setdefault(_norm(frame.f_code.co_filename),
+                            set()).add(frame.f_lineno)
+    return _local_trace
+
+
+def executable_lines(path):
+    with open(path) as f:
+        code = compile(f.read(), path, "exec")
+    lines, stack = set(), [code]
+    while stack:
+        co = stack.pop()
+        lines.update(ln for _, _, ln in co.co_lines() if ln is not None)
+        stack.extend(c for c in co.co_consts if hasattr(c, "co_lines"))
+    return lines
+
+
+def main():
+    sys.settrace(_global_trace)
+    threading.settrace(_global_trace)
+    import pytest
+    rc = pytest.main(["-q"] + sys.argv[1:])
+    sys.settrace(None)
+    threading.settrace(None)
+
+    total_exec = total_hit = 0
+    rows = []
+    for root in TARGETS:
+        for dirpath, _, files in os.walk(root):
+            for f in sorted(files):
+                if not f.endswith(".py"):
+                    continue
+                path = os.path.join(dirpath, f)
+                want = executable_lines(path)
+                hit = executed.get(path, set()) & want
+                rows.append((path, len(hit), len(want)))
+                total_exec += len(want)
+                total_hit += len(hit)
+    for path, h, w in rows:
+        rel = os.path.relpath(path)
+        print(f"{rel:60s} {h:5d}/{w:<5d} {100.0 * h / max(w, 1):5.1f}%")
+    print(f"{'TOTAL':60s} {total_hit:5d}/{total_exec:<5d} "
+          f"{100.0 * total_hit / max(total_exec, 1):5.1f}%")
+    return rc
+
+
+if __name__ == "__main__":
+    sys.exit(main())

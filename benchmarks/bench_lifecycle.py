@@ -1,0 +1,173 @@
+"""Index lifecycle benchmark: append latency, serving throughput during
+compaction, and snapshot round-trip time (`repro.engine.lifecycle`).
+
+The scenario the static index cannot serve: a corpus that *grows while it
+serves*. We build a base index, then measure
+
+  * **append latency** — per-table `LiveIndex.append` wall time (fused
+    ingest into the active delta segment) while the server keeps answering;
+  * **during-compaction QPS** — a background thread runs `compact()` while
+    the foreground serves query batches; readers never block on the fold
+    (version fast-path), so throughput should hold near steady-state;
+  * **snapshot** — `save(path)` / `LiveIndex.load(path)` wall time, plus a
+    bit-identity check that the loaded index serves identical results.
+
+Emits ``BENCH_lifecycle.json``.
+
+    PYTHONPATH=src python -m benchmarks.bench_lifecycle [--smoke]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import tempfile
+import threading
+import time
+
+import numpy as np
+import jax
+
+from repro.data.pipeline import grow_corpus
+from repro.engine import lifecycle as L
+from repro.engine import query as Q
+from repro.engine import serve as SV
+from repro.launch.mesh import make_host_mesh
+
+ARTIFACT = "BENCH_lifecycle.json"
+
+
+def run(n_groups: int = 48, n_cols: int = 8, n_rows: int = 8000,
+        n_sketch: int = 256, delta_cap: int = 64, n_queries: int = 32,
+        steady_rounds: int = 6, seed: int = 13,
+        artifact: str | None = ARTIFACT):
+    rng = np.random.default_rng(seed)
+    # the growing-corpus scenario: batches of tables arriving over time,
+    # all joined through one shared key universe (data/pipeline.py)
+    groups = [g for batch in grow_corpus(rng, n_batches=n_groups,
+                                         tables_per_batch=1, n_cols=n_cols,
+                                         n_max=n_rows)
+              for g in batch]
+    half = n_groups // 2
+
+    live = L.LiveIndex(n=n_sketch, delta_cap=delta_cap)
+    t0 = time.perf_counter()
+    live.append(groups[:half])
+    live.compact()
+    t_build = time.perf_counter() - t0
+
+    mesh = make_host_mesh()
+    qcfg = Q.QueryConfig(k=10, scorer="s4")
+    srv = L.LiveQueryServer(mesh, live, qcfg, buckets=(1, 8))
+    srv.warmup()
+
+    # query batch: subsampled columns of indexed tables (guaranteed joins)
+    qk, qv = [], []
+    for i in range(n_queries):
+        g = groups[i % half]
+        m = g.keys.shape[0]
+        sel = rng.choice(m, size=min(1024, m), replace=False)
+        col = np.nan_to_num(g.values[i % n_cols])
+        qk.append(g.keys[sel])
+        qv.append(col[sel])
+    qsks = SV.build_query_sketches(qk, qv, n=n_sketch)
+
+    # -- append latency while serving ---------------------------------------
+    append_ms = []
+    for g in groups[half:]:
+        t0 = time.perf_counter()
+        live.append([g])
+        append_ms.append(1e3 * (time.perf_counter() - t0))
+        srv.query_batch(qsks)     # serving continues between appends
+    # warm the post-mutation shapes (incl. the compaction target rung) so
+    # the QPS phases below measure dispatch, not first-touch compiles
+    srv.refresh()
+    srv.warmup()
+
+    # -- steady-state QPS ---------------------------------------------------
+    t0 = time.perf_counter()
+    for _ in range(steady_rounds):
+        srv.query_batch(qsks)
+    steady_s = time.perf_counter() - t0
+    qps_steady = steady_rounds * n_queries / steady_s
+
+    # -- QPS during compaction ----------------------------------------------
+    compact_s = [0.0]
+
+    def _compact():
+        t0 = time.perf_counter()
+        live.compact()
+        compact_s[0] = time.perf_counter() - t0
+
+    served = 0
+    th = threading.Thread(target=_compact)
+    t0 = time.perf_counter()
+    th.start()
+    while True:   # serve at least one batch even if the fold wins the race
+        srv.query_batch(qsks)
+        served += n_queries
+        if not th.is_alive():
+            break
+    th.join()
+    # partial last batch overlaps the join; measure the full loop window
+    during_s = time.perf_counter() - t0
+    qps_during = served / during_s if served else 0.0
+    out_now = srv.query_batch(qsks)
+
+    # -- snapshot round trip ------------------------------------------------
+    with tempfile.TemporaryDirectory() as tmp:
+        snap = os.path.join(tmp, "snap")
+        t0 = time.perf_counter()
+        live.save(snap)
+        save_s = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        loaded = L.LiveIndex.load(snap)
+        load_s = time.perf_counter() - t0          # snapshot load alone
+        t0 = time.perf_counter()
+        srv2 = L.LiveQueryServer(mesh, loaded, qcfg, buckets=(1, 8),
+                                 cache=srv.cache)   # programs already built
+        out_loaded = srv2.query_batch(qsks)
+        # device placement + first query batch on the loaded index
+        cold_serve_s = time.perf_counter() - t0
+    identical = all(np.array_equal(a, b) for a, b in zip(out_now, out_loaded))
+
+    st = live.stats()
+    result = dict(
+        n_groups=n_groups, n_cols=n_cols, n_rows=n_rows, n_sketch=n_sketch,
+        delta_cap=delta_cap, columns=st["live"], n_queries=n_queries,
+        build_s=t_build,
+        append_ms_p50=float(np.percentile(append_ms, 50)),
+        append_ms_p90=float(np.percentile(append_ms, 90)),
+        append_tables_per_s=1e3 / float(np.mean(append_ms)),
+        qps_steady=qps_steady, qps_during_compaction=qps_during,
+        compact_s=compact_s[0], queries_served_during_compaction=served,
+        save_s=save_s, load_s=load_s, cold_serve_s=cold_serve_s,
+        load_roundtrip_identical=bool(identical),
+        compiles=srv.cache.misses,
+    )
+    if artifact:
+        with open(artifact, "w") as f:
+            json.dump(result, f, indent=2)
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized: 10 tables × 4 cols × 2k rows, no artifact")
+    args = ap.parse_args()
+    kw = {}
+    if args.smoke:
+        kw = dict(n_groups=10, n_cols=4, n_rows=2000, n_sketch=64,
+                  delta_cap=8, n_queries=8, steady_rounds=3, artifact=None)
+    r = run(**kw)
+    print("lifecycle," + ",".join(f"{k}={v:.4g}" if isinstance(v, float)
+                                  else f"{k}={v}" for k, v in r.items()))
+    if not args.smoke:
+        print(f"wrote {os.path.abspath(ARTIFACT)}")
+    assert r["load_roundtrip_identical"], "snapshot round-trip diverged"
+    assert r["qps_during_compaction"] > 0, "no queries served during compaction"
+
+
+if __name__ == "__main__":
+    main()

@@ -17,12 +17,13 @@ def main() -> None:
     ap.add_argument("--fast", action="store_true",
                     help="smaller corpora (CI-sized)")
     ap.add_argument("--only", default=None,
-                    help="comma-separated subset: accuracy,rmse,ranking,runtime,latency,ingest,roofline")
+                    help="comma-separated subset: accuracy,rmse,ranking,"
+                         "runtime,latency,ingest,lifecycle,roofline")
     args = ap.parse_args()
 
-    from benchmarks import (bench_accuracy, bench_ingest, bench_query_latency,
-                            bench_ranking, bench_rmse, bench_roofline,
-                            bench_runtime)
+    from benchmarks import (bench_accuracy, bench_ingest, bench_lifecycle,
+                            bench_query_latency, bench_ranking, bench_rmse,
+                            bench_roofline, bench_runtime)
 
     fast = args.fast
     suites = {
@@ -43,10 +44,17 @@ def main() -> None:
             n_cols=8 if fast else 32, n_rows=131072 if fast else 1_000_000,
             chunk=16384 if fast else 65536,
             artifact=None if fast else bench_ingest.ARTIFACT),
+        "lifecycle": lambda: bench_lifecycle.run(
+            n_groups=10 if fast else 48, n_cols=4 if fast else 8,
+            n_rows=2000 if fast else 8000, n_sketch=64 if fast else 256,
+            delta_cap=8 if fast else 64, n_queries=8 if fast else 32,
+            steady_rounds=3 if fast else 6,
+            artifact=None if fast else bench_lifecycle.ARTIFACT),
     }
     names = {"accuracy": "fig3_accuracy", "rmse": "fig4_rmse",
              "ranking": "table1_ranking", "runtime": "table2_runtime",
-             "latency": "sec5p5_query_latency", "ingest": "ingest"}
+             "latency": "sec5p5_query_latency", "ingest": "ingest",
+             "lifecycle": "lifecycle"}
     only = set(args.only.split(",")) if args.only else None
 
     for key, fn in suites.items():

@@ -350,6 +350,34 @@ def empty_sketch_cols(C: int, n: int, agg: Agg = Agg.MEAN) -> CorrelationSketch:
     )
 
 
+def place_cols(sk: CorrelationSketch, capacity: int,
+               offset: int = 0) -> CorrelationSketch:
+    """Embed a stacked ``[C, n]`` sketch into a ``[capacity, n]`` stack at row
+    ``offset``, every other slot the `merge` identity (`empty_sketch_cols`).
+
+    Because empty slots are merge identities, stacks whose occupied slots are
+    disjoint combine by element-wise merge into their union — this is what
+    lets `repro.engine.lifecycle` fold whole index segments with `tree_merge`:
+    place each segment's columns at their global offsets, fold, and columns
+    land untouched (sketch ⊕ identity == sketch, bit-for-bit).
+    """
+    C = sk.key_hash.shape[0]
+    if offset < 0 or offset + C > capacity:
+        raise ValueError(f"cannot place {C} columns at offset {offset} "
+                         f"in capacity {capacity}")
+    lo, hi = offset, capacity - offset - C
+    pad = lambda a: jnp.pad(a, ((lo, hi),) + ((0, 0),) * (a.ndim - 1))
+    return CorrelationSketch(
+        key_hash=jnp.pad(sk.key_hash, ((lo, hi), (0, 0)),
+                         constant_values=PAD_KEY),
+        acc=pad(sk.acc), cnt=pad(sk.cnt), order=pad(sk.order),
+        mask=pad(sk.mask),
+        col_min=jnp.pad(sk.col_min, (lo, hi), constant_values=jnp.inf),
+        col_max=jnp.pad(sk.col_max, (lo, hi), constant_values=-jnp.inf),
+        rows=pad(sk.rows), agg=sk.agg,
+    )
+
+
 # ----------------------------------------------------------------------------
 # construction
 # ----------------------------------------------------------------------------

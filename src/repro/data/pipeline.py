@@ -122,6 +122,25 @@ def group_corpus(rng, n_groups: int, n_cols: int = 16, n_max: int = 100_000):
             for i in range(n_groups)]
 
 
+def grow_corpus(rng, n_batches: int, tables_per_batch: int = 4,
+                n_cols: int = 8, n_max: int = 8000,
+                key_space: int = 1 << 14, start: int = 0
+                ) -> Iterator[List[TableGroup]]:
+    """Growing-corpus scenario: yields successive arrival batches of wide
+    tables, the workload of the live index lifecycle
+    (`repro.engine.lifecycle`). All batches share one key universe (an
+    open-data portal's entity ids), so queries join across the whole
+    history; table names continue ``g{start}, g{start+1}, …`` so later
+    arrivals extend earlier ones rather than colliding."""
+    i = start
+    for _ in range(n_batches):
+        batch = [multi_column_group(rng, n_cols=n_cols, n_max=n_max,
+                                    key_space=key_space, name=f"g{i + j}")
+                 for j in range(tables_per_batch)]
+        i += tables_per_batch
+        yield batch
+
+
 def sbn_pair(rng, n_max: int = 500_000, r: Optional[float] = None,
              key_space: int = 1 << 30) -> Tuple[Table, Table, float, float]:
     """One Synthetic-Bivariate-Normal table pair (§5.1 SBN):

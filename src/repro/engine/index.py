@@ -20,8 +20,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import hashing
-from repro.core.sketch import Agg, CorrelationSketch, build_sketch_streaming
+from repro.core.sketch import Agg, CorrelationSketch
 from repro.data.pipeline import Table, TableGroup
 from repro.engine import ingest
 
@@ -123,25 +122,14 @@ def build_index(tables: Sequence[Union[Table, TableGroup]], *, n: int = 256,
         raise ValueError(f"unknown ingest engine {engine!r}: use 'fused' or 'loop'")
     names: List[str] = []
     for i, t in enumerate(tables):
-        if isinstance(t, TableGroup):
-            names.extend(t.column_name(c) for c in range(t.num_columns))
-        else:
-            names.append(t.name or f"col{i}")
+        names.extend(ingest.source_names(t, i))
     C = len(names)
     target = pad_to if pad_to and pad_to >= C else C
     arrays = _IndexArrays(target, n)
     row = 0
     for t in tables:
-        if engine == "loop":
-            cols = t.columns() if isinstance(t, TableGroup) else [t]
-            for col in cols:
-                sk = build_sketch_streaming(col.keys, col.values, n=n, agg=agg,
-                                            chunk=chunk)
-                row = arrays.write(row, jax.tree.map(lambda a: a[None], sk))
-        else:
-            values = t.values if isinstance(t, TableGroup) else t.values[None, :]
-            sk = ingest.sketch_table(t.keys, values, n=n, agg=agg, chunk=chunk)
-            row = arrays.write(row, sk)
+        sk = ingest.sketch_source(t, n=n, agg=agg, chunk=chunk, engine=engine)
+        row = arrays.write(row, sk)
     return SketchIndex(shard=arrays.to_shard(), names=names, n=n)
 
 
@@ -168,13 +156,17 @@ def precompute_prep(index: SketchIndex, mesh, shard: IndexShard, qcfg):
     return prep
 
 
-def shard_for_mesh(index: SketchIndex, mesh) -> IndexShard:
-    """Place the index arrays sharded over all mesh devices (column axis)."""
+def place_shard(shard: IndexShard, mesh) -> IndexShard:
+    """Column-pad an `IndexShard` to the mesh device count and device_put it
+    sharded along the column axis. The padded columns are fully-masked (never
+    match, never eligible), so results are unchanged; the padded column count
+    is deterministic in (C, ndev) — the compile-cache key the serving layers
+    use. Shared by the static path (`shard_for_mesh`) and the per-segment
+    placement of `repro.engine.lifecycle`."""
     from jax.sharding import NamedSharding, PartitionSpec as P
     ndev = mesh.devices.size
-    C = index.shard.num_columns
+    C = shard.num_columns
     pad = (-C) % ndev
-    shard = index.shard
     if pad:
         shard = IndexShard(
             key_hash=jnp.pad(shard.key_hash, ((0, pad), (0, 0)), constant_values=0xFFFFFFFF),
@@ -193,6 +185,11 @@ def shard_for_mesh(index: SketchIndex, mesh) -> IndexShard:
         col_min=jax.device_put(shard.col_min, vec_sharding),
         col_max=jax.device_put(shard.col_max, vec_sharding),
         rows=jax.device_put(shard.rows, vec_sharding))
+
+
+def shard_for_mesh(index: SketchIndex, mesh) -> IndexShard:
+    """Place the index arrays sharded over all mesh devices (column axis)."""
+    return place_shard(index.shard, mesh)
 
 
 # ----------------------------------------------------------------------------

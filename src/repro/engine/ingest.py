@@ -133,6 +133,40 @@ def sketch_table(keys, values, *, n: int = 256, agg: Agg = Agg.MEAN,
     return sk
 
 
+def source_names(t, index: int = 0):
+    """Column names contributed by one ingest source (Table or TableGroup)."""
+    from repro.data.pipeline import TableGroup
+    if isinstance(t, TableGroup):
+        return [t.column_name(c) for c in range(t.num_columns)]
+    return [t.name or f"col{index}"]
+
+
+def sketch_source(t, *, n: int, agg: Agg, chunk: int,
+                  engine: str = "fused") -> CorrelationSketch:
+    """Sketch one ingest source into a stacked ``[C, n]`` sketch.
+
+    The single entry point shared by the one-shot index builder
+    (`repro.engine.index.build_index`) and the streaming append path
+    (`repro.engine.lifecycle.LiveIndex.append`), so a table sketched at
+    append time is bit-identical to the same table sketched at build time —
+    the invariant behind the lifecycle's append+compact == one-shot
+    guarantee. ``engine="loop"`` keeps the legacy per-column
+    `build_sketch_streaming` baseline.
+    """
+    from repro.core.sketch import build_sketch_streaming
+    from repro.data.pipeline import TableGroup
+    if engine not in ("fused", "loop"):
+        raise ValueError(f"unknown ingest engine {engine!r}: use 'fused' or 'loop'")
+    if engine == "loop":
+        cols = t.columns() if isinstance(t, TableGroup) else [t]
+        parts = [build_sketch_streaming(col.keys, col.values, n=n, agg=agg,
+                                        chunk=chunk)
+                 for col in cols]
+        return jax.tree.map(lambda *xs: jnp.stack(xs), *parts)
+    values = t.values if isinstance(t, TableGroup) else t.values[None, :]
+    return sketch_table(t.keys, values, n=n, agg=agg, chunk=chunk)
+
+
 # ----------------------------------------------------------------------------
 # tree-merge: the distributed story
 # ----------------------------------------------------------------------------

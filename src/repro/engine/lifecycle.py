@@ -1,0 +1,627 @@
+"""Index lifecycle: streaming appends, tombstone deletes, compaction and
+snapshots over the sketch index — the paper's corpus (web tables, open-data
+portals) *grows*, so the index must mutate while it serves.
+
+The design is a miniature LSM tree over column sketches:
+
+* **delta segments** — `LiveIndex.append(tables)` runs the fused ingest
+  engine (`repro.engine.ingest.sketch_source`, the same code path as the
+  one-shot `build_index`) and writes the finished ``[C, n]`` sketch stacks
+  into the *active* fixed-capacity delta segment, sealing it and opening a
+  fresh one as it fills. Appends never touch sealed segments, so readers
+  holding a segment snapshot are never invalidated mid-query.
+* **tombstone deletes** — `delete(table_id)` flips the owning slots to the
+  merge identity (mask cleared, key hashes → PAD). A tombstoned column's
+  sketch-join sample is 0 < ``min_sample``, so the unchanged query program
+  scores it ``-inf`` and it can never enter a top-k: deletes are masked out
+  at scoring time, with no recompile and no index rebuild.
+* **compaction** — `compact()` folds every segment into one sealed base
+  segment with `repro.engine.ingest.tree_merge`: each segment's live columns
+  are placed at their global offsets in a capacity-padded stack
+  (`repro.core.sketch.place_cols` — empty slots are merge identities), and
+  the stack of segments is tree-folded. Because ``sketch ⊕ identity ==
+  sketch`` bit-for-bit, K appends followed by a compact are **bit-identical**
+  to a one-shot `build_index` over the same tables — the KMV merge closure
+  (PAPER.md §3) doing the systems work. Dead slots are garbage-collected.
+* **capacity ladder** — segment capacities are drawn from the fixed ladder
+  ``delta_cap · 2^i``, so the serving layer only ever sees a handful of
+  index shapes: every mutation re-uses an already-compiled query program
+  (asserted via `repro.engine.serve.CompileCache.misses` in the tests).
+* **snapshots** — `save(path)`/`LiveIndex.load(path)` persist the full
+  mergeable sketch state (npz) plus a json manifest, round-tripping
+  bit-identically: a loaded index serves bit-identical query results.
+
+`LiveQueryServer` is the read side: one `repro.engine.serve.QueryServer` per
+segment, all sharing a `CompileCache` (same-shape segments share programs)
+with per-segment `PreppedShard` entries, and a deterministic cross-segment
+top-k combine. `refresh()` snapshots the segment list under the index lock,
+so reads are consistent: a query sees either the pre- or post-mutation
+index, never a half-applied one. The one scoring caveat during the delta
+phase: the s4 ci-normalisation spans one segment's candidate list (it is the
+paper's *list*-normalised factor); after `compact()` there is a single
+segment and s4 is globally normalised again. s1/s2 are exact throughout.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import threading
+import time
+from typing import Dict, List, Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.sketch import (Agg, CorrelationSketch, PAD_KEY,
+                               finalize_values, place_cols)
+from repro.data.pipeline import Table, TableGroup
+from repro.engine import ingest
+from repro.engine import query as Q
+from repro.engine import serve as SV
+from repro.engine.index import IndexShard, place_shard
+
+#: snapshot file names (under the directory passed to save/load)
+MANIFEST_FILE = "manifest.json"
+ARRAYS_FILE = "segments.npz"
+#: per-segment persisted arrays, in manifest order
+_SEG_FIELDS = ("kh", "acc", "cnt", "order", "mask", "cmin", "cmax", "rows",
+               "live")
+
+
+@dataclasses.dataclass
+class Segment:
+    """One fixed-capacity stack of column sketches (host-resident).
+
+    Unlike the static `IndexShard`, a segment keeps the *full mergeable*
+    sketch state (acc/cnt/order, not finalised values) so compaction can
+    fold it exactly; `to_index_shard` derives the serve-side view. Slots in
+    ``[used, capacity)`` hold the merge identity; tombstoned slots are reset
+    to it (``live[slot] == False`` is the authoritative flag).
+    """
+    sid: int
+    n: int
+    agg: Agg
+    capacity: int
+    kh: np.ndarray       # u32  [cap, n]
+    acc: np.ndarray      # f32  [cap, n]
+    cnt: np.ndarray      # f32  [cap, n]
+    order: np.ndarray    # f32  [cap, n]
+    mask: np.ndarray     # bool [cap, n]
+    cmin: np.ndarray     # f32  [cap]
+    cmax: np.ndarray     # f32  [cap]
+    rows: np.ndarray     # f32  [cap]
+    names: List[str]     # per used slot
+    tables: List[str]    # per used slot: owning table id
+    live: np.ndarray     # bool [cap]; False for unused + tombstoned slots
+    used: int = 0
+    sealed: bool = False
+    version: int = 0     # bumped on every mutation; serving keys off it
+
+    @classmethod
+    def empty(cls, sid: int, capacity: int, n: int, agg: Agg) -> "Segment":
+        return cls(
+            sid=sid, n=n, agg=agg, capacity=capacity,
+            kh=np.full((capacity, n), PAD_KEY, np.uint32),
+            acc=np.zeros((capacity, n), np.float32),
+            cnt=np.zeros((capacity, n), np.float32),
+            order=np.zeros((capacity, n), np.float32),
+            mask=np.zeros((capacity, n), bool),
+            cmin=np.full((capacity,), np.inf, np.float32),
+            cmax=np.full((capacity,), -np.inf, np.float32),
+            rows=np.zeros((capacity,), np.float32),
+            names=[], tables=[], live=np.zeros((capacity,), bool))
+
+    @property
+    def free(self) -> int:
+        return self.capacity - self.used
+
+    def live_count(self) -> int:
+        return int(self.live.sum())
+
+    def write(self, sk: CorrelationSketch, names: Sequence[str],
+              table_id: str) -> None:
+        """Copy ``len(names)`` columns of a stacked sketch into free slots."""
+        C = len(names)
+        assert C <= self.free and sk.key_hash.shape[0] == C
+        sl = slice(self.used, self.used + C)
+        self.kh[sl] = np.asarray(sk.key_hash)
+        self.acc[sl] = np.asarray(sk.acc)
+        self.cnt[sl] = np.asarray(sk.cnt)
+        self.order[sl] = np.asarray(sk.order)
+        self.mask[sl] = np.asarray(sk.mask)
+        self.cmin[sl] = np.asarray(sk.col_min, np.float32)
+        self.cmax[sl] = np.asarray(sk.col_max, np.float32)
+        self.rows[sl] = np.asarray(sk.rows, np.float32)
+        self.live[sl] = True
+        self.names.extend(names)
+        self.tables.extend([table_id] * C)
+        self.used += C
+        if self.used == self.capacity:
+            self.sealed = True
+        self.version += 1
+
+    def host_snapshot(self) -> "Segment":
+        """Consistent copy of the mutable state (cheap numpy copies) — taken
+        under the index lock so finalisation/device placement can run after
+        the lock is released without risking torn reads."""
+        return dataclasses.replace(
+            self, kh=self.kh.copy(), acc=self.acc.copy(),
+            cnt=self.cnt.copy(), order=self.order.copy(),
+            mask=self.mask.copy(), cmin=self.cmin.copy(),
+            cmax=self.cmax.copy(), rows=self.rows.copy(),
+            names=list(self.names), tables=list(self.tables),
+            live=self.live.copy())
+
+    def tombstone(self, slot: int) -> None:
+        """Reset a slot to the merge identity: masked out at scoring time
+        (m=0 → ineligible → -inf score) and invisible to compaction."""
+        self.live[slot] = False
+        self.kh[slot] = PAD_KEY
+        self.acc[slot] = 0.0
+        self.cnt[slot] = 0.0
+        self.order[slot] = 0.0
+        self.mask[slot] = False
+        self.cmin[slot] = np.inf
+        self.cmax[slot] = -np.inf
+        self.rows[slot] = 0.0
+        self.version += 1
+
+    def as_sketch(self, slots: Optional[np.ndarray] = None) -> CorrelationSketch:
+        """Stacked device sketch of (a subset of) this segment's slots."""
+        take = (lambda a: a) if slots is None else (lambda a: a[slots])
+        return CorrelationSketch(
+            key_hash=jnp.asarray(take(self.kh)), acc=jnp.asarray(take(self.acc)),
+            cnt=jnp.asarray(take(self.cnt)), order=jnp.asarray(take(self.order)),
+            mask=jnp.asarray(take(self.mask)),
+            col_min=jnp.asarray(take(self.cmin)),
+            col_max=jnp.asarray(take(self.cmax)),
+            rows=jnp.asarray(take(self.rows)), agg=self.agg)
+
+    def to_index_shard(self) -> IndexShard:
+        """Serve-side view, normalised to the static-index conventions: dead
+        and unused slots look exactly like `build_index` padding (zeroed
+        stats, PAD keys, empty mask), live slots carry finalised values."""
+        values = np.asarray(finalize_values(
+            jnp.asarray(self.acc), jnp.asarray(self.cnt), self.agg,
+            jnp.asarray(self.mask)))
+        dead = ~self.live
+        kh = self.kh.copy()
+        kh[dead] = PAD_KEY
+        return IndexShard(
+            key_hash=kh,
+            values=np.where(dead[:, None], 0.0, values).astype(np.float32),
+            mask=np.where(dead[:, None], 0.0,
+                          self.mask.astype(np.float32)).astype(np.float32),
+            col_min=np.where(dead, 0.0, self.cmin).astype(np.float32),
+            col_max=np.where(dead, 0.0, self.cmax).astype(np.float32),
+            rows=np.where(dead, 0.0, self.rows).astype(np.float32))
+
+
+def ladder_rung(c: int, base: int) -> int:
+    """Smallest capacity on the fixed ladder ``base · 2^i`` holding c
+    columns. A fixed ladder keeps the set of index shapes (hence compiled
+    query programs) logarithmic in corpus size."""
+    cap = int(base)
+    while cap < c:
+        cap *= 2
+    return cap
+
+
+class LiveIndex:
+    """A mutable sketch index: append / delete / compact / save / load.
+
+    All mutation is guarded by an internal lock and versioned, so a serving
+    layer can snapshot a consistent segment list at any time (`segments()`),
+    keep serving from its device copies, and pick up mutations on its next
+    `refresh()` — readers never block writers and vice versa.
+    """
+
+    def __init__(self, *, n: int = 256, agg: Agg = Agg.MEAN,
+                 chunk: int = 65536, delta_cap: int = 64,
+                 engine: str = "fused"):
+        if delta_cap <= 0:
+            raise ValueError(f"delta_cap must be positive, got {delta_cap}")
+        self.n = int(n)
+        self.agg = agg
+        self.chunk = int(chunk)
+        self.delta_cap = int(delta_cap)
+        self.engine = engine
+        self._segs: List[Segment] = []
+        self._next_sid = 0
+        #: lifetime count of appended sources — default names for unnamed
+        #: tables use the *global* source position (matching `build_index`'s
+        #: enumerate naming), so tables from different append calls can
+        #: never collide under one generated id
+        self._n_sources = 0
+        self._lock = threading.RLock()
+        self.version = 0
+
+    # -- introspection -------------------------------------------------------
+    def segments(self) -> List[Segment]:
+        """Ordered snapshot of the segment list (list copy; segments are
+        mutated in place only for the unsealed tail + tombstones, both
+        version-bumped)."""
+        with self._lock:
+            return list(self._segs)
+
+    def names(self) -> List[str]:
+        """Catalog of column names by global id (concatenated segment slots,
+        including tombstoned slots so ids stay dense per snapshot)."""
+        with self._lock:
+            return [nm for seg in self._segs for nm in seg.names[:seg.used]]
+
+    def live_columns(self) -> int:
+        with self._lock:
+            return sum(seg.live_count() for seg in self._segs)
+
+    def stats(self) -> dict:
+        with self._lock:
+            return dict(
+                segments=len(self._segs),
+                sealed=sum(1 for s in self._segs if s.sealed),
+                capacity=sum(s.capacity for s in self._segs),
+                used=sum(s.used for s in self._segs),
+                live=sum(s.live_count() for s in self._segs),
+                dead=sum(s.used - s.live_count() for s in self._segs),
+                version=self.version)
+
+    # -- mutation ------------------------------------------------------------
+    def _active(self) -> Segment:
+        if not self._segs or self._segs[-1].sealed:
+            self._segs.append(Segment.empty(self._next_sid, self.delta_cap,
+                                            self.n, self.agg))
+            self._next_sid += 1
+        return self._segs[-1]
+
+    def append(self, tables: Sequence[Union[Table, TableGroup]]) -> List[str]:
+        """Sketch and add tables to the index (visible to the next server
+        `refresh()`). A table whose id is already live is upserted: the old
+        columns are tombstoned first. Returns the column names added."""
+        added: List[str] = []
+        for t in tables:
+            with self._lock:
+                src_index = self._n_sources
+                self._n_sources += 1
+            names = ingest.source_names(t, src_index)
+            table_id = t.name or names[0]
+            sk = ingest.sketch_source(t, n=self.n, agg=self.agg,
+                                      chunk=self.chunk, engine=self.engine)
+            with self._lock:
+                if t.name:
+                    self._tombstone_table(table_id)
+                # columns may span a seal boundary: write in capacity-sized
+                # slices, rolling to a fresh delta segment as each fills
+                row = 0
+                while row < len(names):
+                    seg = self._active()
+                    take = min(seg.free, len(names) - row)
+                    part = jax.tree.map(lambda a: a[row:row + take], sk)
+                    seg.write(part, names[row:row + take], table_id)
+                    row += take
+                self.version += 1
+            added.extend(names)
+        return added
+
+    def _tombstone_table(self, table_id: str) -> int:
+        count = 0
+        for seg in self._segs:
+            for slot in range(seg.used):
+                if seg.live[slot] and seg.tables[slot] == table_id:
+                    seg.tombstone(slot)
+                    count += 1
+        return count
+
+    def delete(self, table_id: str) -> int:
+        """Tombstone every live column owned by ``table_id``; masked out of
+        scoring immediately (next server refresh), reclaimed at `compact()`.
+        Returns the number of columns tombstoned."""
+        with self._lock:
+            count = self._tombstone_table(table_id)
+            if count:
+                self.version += 1
+        return count
+
+    # -- compaction ----------------------------------------------------------
+    def compact(self) -> Segment:
+        """Fold all segments into one sealed base segment via `tree_merge`.
+
+        Every segment's live columns are placed at their global offsets in a
+        ladder-capacity stack whose remaining slots are merge identities
+        (`place_cols`); tree-folding the stacked segments then yields each
+        column's sketch untouched (⊕-identity), dead slots reclaimed. The
+        fold runs on device; the segment-list swap bumps the version, so
+        concurrent readers keep serving the pre-compact segments until their
+        next refresh. Writers (append/delete) serialise with compaction —
+        the lock is held end to end so no mutation can slip between the
+        snapshot and the swap — but readers never block: they only take the
+        lock to refresh, and the version fast-path makes refresh a no-op
+        until the swap lands.
+        """
+        with self._lock:
+            placements: List[Tuple[Segment, np.ndarray]] = []
+            total = 0
+            for seg in self._segs:
+                slots = np.nonzero(seg.live)[0]
+                if slots.size:
+                    placements.append((seg, slots))
+                    total += int(slots.size)
+            cap = ladder_rung(total, self.delta_cap)
+            base = Segment.empty(self._next_sid, cap, self.n, self.agg)
+            self._next_sid += 1
+            if placements:
+                staged = []
+                offset = 0
+                for seg, slots in placements:
+                    staged.append(place_cols(seg.as_sketch(slots), cap, offset))
+                    offset += int(slots.size)
+                stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *staged)
+                merged = ingest.tree_merge(stacked)
+                jax.block_until_ready(merged.key_hash)
+                names = [seg.names[s] for seg, slots in placements for s in slots]
+                tables = [seg.tables[s] for seg, slots in placements
+                          for s in slots]
+                base.write(jax.tree.map(lambda a: a[:total], merged), names,
+                           table_id="")
+                base.tables = tables
+            base.sealed = True
+            self._segs = [base]
+            self.version += 1
+        return base
+
+    # -- snapshots -----------------------------------------------------------
+    def save(self, path: str) -> None:
+        """Persist the full mergeable state to ``path/`` (npz + manifest).
+        Arrays round-trip bit-identically, so a loaded index serves
+        bit-identical results — asserted in the lifecycle tests."""
+        with self._lock:
+            segs = list(self._segs)
+            manifest = dict(
+                format=1, n=self.n, agg=self.agg.value, chunk=self.chunk,
+                delta_cap=self.delta_cap, engine=self.engine,
+                next_sid=self._next_sid, n_sources=self._n_sources,
+                version=self.version,
+                segments=[dict(sid=s.sid, capacity=s.capacity, used=s.used,
+                               sealed=s.sealed, names=list(s.names),
+                               tables=list(s.tables)) for s in segs])
+            # copies: the npz/json writes below run outside the lock, and
+            # the active segment may keep mutating under appends
+            arrays = {f"s{s.sid}_{f}": getattr(s, f).copy()
+                      for s in segs for f in _SEG_FIELDS}
+        os.makedirs(path, exist_ok=True)
+        np.savez(os.path.join(path, ARRAYS_FILE), **arrays)
+        with open(os.path.join(path, MANIFEST_FILE), "w") as f:
+            json.dump(manifest, f, indent=1)
+
+    @classmethod
+    def load(cls, path: str) -> "LiveIndex":
+        with open(os.path.join(path, MANIFEST_FILE)) as f:
+            manifest = json.load(f)
+        if manifest.get("format") != 1:
+            raise ValueError(f"unknown snapshot format {manifest.get('format')!r}")
+        data = np.load(os.path.join(path, ARRAYS_FILE))
+        idx = cls(n=manifest["n"], agg=Agg(manifest["agg"]),
+                  chunk=manifest["chunk"], delta_cap=manifest["delta_cap"],
+                  engine=manifest["engine"])
+        idx._next_sid = manifest["next_sid"]
+        idx._n_sources = manifest["n_sources"]
+        idx.version = manifest["version"]
+        for m in manifest["segments"]:
+            sid = m["sid"]
+            seg = Segment(
+                sid=sid, n=idx.n, agg=idx.agg, capacity=m["capacity"],
+                names=list(m["names"]), tables=list(m["tables"]),
+                used=m["used"], sealed=m["sealed"],
+                **{f: data[f"s{sid}_{f}"] for f in _SEG_FIELDS})
+            idx._segs.append(seg)
+        return idx
+
+
+# ----------------------------------------------------------------------------
+# segment-aware serving
+# ----------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class _SegEntry:
+    sid: int
+    version: int
+    base: int            # global-id offset (cumulative used slots)
+    used: int
+    capacity: int        # device-padded column count (the compile-key shape)
+    srv: SV.QueryServer
+
+
+class LiveQueryServer:
+    """Consistent batched serving over a mutating `LiveIndex`.
+
+    One `QueryServer` per segment, all sharing one `CompileCache`: programs
+    are keyed on the (device-padded) segment capacity, and capacities come
+    from the index's fixed ladder, so after `warmup()` every
+    append/delete/compact re-uses already-compiled programs —
+    ``server.cache.misses`` stays flat across mutations (tested). Each
+    segment keeps its own `PreppedShard` entries (content-dependent), which
+    are recomputed — one dispatch, zero compiles — when a segment's version
+    moves. Results from all segments are combined into one deterministic
+    top-k with global column ids into `names`.
+    """
+
+    def __init__(self, mesh, live: LiveIndex, qcfg: Q.QueryConfig,
+                 buckets: Sequence[int] = (1, 8, 32),
+                 batch_rows: Optional[int] = None,
+                 cache: Optional[SV.CompileCache] = None):
+        self.mesh = mesh
+        self.live = live
+        self.qcfg = qcfg
+        self.buckets = tuple(sorted(set(int(b) for b in buckets)))
+        self.batch_rows = batch_rows
+        self.cache = cache if cache is not None else SV.CompileCache()
+        self.n = live.n
+        self._entries: Dict[int, _SegEntry] = {}
+        self._order: List[int] = []
+        self.names: List[str] = []
+        self._seen_version = -1
+        #: measured bucket costs survive segment turnover per capacity class
+        self._cap_costs: Dict[int, Dict[int, float]] = {}
+        #: logical request telemetry (a query counts once, however many
+        #: segments it fans out to) + dispatches of retired segment servers
+        self._q_total = 0
+        self._q_seconds = 0.0
+        self._retired = dict(dispatches=0)
+        self.refresh()
+
+    # -- segment sync --------------------------------------------------------
+    def _make_entry(self, sid: int, version: int, base: int, used: int,
+                    host_shard) -> _SegEntry:
+        shard = place_shard(host_shard, self.mesh)
+        cap = shard.num_columns
+        # a segment smaller than k still serves: clamp so the program's
+        # final top-k never asks for more candidates than the segment holds
+        qcfg = self.qcfg
+        if qcfg.k > cap:
+            qcfg = dataclasses.replace(qcfg, k=cap)
+        srv = SV.QueryServer(self.mesh, shard, qcfg, buckets=self.buckets,
+                             batch_rows=self.batch_rows, cache=self.cache)
+        srv._bucket_cost = dict(self._cap_costs.get(cap, {}))
+        return _SegEntry(sid=sid, version=version, base=base,
+                         used=used, capacity=cap, srv=srv)
+
+    def refresh(self) -> None:
+        """Sync with the index: device-place new/changed segments, drop
+        removed ones, rebuild the global-id catalog. Free when nothing moved
+        (lock-free version fast-path — in particular, queries don't stall on
+        the index lock while a compaction is folding). The lock is held only
+        to snapshot consistent host-side views of the changed segments (a
+        concurrent append could otherwise produce a torn read); device
+        placement and server construction happen after it is released, so
+        writers are never blocked on device transfers."""
+        if self.live.version == self._seen_version:
+            return
+        with self.live._lock:
+            ver = self.live.version
+            snaps = []
+            for seg in self.live._segs:
+                old = self._entries.get(seg.sid)
+                fresh = old is None or old.version != seg.version
+                snaps.append((seg.sid, seg.version, seg.used,
+                              list(seg.names[:seg.used]),
+                              seg.host_snapshot() if fresh else None))
+        entries: Dict[int, _SegEntry] = {}
+        order: List[int] = []
+        names: List[str] = []
+        base = 0
+        for sid, version, used, seg_names, snap in snaps:
+            if snap is None:
+                old = self._entries[sid]
+                old.base = base
+                entries[sid] = old
+            else:
+                entries[sid] = self._make_entry(sid, version, base, used,
+                                                snap.to_index_shard())
+            order.append(sid)
+            names.extend(seg_names)
+            base += used
+        for sid, old in self._entries.items():
+            if entries.get(sid) is not old:   # dropped or rebuilt
+                self._retired["dispatches"] += old.srv._total_dispatches
+        self._entries = entries
+        self._order = order
+        self.names = names
+        self._seen_version = ver
+
+    def warmup(self, cost_reps: int = 2, include_ladder: bool = True) -> None:
+        """Compile every bucket program for every resident segment shape and
+        measure dispatch costs (kept per capacity class so segment turnover
+        doesn't lose them). ``include_ladder`` additionally pre-warms the
+        upcoming ladder shapes that need not be resident yet — the
+        delta-capacity rung (so the *first* append after a compact serves
+        without a compile) and the rung a `compact()` of the current live
+        columns would land on — the capacity ladder is known a priori."""
+        ndev = int(self.mesh.devices.size)
+        warmed = set()
+        for sid in self._order:
+            e = self._entries[sid]
+            e.srv.warmup(cost_reps=cost_reps)
+            self._cap_costs[e.capacity] = dict(e.srv._bucket_cost)
+            warmed.add(e.capacity)
+        if include_ladder:
+            ahead = {self.live.delta_cap,
+                     ladder_rung(self.live.live_columns(),
+                                 self.live.delta_cap)}
+            for cap in sorted(ahead):
+                if cap + (-cap) % ndev in warmed:
+                    continue
+                empty = Segment.empty(-1, cap, self.n, self.live.agg)
+                entry = self._make_entry(-1, 0, 0, 0, empty.to_index_shard())
+                entry.srv.warmup(cost_reps=cost_reps)
+                self._cap_costs[entry.capacity] = dict(entry.srv._bucket_cost)
+                warmed.add(entry.capacity)
+
+    # -- queries -------------------------------------------------------------
+    def query_batch(self, sketches: CorrelationSketch,
+                    refresh: bool = True):
+        """Serve a batch of query sketches (leading [NQ] axis) against every
+        segment → combined ``[NQ, k]`` (scores, global ids, r, m) numpy
+        arrays, global ids indexing `self.names` (-1 for empty tail slots).
+        """
+        if refresh:
+            self.refresh()
+        t_start = time.perf_counter()
+        k = self.qcfg.k
+        nq = int(jax.tree.leaves(sketches)[0].shape[0])
+        empty = (np.full((nq, k), -np.inf, np.float32),
+                 np.full((nq, k), -1, np.int32),
+                 np.zeros((nq, k), np.float32), np.zeros((nq, k), np.float32))
+        if nq == 0:
+            return tuple(a[:0] for a in empty)
+        parts = []
+        for sid in self._order:
+            e = self._entries[sid]
+            if e.used == 0:
+                continue
+            s, g, r, m = e.srv.query_batch(sketches)
+            parts.append((np.asarray(s), np.asarray(g) + e.base,
+                          np.asarray(r), np.asarray(m)))
+        if not parts:
+            self._q_total += nq
+            self._q_seconds += time.perf_counter() - t_start
+            return empty
+        s = np.concatenate([p[0] for p in parts], axis=1)
+        g = np.concatenate([p[1] for p in parts], axis=1)
+        r = np.concatenate([p[2] for p in parts], axis=1)
+        m = np.concatenate([p[3] for p in parts], axis=1)
+        # deterministic combine: score desc, global id asc as tiebreak
+        out = empty
+        pick = np.lexsort((g, -s), axis=1)[:, :k]
+        take = lambda a: np.take_along_axis(a, pick, axis=1)
+        s, g, r, m = take(s), take(g), take(r), take(m)
+        kk = s.shape[1]
+        out[0][:, :kk] = s
+        out[1][:, :kk] = np.where(np.isfinite(s), g, -1)
+        out[2][:, :kk] = np.where(np.isfinite(s), r, 0.0)
+        out[3][:, :kk] = np.where(np.isfinite(s), m, 0.0)
+        self._q_total += nq
+        self._q_seconds += time.perf_counter() - t_start
+        return out
+
+    def query_columns(self, keys_list, values_list, *, chunk: int = 8192,
+                      refresh: bool = True):
+        """Convenience: raw query columns → sketches → combined top-k."""
+        sks = SV.build_query_sketches(keys_list, values_list, n=self.n,
+                                      chunk=chunk)
+        return self.query_batch(sks, refresh=refresh)
+
+    # -- telemetry -----------------------------------------------------------
+    def throughput(self) -> dict:
+        """Lifetime serving telemetry. ``queries``/``qps`` count *logical*
+        requests (one per query, however many segments it fanned out to);
+        ``dispatches`` counts the underlying per-segment program dispatches
+        (current + retired segment servers)."""
+        qs = [self._entries[sid].srv for sid in self._order]
+        return dict(queries=self._q_total,
+                    dispatches=self._retired["dispatches"]
+                    + sum(s._total_dispatches for s in qs),
+                    total_s=self._q_seconds,
+                    qps=self._q_total / max(self._q_seconds, 1e-12),
+                    compiles=self.cache.misses,
+                    segments=len(self._order))

@@ -100,6 +100,36 @@ def build_query_sketches(keys_list: Sequence[np.ndarray],
     return out
 
 
+class CompileCache:
+    """Shared program cache for the serving layers.
+
+    Maps a hashable program key → built (jitted) callable, counting misses:
+    every miss is a program construction, i.e. an XLA compile at first
+    dispatch, so ``misses`` is the serving layer's compile counter — the
+    lifecycle tests assert it stays flat across index mutations. One cache
+    can back many `QueryServer`s (the segment-aware dispatch of
+    `repro.engine.lifecycle`), so segments with equal shapes share programs.
+    """
+
+    def __init__(self):
+        self._programs: Dict[tuple, object] = {}
+        self.misses = 0
+
+    def get(self, key: tuple, build):
+        fn = self._programs.get(key)
+        if fn is None:
+            self.misses += 1
+            fn = build()
+            self._programs[key] = fn
+        return fn
+
+    def __len__(self) -> int:
+        return len(self._programs)
+
+    def __contains__(self, key) -> bool:
+        return key in self._programs
+
+
 @functools.lru_cache(maxsize=1024)
 def _plan_cover(nq: int, buckets: tuple, costs: tuple) -> tuple:
     """Min-cost cover of ``nq`` queries by bucket dispatches: exact DP over
@@ -136,7 +166,8 @@ class QueryServer:
     def __init__(self, mesh, shard: IndexShard, qcfg: Q.QueryConfig,
                  buckets: Sequence[int] = (1, 8, 32), prep=None,
                  index: Optional[SketchIndex] = None,
-                 batch_rows: Optional[int] = None):
+                 batch_rows: Optional[int] = None,
+                 cache: Optional[CompileCache] = None):
         self.mesh = mesh
         self.shard = shard
         self.qcfg = qcfg
@@ -146,7 +177,9 @@ class QueryServer:
         self.batch_rows = int(batch_rows or 8 * qcfg.score_chunk)
         self.C = shard.num_columns
         self.n = shard.sketch_size
-        self._cache: Dict[tuple, object] = {}
+        #: program cache — pass a shared `CompileCache` to pool compiled
+        #: programs (and the compile counter) across servers/segments
+        self.cache = cache if cache is not None else CompileCache()
         #: PreppedShards keyed by effective score_chunk; a legacy ``prep``
         #: argument seeds the base-chunk entry
         self._preps: Dict[int, object] = {}
@@ -188,20 +221,19 @@ class QueryServer:
             if self.index is not None:
                 prep = precompute_prep(self.index, self.mesh, self.shard, qcfg)
             else:
-                fn = Q.make_prep_fn(self.mesh, self.C, self.n, qcfg)
+                fn = self.cache.get(
+                    ("prep", self.C, self.n, qcfg),
+                    lambda: Q.make_prep_fn(self.mesh, self.C, self.n, qcfg))
                 prep = jax.block_until_ready(fn(self.shard))
             self._preps[qcfg.score_chunk] = prep
         return prep
 
     def query_fn(self, B: int):
         qcfg = self.qcfg_for(B)
-        key = (B, self.C, self.n, qcfg)
-        fn = self._cache.get(key)
-        if fn is None:
-            fn = Q.make_query_fn(self.mesh, self.C, self.n, qcfg,
-                                 batch=B, with_prep=self._use_prep)
-            self._cache[key] = fn
-        return fn
+        key = ("query", B, self.C, self.n, qcfg)
+        return self.cache.get(
+            key, lambda: Q.make_query_fn(self.mesh, self.C, self.n, qcfg,
+                                         batch=B, with_prep=self._use_prep))
 
     def warmup(self, cost_reps: int = 2):
         """Compile every bucket program once (zero-row dummy queries) and

@@ -1,0 +1,217 @@
+"""Property-based tests for the five correlation estimators (paper §5.3).
+
+Three families of properties, run under `hypothesis` when installed (CI) and
+the deterministic conftest shim otherwise:
+
+  * **permutation invariance** — shuffling the (masked) rows never changes
+    pearson/spearman/rin/qn (up to f32 reassociation), and moves the PM1
+    bootstrap estimate by at most bootstrap noise;
+  * **monotone-transform invariance** — spearman and RIN depend only on
+    ranks, so strictly increasing transforms leave them unchanged;
+  * **masked == dense** — the branch-free masked implementations (fixed
+    shape, validity mask — what vmaps inside the engine) agree with dense
+    float64 numpy references computed on the compacted valid subset, under
+    random masks and random padding amounts.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+from statistics import NormalDist
+
+from conftest import given, settings, st  # hypothesis or deterministic shim
+
+from repro.core import estimators as E
+
+N = 128  # fixed sketch-shaped layout; the mask carries the real sample
+
+
+def _sample(seed, m, rho=0.6, ties=False):
+    """(x, y, mask) with m valid entries scattered over N slots."""
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=m)
+    y = rho * x + np.sqrt(max(1 - rho * rho, 0.0)) * rng.normal(size=m)
+    if ties:
+        x, y = np.round(x * 2) / 2, np.round(y * 2) / 2
+    slots = rng.choice(N, size=m, replace=False)
+    xs = np.zeros(N, np.float32)
+    ys = np.zeros(N, np.float32)
+    mask = np.zeros(N, bool)
+    xs[slots], ys[slots], mask[slots] = x, y, True
+    return xs, ys, mask
+
+
+def _permuted(xs, ys, mask, seed):
+    perm = np.random.default_rng(seed).permutation(N)
+    return xs[perm], ys[perm], mask[perm]
+
+
+# ---------------------------------------------------------------------------
+# dense float64 references (operate on the compacted valid subset)
+# ---------------------------------------------------------------------------
+
+def _np_ranks(x):
+    order = np.argsort(x, kind="stable")
+    ranks = np.empty(len(x), float)
+    sx = x[order]
+    i = 0
+    while i < len(x):
+        j = i
+        while j + 1 < len(x) and sx[j + 1] == sx[i]:
+            j += 1
+        ranks[order[i:j + 1]] = (i + j) / 2 + 1
+        i = j + 1
+    return ranks
+
+
+def _np_pearson(x, y):
+    return float(np.corrcoef(x.astype(np.float64), y.astype(np.float64))[0, 1])
+
+
+def _np_spearman(x, y):
+    return _np_pearson(_np_ranks(x), _np_ranks(y))
+
+
+def _np_rin(x, y):
+    m = len(x)
+    inv = np.vectorize(NormalDist().inv_cdf)
+    tx = inv(np.clip((_np_ranks(x) - 0.5) / m, 1e-6, 1 - 1e-6))
+    ty = inv(np.clip((_np_ranks(y) - 0.5) / m, 1e-6, 1 - 1e-6))
+    return _np_pearson(tx, ty)
+
+
+def _np_qn_scale(x):
+    """Dense reference of `_qn_scale`: d · {|x_i − x_j|}_(kq) over i<j."""
+    m = len(x)
+    h = m // 2 + 1
+    kq = max(h * (h - 1) // 2, 1)
+    diffs = np.abs(x[:, None] - x[None, :])[np.triu_indices(m, k=1)]
+    if diffs.size == 0:
+        return 0.0
+    return 2.21914 * np.sort(diffs)[min(kq - 1, diffs.size - 1)]
+
+
+def _np_qn(x, y):
+    x, y = x.astype(np.float64), y.astype(np.float64)
+    sx, sy = _np_qn_scale(x), _np_qn_scale(y)
+    if sx <= 1e-12 or sy <= 1e-12:
+        return 0.0
+    xz, yz = x / sx, y / sy
+    qu = _np_qn_scale((xz + yz) / np.sqrt(2.0))
+    qv = _np_qn_scale((xz - yz) / np.sqrt(2.0))
+    den = qu * qu + qv * qv
+    if den <= 1e-12:
+        return 0.0
+    return float(np.clip((qu * qu - qv * qv) / den, -1.0, 1.0))
+
+
+# ---------------------------------------------------------------------------
+# permutation invariance — all five estimators
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), m=st.integers(5, 120),
+       ties=st.booleans())
+def test_permutation_invariance_deterministic_estimators(seed, m, ties):
+    xs, ys, mask = _sample(seed, m, ties=ties)
+    px, py, pm = _permuted(xs, ys, mask, seed ^ 0x5EED)
+    for name, est in E.ESTIMATORS.items():
+        a = float(est(jnp.asarray(xs), jnp.asarray(ys), jnp.asarray(mask)))
+        b = float(est(jnp.asarray(px), jnp.asarray(py), jnp.asarray(pm)))
+        assert abs(a - b) < 2e-4, (name, a, b)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_permutation_invariance_pm1_bootstrap(seed):
+    """PM1 resamples indices of the compacted sample, so a permutation
+    redraws the bootstrap — the estimate may move, but only within
+    bootstrap noise (≈ se(r)/√599), and the CI must keep bracketing it."""
+    xs, ys, mask = _sample(seed, 120, rho=0.8)
+    px, py, pm = _permuted(xs, ys, mask, seed ^ 0x5EED)
+    key = jax.random.PRNGKey(0)
+    r1, lo1, hi1 = (float(v) for v in E.pm1_bootstrap(
+        jnp.asarray(xs), jnp.asarray(ys), jnp.asarray(mask), key))
+    r2, lo2, hi2 = (float(v) for v in E.pm1_bootstrap(
+        jnp.asarray(px), jnp.asarray(py), jnp.asarray(pm), key))
+    assert abs(r1 - r2) < 0.05
+    assert lo1 <= r1 <= hi1 and lo2 <= r2 <= hi2
+    assert abs(lo1 - lo2) < 0.2 and abs(hi1 - hi2) < 0.2
+
+
+# ---------------------------------------------------------------------------
+# monotone-transform invariance — rank-based estimators
+# ---------------------------------------------------------------------------
+
+_MONOTONE = {
+    "affine": lambda x: 3.0 * x + 2.0,
+    "cube": lambda x: x ** 3,
+    "expm1": lambda x: np.expm1(np.clip(x, -20, 20)),
+    "arctan": np.arctan,
+}
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), m=st.integers(5, 120),
+       ties=st.booleans(), tname=st.sampled_from(sorted(_MONOTONE)))
+def test_monotone_invariance_spearman_rin(seed, m, ties, tname):
+    xs, ys, mask = _sample(seed, m, ties=ties)
+    t = _MONOTONE[tname]
+    tx = np.where(mask, t(xs.astype(np.float64)), 0.0).astype(np.float32)
+    for est in (E.spearman, E.rin):
+        a = float(est(jnp.asarray(xs), jnp.asarray(ys), jnp.asarray(mask)))
+        b = float(est(jnp.asarray(tx), jnp.asarray(ys), jnp.asarray(mask)))
+        assert abs(a - b) < 2e-4, (est.__name__, tname, a, b)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), m=st.integers(5, 100))
+def test_decreasing_transform_flips_sign(seed, m):
+    xs, ys, mask = _sample(seed, m)
+    neg = np.where(mask, -xs, 0.0).astype(np.float32)
+    for est in (E.spearman, E.rin):
+        a = float(est(jnp.asarray(xs), jnp.asarray(ys), jnp.asarray(mask)))
+        b = float(est(jnp.asarray(neg), jnp.asarray(ys), jnp.asarray(mask)))
+        assert abs(a + b) < 2e-4, est.__name__
+
+
+# ---------------------------------------------------------------------------
+# masked branch-free == dense reference, under random masks
+# ---------------------------------------------------------------------------
+
+_REFS = {"pearson": _np_pearson, "spearman": _np_spearman,
+         "rin": _np_rin, "qn": _np_qn}
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), m=st.integers(5, 120),
+       ties=st.booleans())
+def test_masked_agrees_with_dense_reference(seed, m, ties):
+    xs, ys, mask = _sample(seed, m, ties=ties)
+    x, y = xs[mask], ys[mask]
+    if np.std(x) < 1e-5 or np.std(y) < 1e-5:
+        return
+    for name, est in E.ESTIMATORS.items():
+        got = float(est(jnp.asarray(xs), jnp.asarray(ys), jnp.asarray(mask)))
+        want = _REFS[name](x, y)
+        assert abs(got - want) < 2e-3, (name, got, want)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), m=st.integers(5, 60))
+def test_padding_amount_is_irrelevant(seed, m):
+    """The same valid sample padded into a 64- vs 256-slot layout must give
+    the same estimate: the layout is an implementation detail of the fixed
+    sketch shapes, never part of the statistic."""
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=m).astype(np.float32)
+    y = (0.5 * x + 0.5 * rng.normal(size=m)).astype(np.float32)
+    for name, est in E.ESTIMATORS.items():
+        vals = []
+        for n in (64, 256):
+            xs = np.zeros(n, np.float32)
+            ys = np.zeros(n, np.float32)
+            mk = np.zeros(n, bool)
+            xs[:m], ys[:m], mk[:m] = x, y, True
+            vals.append(float(est(jnp.asarray(xs), jnp.asarray(ys),
+                                  jnp.asarray(mk))))
+        assert abs(vals[0] - vals[1]) < 2e-4, (name, vals)

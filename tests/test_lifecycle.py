@@ -1,0 +1,241 @@
+"""Live index lifecycle: append/delete/compact/snapshot invariants.
+
+The load-bearing guarantees (ISSUE 3 acceptance):
+  * K appends + compact is bit-identical to a one-shot `build_index` for all
+    seven aggregations (the KMV merge closure doing the systems work);
+  * tombstoned tables are excluded from every top-k;
+  * save → load round-trips bit-identically and serves bit-identical results;
+  * mutations re-use compiled programs — the shared compile-cache miss count
+    stays flat across append/delete/compact.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.sketch import Agg
+from repro.data.pipeline import (Table, TableGroup, grow_corpus,
+                                 multi_column_group)
+from repro.engine import index as IX
+from repro.engine import lifecycle as L
+from repro.engine import query as Q
+from repro.engine import serve as SV
+
+N = 32          # sketch size: small keeps the 7-agg sweep quick
+CHUNK = 512     # force multi-chunk streaming inside every table
+
+
+def _mesh():
+    return jax.make_mesh((1,), ("shard",))
+
+
+def _messy_group(rng, name, n_cols=2, n_rows=1500):
+    """Repeated keys + NaNs, so the seven aggregations actually differ."""
+    n_distinct = n_rows // 3
+    base = rng.choice(1 << 30, size=n_distinct, replace=False).astype(np.uint32)
+    keys = base[rng.integers(0, n_distinct, size=n_rows)]
+    vals = rng.normal(size=(n_cols, n_rows)).astype(np.float32)
+    vals[:, rng.random(n_rows) < 0.02] = np.nan
+    return TableGroup(keys=keys, values=vals, name=name,
+                      column_names=[f"{name}.c{c}" for c in range(n_cols)])
+
+
+@pytest.fixture(scope="module")
+def messy_tables():
+    rng = np.random.default_rng(42)
+    return [_messy_group(rng, f"t{i}") for i in range(5)]
+
+
+@pytest.mark.parametrize("agg", list(Agg))
+def test_append_compact_bit_identical_to_one_shot(messy_tables, agg):
+    """K appends + compact() == build_index, bit for bit, incl. padding."""
+    live = L.LiveIndex(n=N, agg=agg, chunk=CHUNK, delta_cap=4)
+    # K=3 appends, unevenly split, spanning seal boundaries (10 cols / cap 4)
+    live.append(messy_tables[:2])
+    live.append(messy_tables[2:3])
+    live.append(messy_tables[3:])
+    assert live.stats()["segments"] == 3
+    base = live.compact()
+    assert live.stats()["segments"] == 1 and base.sealed
+    assert base.capacity == L.ladder_rung(10, 4) == 16
+
+    ref = IX.build_index(messy_tables, n=N, agg=agg, chunk=CHUNK,
+                         pad_to=base.capacity)
+    got = base.to_index_shard()
+    for f in ("key_hash", "values", "mask", "col_min", "col_max", "rows"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(got, f)), np.asarray(getattr(ref.shard, f)),
+            err_msg=f"{agg}: field {f} diverged from one-shot build")
+    assert live.names() == ref.names
+
+
+def test_ladder_rung():
+    assert [L.ladder_rung(c, 4) for c in (0, 1, 4, 5, 8, 9, 64)] == \
+        [4, 4, 4, 8, 8, 16, 64]
+
+
+def test_append_spans_seal_boundary():
+    """One wide table larger than the delta capacity rolls across segments."""
+    rng = np.random.default_rng(3)
+    g = multi_column_group(rng, n_cols=7, n_rows=600, name="wide")
+    live = L.LiveIndex(n=N, chunk=CHUNK, delta_cap=4)
+    live.append([g])
+    st = live.stats()
+    assert st["segments"] == 2 and st["live"] == 7
+    assert live.segments()[0].sealed and not live.segments()[1].sealed
+    assert live.names() == [f"wide.c{c}" for c in range(7)]
+
+
+@pytest.fixture(scope="module")
+def planted():
+    """Corpus with one planted high-correlation table + a query hitting it."""
+    rng = np.random.default_rng(7)
+    # shared key universe so every table joins the query with a real sample
+    groups = [multi_column_group(rng, n_cols=2, n_rows=2000, name=f"g{i}",
+                                 key_space=4096, keep_latent=True)
+              for i in range(4)]
+    g = groups[1]
+    latent = g.meta.pop("latent")
+    target_col = int(np.argmax(np.abs(g.meta["r"])))
+    planted = TableGroup(keys=g.keys, values=np.stack([latent, g.values[1]]),
+                         name="planted",
+                         column_names=["planted.hit", "planted.other"])
+    groups[1] = planted
+    sel = rng.choice(len(latent), size=800, replace=False)
+    query = Table(keys=g.keys[sel], values=latent[sel], name="q")
+    return groups, query
+
+
+def test_deletes_excluded_from_topk(planted):
+    groups, query = planted
+    live = L.LiveIndex(n=64, chunk=CHUNK, delta_cap=4)
+    live.append(groups)
+    srv = L.LiveQueryServer(_mesh(), live, Q.QueryConfig(k=4), buckets=(1, 2))
+    s, g, r, m = srv.query_columns([query.keys], [query.values])
+    assert srv.names[g[0, 0]] == "planted.hit" and s[0, 0] > 0.5
+    live.delete("planted")
+    s2, g2, _, _ = srv.query_columns([query.keys], [query.values])
+    hit_names = [srv.names[i] for i in g2[0] if i >= 0]
+    assert not any(nm.startswith("planted.") for nm in hit_names)
+    # other tables are untouched
+    assert len(hit_names) == 4
+    # and the tombstones survive compaction
+    live.compact()
+    s3, g3, _, _ = srv.query_columns([query.keys], [query.values])
+    assert not any(srv.names[i].startswith("planted.") for i in g3[0] if i >= 0)
+    assert live.live_columns() == 6
+
+
+def test_upsert_replaces_previous_columns(planted):
+    groups, query = planted
+    live = L.LiveIndex(n=64, chunk=CHUNK, delta_cap=4)
+    live.append(groups)
+    assert live.live_columns() == 8
+    # re-appending a table id tombstones the old columns first
+    live.append([groups[0]])
+    st = live.stats()
+    assert st["live"] == 8 and st["dead"] == 2
+    assert sum(nm.startswith("g0.") for nm in live.names()) == 4  # 2 dead + 2 live
+
+
+def test_snapshot_roundtrip_bit_identical(planted, tmp_path):
+    groups, query = planted
+    live = L.LiveIndex(n=64, chunk=CHUNK, delta_cap=4)
+    live.append(groups[:3])
+    live.delete("g2")        # tombstones must survive the round trip
+    live.append(groups[3:])
+    live.save(str(tmp_path / "snap"))
+    loaded = L.LiveIndex.load(str(tmp_path / "snap"))
+
+    assert loaded.stats() == live.stats()
+    assert loaded.names() == live.names()
+    for a, b in zip(live.segments(), loaded.segments()):
+        assert (a.sid, a.capacity, a.used, a.sealed) == \
+            (b.sid, b.capacity, b.used, b.sealed)
+        for f in ("kh", "acc", "cnt", "order", "mask", "cmin", "cmax",
+                  "rows", "live"):
+            np.testing.assert_array_equal(getattr(a, f), getattr(b, f),
+                                          err_msg=f"segment {a.sid}: {f}")
+
+    mesh = _mesh()
+    qcfg = Q.QueryConfig(k=4)
+    srv = L.LiveQueryServer(mesh, live, qcfg, buckets=(1, 2))
+    srv2 = L.LiveQueryServer(mesh, loaded, qcfg, buckets=(1, 2))
+    out = srv.query_columns([query.keys], [query.values])
+    out2 = srv2.query_columns([query.keys], [query.values])
+    for got, want in zip(out2, out):
+        np.testing.assert_array_equal(got, want)
+
+
+def test_zero_new_compiles_across_mutations(planted):
+    """After warmup, append → query → delete → query → compact → query must
+    all hit the shared compile cache: segment shapes come from the fixed
+    capacity ladder, so no mutation introduces a new program shape."""
+    groups, query = planted
+    live = L.LiveIndex(n=64, chunk=CHUNK, delta_cap=4)
+    live.append(groups[:3])          # 6 cols: sealed 4/4 + active 2/4
+    srv = L.LiveQueryServer(_mesh(), live, Q.QueryConfig(k=4), buckets=(1, 2))
+    srv.warmup()                     # warms delta-capacity programs
+    live.compact()                   # base lands on rung 8
+    srv.refresh()
+    srv.warmup()                     # warms rung-8 programs
+    baseline = srv.query_columns([query.keys], [query.values])
+    misses = srv.cache.misses
+    assert misses > 0
+
+    live.append(groups[3:])          # new delta segment: capacity 4, warm
+    out = srv.query_columns([query.keys], [query.values])
+    live.delete("g0")                # content change, same shapes
+    out = srv.query_columns([query.keys], [query.values])
+    live.compact()                   # 6 live → rung 8 again, warm
+    out = srv.query_columns([query.keys], [query.values])
+    assert srv.cache.misses == misses, "mutations must not trigger compiles"
+    # sanity: the planted column still tops the list after all of it
+    assert srv.names[out[1][0, 0]] == "planted.hit"
+    np.testing.assert_array_equal(out[0][:, 0], baseline[0][:, 0])
+
+
+def test_unnamed_tables_get_distinct_ids_across_appends():
+    """Default names use the lifetime source counter, so unnamed tables from
+    different append calls never collide (and match build_index naming)."""
+    rng = np.random.default_rng(9)
+    cols = [Table(keys=rng.integers(0, 1000, 300).astype(np.uint32),
+                  values=rng.normal(size=300).astype(np.float32))
+            for _ in range(2)]
+    live = L.LiveIndex(n=N, chunk=CHUNK, delta_cap=4)
+    live.append(cols[:1])
+    live.append(cols[1:])
+    assert live.names() == ["col0", "col1"]
+    assert live.delete("col0") == 1
+    assert live.live_columns() == 1
+
+
+def test_grow_corpus_feeds_the_live_index():
+    """The growing-corpus scenario generator streams straight into append:
+    names stay unique across batches, and the index grows batch by batch."""
+    rng = np.random.default_rng(5)
+    live = L.LiveIndex(n=N, chunk=CHUNK, delta_cap=8)
+    seen = []
+    for batch in grow_corpus(rng, n_batches=3, tables_per_batch=2,
+                             n_cols=2, n_max=900):
+        live.append(batch)
+        seen.extend(g.name for g in batch)
+    assert seen == [f"g{i}" for i in range(6)]
+    assert live.live_columns() == 12
+    assert len(set(live.names())) == 12
+
+
+def test_compact_empty_and_all_deleted(planted):
+    groups, _ = planted
+    live = L.LiveIndex(n=N, chunk=CHUNK, delta_cap=4)
+    base = live.compact()                      # compacting nothing is fine
+    assert base.used == 0 and live.live_columns() == 0
+    live.append(groups[:1])
+    live.delete(groups[0].name)
+    base = live.compact()                      # all-dead corpus → empty base
+    assert base.used == 0 and live.names() == []
+    srv = L.LiveQueryServer(_mesh(), live, Q.QueryConfig(k=3), buckets=(1,))
+    rng = np.random.default_rng(0)
+    s, g, r, m = srv.query_columns([np.arange(50, dtype=np.uint32)],
+                                   [rng.normal(size=50).astype(np.float32)])
+    assert (g == -1).all() and not np.isfinite(s).any()
