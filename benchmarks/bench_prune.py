@@ -1,0 +1,235 @@
+"""Two-stage retrieval benchmark (DESIGN.md §5): full scan vs containment
+pruning, plus the standalone joinability-search workload.
+
+Corpus model: ``domains`` disjoint key universes (the data-lake regime the
+paper targets — §5.5's open-data corpora — where most tables are *not*
+joinable with any given query). Tables are spread round-robin over the
+domains; a request batch is a set of related query columns from one domain
+(the natural batched workload: all columns a user wants to augment join on
+the same key). A query's stage-1 containment scan therefore dismisses
+~``(domains − 1)/domains`` of the index before the O(n²) scoring kernel
+runs.
+
+Measured per mode (same corpus, same queries, same bucket):
+
+  * ``prune='off'``   — the classic full scan (the baseline);
+  * ``prune='safe'``  — stage-1 hits → exact eligibility pruning; asserted
+    here to contain the full scan's top-k with bit-equal scores;
+  * ``prune='topm'``  — fused single-dispatch per-row top-M;
+  * ``search_joinable`` — pure stage-1 joinability top-k (no scoring).
+
+Emits ``BENCH_prune.json`` and records the before/after p50 under a
+``"prune"`` key inside ``BENCH_query_latency.json`` (when present) so the
+latency artifact carries the two-stage comparison. All numbers are
+container-load-sensitive (see benchmarks/README.md).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+
+import numpy as np
+import jax
+
+from repro.data.pipeline import Table
+from repro.engine import index as IX
+from repro.engine import query as Q
+from repro.engine import serve as SV
+from repro.launch.mesh import make_host_mesh
+
+ARTIFACT = "BENCH_prune.json"
+LATENCY_ARTIFACT = "BENCH_query_latency.json"
+
+
+def clustered_corpus(rng, n_tables: int, domains: int, pool: int,
+                     n_rows: int):
+    """Tables over ``domains`` disjoint key universes + per-domain query
+    batches. Each domain has a latent factor; in-domain tables correlate
+    with it by a known r, so queries (latent + noise) have real in-domain
+    top-k structure and zero cross-domain joinability."""
+    tables, pools = [], []
+    for d in range(domains):
+        keys = (rng.choice(1 << 20, size=pool, replace=False)
+                .astype(np.uint32) + np.uint32(d << 20))
+        latent = rng.standard_normal(pool).astype(np.float32)
+        pools.append((keys, latent))
+    for i in range(n_tables):
+        keys, latent = pools[i % domains]
+        sel = rng.choice(pool, size=n_rows, replace=False)
+        r = rng.uniform(-1, 1)
+        vals = (r * latent[sel]
+                + np.sqrt(max(1 - r * r, 0.0)) * rng.standard_normal(n_rows))
+        tables.append(Table(keys=keys[sel], values=vals.astype(np.float32),
+                            name=f"t{i}"))
+    return tables, pools
+
+
+def domain_batch(rng, pools, d: int, n_rows: int, batch: int):
+    """One request batch: ``batch`` related query columns from domain d."""
+    keys, latent = pools[d]
+    out = []
+    for _ in range(batch):
+        sel = rng.choice(len(keys), size=n_rows, replace=False)
+        out.append((keys[sel],
+                    (latent[sel] + 0.3 * rng.standard_normal(n_rows))
+                    .astype(np.float32)))
+    return out
+
+
+def _assert_superset(full, pruned, label: str, tol: float = 2e-5):
+    """Every finite full-scan top-k entry must appear in the pruned top-k
+    with the same score (to a few ulps: XLA reduction order varies with
+    program shape) — the prune='safe' contract, enforced on every run.
+    A column may be absent only in the tie-boundary case (its score within
+    ``tol`` of the pruned k-th — then rank k is rounding luck)."""
+    s0, g0 = np.asarray(full[0]), np.asarray(full[1])
+    s1, g1 = np.asarray(pruned[0]), np.asarray(pruned[1])
+    for i in range(s0.shape[0]):
+        fin = np.isfinite(s0[i])
+        kth = np.min(s1[i][np.isfinite(s1[i])], initial=np.inf)
+        for gid, sc in zip(g0[i][fin], s0[i][fin]):
+            j = np.nonzero(g1[i] == gid)[0]
+            if j.size == 0:
+                assert abs(sc - kth) <= tol * max(1.0, abs(sc)), (
+                    f"{label}: query {i} lost column {gid} (score {sc})")
+                continue
+            assert abs(s1[i][j[0]] - sc) <= tol * max(1.0, abs(sc)), (
+                f"{label}: query {i} column {gid} score drifted "
+                f"({sc} vs {s1[i][j[0]]})")
+
+
+def run(n_tables: int = 512, domains: int = 8, n_rows: int = 3000,
+        pool: int = 20000, n_sketch: int = 256, batch: int = 8,
+        repeats: int = 3, seed: int = 7, prune_m: int = 64,
+        artifact: str | None = ARTIFACT):
+    rng = np.random.default_rng(seed)
+    tables, pools = clustered_corpus(rng, n_tables, domains, pool, n_rows)
+    batches = [domain_batch(rng, pools, d, n_rows, batch)
+               for d in range(domains)]
+    mesh = make_host_mesh()
+    ndev = int(mesh.devices.size)
+    pad = ((n_tables + ndev - 1) // ndev) * ndev
+    idx = IX.build_index(tables, n=n_sketch, pad_to=pad)
+    shard = IX.shard_for_mesh(idx, mesh)
+    qsks = [SV.build_query_sketches([k for k, _ in b], [v for _, v in b],
+                                    n=n_sketch) for b in batches]
+
+    base = Q.QueryConfig(k=10, scorer="s4")
+    modes = {
+        "off": base,
+        "safe": dataclasses.replace(base, prune="safe"),
+        "topm": dataclasses.replace(base, prune="topm", prune_m=prune_m),
+    }
+    stats, outputs = {}, {}
+    joinability = None
+    for mode, qcfg in modes.items():
+        srv = SV.QueryServer(mesh, shard, qcfg, buckets=(batch,), index=idx)
+        srv.warmup()
+        misses = srv.cache.misses
+        for _ in range(repeats):
+            outs = [srv.query_batch(sk) for sk in qsks]
+        assert srv.cache.misses == misses, "compile after warmup"
+        t = srv.throughput()
+        stats[mode] = dict(p50=t["dispatch_p50_ms"], p90=t["dispatch_p90_ms"],
+                           p99=t["dispatch_p99_ms"],
+                           per_query_ms=t["per_query_ms"], qps=t["qps"])
+        outputs[mode] = outs
+        if mode == "off":
+            # the joinability-only workload, on the same (plain) server
+            srv.search_joinable([k for k, _ in batches[0]], k=10)  # warm
+            t0 = time.perf_counter()
+            reps = max(repeats, 1)
+            for _ in range(reps):
+                for b in batches:
+                    res = srv.search_joinable([k for k, _ in b], k=10)
+            dt = time.perf_counter() - t0
+            nq_total = reps * sum(len(b) for b in batches)
+            joinability = dict(
+                per_query_ms=1e3 * dt / nq_total,
+                qps=nq_total / max(dt, 1e-12),
+                mean_top1_containment=float(np.mean(res.containment[:, 0])))
+
+    # correctness contract, enforced on every run of this benchmark. The
+    # superset property is guaranteed for 'safe'; for 'topm' it only holds
+    # when prune_m covers each query's eligible candidates (by construction
+    # the query's domain: n_tables/domains in-domain tables) — with smaller
+    # prune_m, topm legitimately trades recall for latency and is skipped.
+    checked = ["safe"] + (["topm"] if prune_m >= n_tables // domains else [])
+    for mode in checked:
+        for full, pruned in zip(outputs["off"], outputs[mode]):
+            _assert_superset(full, pruned, mode)
+
+    # stage-1 survivor statistics (how much the pre-filter dismisses)
+    surv_counts = []
+    safecfg = modes["safe"]
+    srv = SV.QueryServer(mesh, shard, safecfg, buckets=(batch,), index=idx)
+    for sk in qsks:
+        hits = srv.stage1_hits(sk)
+        surv_counts.append(len(Q.select_survivors(hits, safecfg)))
+
+    result = dict(
+        n_tables=n_tables, domains=domains, n_rows=n_rows, batch=batch,
+        n_sketch=n_sketch, queries_per_run=batch * domains, repeats=repeats,
+        modes=stats,
+        survivors_mean=float(np.mean(surv_counts)),
+        survivors_frac=float(np.mean(surv_counts) / n_tables),
+        speedup_safe_p50=stats["off"]["p50"] / max(stats["safe"]["p50"], 1e-12),
+        speedup_topm_p50=stats["off"]["p50"] / max(stats["topm"]["p50"], 1e-12),
+        speedup_safe_qps=stats["safe"]["qps"] / max(stats["off"]["qps"], 1e-12),
+        joinability=joinability,
+    )
+    if artifact:
+        with open(artifact, "w") as f:
+            json.dump(result, f, indent=2)
+        # record the before/after pair in the latency artifact too
+        if os.path.exists(LATENCY_ARTIFACT):
+            try:
+                with open(LATENCY_ARTIFACT) as f:
+                    lat = json.load(f)
+            except (OSError, json.JSONDecodeError):
+                lat = {}
+            lat["prune"] = dict(
+                n_tables=n_tables, domains=domains,
+                before_p50_ms=stats["off"]["p50"],
+                after_safe_p50_ms=stats["safe"]["p50"],
+                after_topm_p50_ms=stats["topm"]["p50"],
+                speedup_safe_p50=result["speedup_safe_p50"],
+                speedup_topm_p50=result["speedup_topm_p50"])
+            with open(LATENCY_ARTIFACT, "w") as f:
+                json.dump(lat, f, indent=2)
+
+    flat = dict(n_tables=n_tables, domains=domains,
+                survivors_frac=result["survivors_frac"])
+    for mode, rec in stats.items():
+        for kk in ("p50", "per_query_ms", "qps"):
+            flat[f"{mode}_{kk}"] = rec[kk]
+    flat["speedup_safe_p50"] = result["speedup_safe_p50"]
+    flat["speedup_topm_p50"] = result["speedup_topm_p50"]
+    flat["join_per_query_ms"] = joinability["per_query_ms"]
+    flat["join_qps"] = joinability["qps"]
+    return flat
+
+
+def main():
+    import argparse
+    ap = argparse.ArgumentParser(
+        description="two-stage retrieval: full scan vs containment pruning "
+                    "(emits BENCH_prune.json; see benchmarks/README.md)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized run (64 tables, small rows, no artifact)")
+    args = ap.parse_args()
+    if args.smoke:
+        r = run(n_tables=64, domains=8, n_rows=800, pool=4000, n_sketch=64,
+                batch=4, repeats=2, artifact=None)
+    else:
+        r = run()
+    print("prune," + ",".join(f"{k}={v:.4g}" if isinstance(v, float)
+                              else f"{k}={v}" for k, v in r.items()))
+    if not args.smoke:
+        print(f"wrote {os.path.abspath(ARTIFACT)}")
+
+
+if __name__ == "__main__":
+    main()

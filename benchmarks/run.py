@@ -1,9 +1,11 @@
-"""Benchmark harness: one entry per paper table/figure + the roofline report.
+"""Benchmark harness: one entry per paper table/figure + the engineering
+suites (ingest / latency / lifecycle / prune) + the roofline report.
 
-    PYTHONPATH=src python -m benchmarks.run [--fast]
+    PYTHONPATH=src python -m benchmarks.run [--fast] [--only <suite,...>]
 
 Prints ``name,key=value,...`` CSV lines. Sizes are scaled for a single-CPU
-container; drop --fast for larger corpora.
+container; drop --fast for larger corpora. Artifact schemas and
+regeneration instructions live in benchmarks/README.md.
 """
 from __future__ import annotations
 
@@ -13,17 +15,22 @@ import time
 
 
 def main() -> None:
-    ap = argparse.ArgumentParser()
+    ap = argparse.ArgumentParser(
+        description="benchmark harness: paper tables/figures (accuracy, "
+                    "rmse, ranking, runtime) + engineering suites (latency, "
+                    "ingest, lifecycle, prune) + the roofline report; "
+                    "see benchmarks/README.md for the BENCH_*.json schemas")
     ap.add_argument("--fast", action="store_true",
-                    help="smaller corpora (CI-sized)")
+                    help="smaller corpora (CI-sized); artifact files are "
+                         "only written by full-size runs")
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: accuracy,rmse,ranking,"
-                         "runtime,latency,ingest,lifecycle,roofline")
+                         "runtime,latency,ingest,lifecycle,prune,roofline")
     args = ap.parse_args()
 
     from benchmarks import (bench_accuracy, bench_ingest, bench_lifecycle,
-                            bench_query_latency, bench_ranking, bench_rmse,
-                            bench_roofline, bench_runtime)
+                            bench_prune, bench_query_latency, bench_ranking,
+                            bench_rmse, bench_roofline, bench_runtime)
 
     fast = args.fast
     suites = {
@@ -50,11 +57,16 @@ def main() -> None:
             delta_cap=8 if fast else 64, n_queries=8 if fast else 32,
             steady_rounds=3 if fast else 6,
             artifact=None if fast else bench_lifecycle.ARTIFACT),
+        "prune": lambda: bench_prune.run(
+            n_tables=64 if fast else 512, n_rows=800 if fast else 3000,
+            pool=4000 if fast else 20000, n_sketch=64 if fast else 256,
+            batch=4 if fast else 8, repeats=2 if fast else 3,
+            artifact=None if fast else bench_prune.ARTIFACT),
     }
     names = {"accuracy": "fig3_accuracy", "rmse": "fig4_rmse",
              "ranking": "table1_ranking", "runtime": "table2_runtime",
              "latency": "sec5p5_query_latency", "ingest": "ingest",
-             "lifecycle": "lifecycle"}
+             "lifecycle": "lifecycle", "prune": "prune"}
     only = set(args.only.split(",")) if args.only else None
 
     for key, fn in suites.items():

@@ -45,7 +45,7 @@ WHISPER_DECODER_LEN = 448
 def cell_is_runnable(cfg: ModelConfig, shape: ShapeSpec) -> tuple[bool, str]:
     """(runnable?, reason). long_500k only runs for sub-quadratic archs."""
     if shape.name == "long_500k" and not cfg.subquadratic:
-        return False, "long_500k skipped: full quadratic attention (see DESIGN.md §5)"
+        return False, "long_500k skipped: full quadratic attention"
     return True, ""
 
 

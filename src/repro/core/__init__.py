@@ -10,8 +10,18 @@ from repro.core.sketch import (  # noqa: F401
     stack_sketches,
 )
 from repro.core.join import SketchJoin, sketch_join  # noqa: F401
-from repro.core.bounds import CorrelationCI, hoeffding_ci, fisher_z_se  # noqa: F401
+from repro.core.bounds import (  # noqa: F401
+    CorrelationCI,
+    containment_ci,
+    fisher_z_se,
+    hoeffding_ci,
+)
 from repro.core.scoring import CandidateStats, score, SCORERS  # noqa: F401
 from repro.core.ranking import QueryResult, topk_query, candidate_stats  # noqa: F401
+from repro.core.containment import (  # noqa: F401
+    JoinabilityEstimates,
+    joinability_estimates,
+)
+from repro.core import containment  # noqa: F401
 from repro.core import estimators  # noqa: F401
 from repro.core import hashing  # noqa: F401

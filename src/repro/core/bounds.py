@@ -22,10 +22,13 @@ import jax.numpy as jnp
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
 class CorrelationCI:
+    """A per-candidate confidence interval for ρ (§4.3); ``length()`` is
+    the risk signal the ci_h scorer normalises over (§4.4)."""
     lo: jnp.ndarray
     hi: jnp.ndarray
 
     def length(self) -> jnp.ndarray:
+        """CI length — the ci_h scorer's raw risk signal (§4.4)."""
         return self.hi - self.lo
 
 
@@ -97,6 +100,46 @@ def fisher_z_se(m) -> jnp.ndarray:
     """Standard error of Fisher's Z transform: 1/sqrt(max(4, m) − 3) (§4.2)."""
     mm = jnp.maximum(m.astype(jnp.float32), 4.0)
     return 1.0 / jnp.sqrt(mm - 3.0)
+
+
+def hoeffding_eligibility_floor(min_sample: int = 3) -> int:
+    """The sample-size floor the scoring paths apply: candidates with
+    m < floor score −∞ (`repro.engine.query._scores_from_stats`), and the
+    two-stage engine's stage-1 safe pruning drops exactly the same set
+    (`select_survivors`) — both route through this one definition, which is
+    what makes ``prune='safe'`` correctness-preserving: a candidate whose
+    *exact* sketch-intersection size is below the floor is scored −∞ by the
+    full scan too, so dropping it before the O(n²) kernel can never remove
+    a true top-k result (DESIGN.md §5). The paper's default of 3 (Fig. 3d
+    uses 20) reflects that the §4.3 CI — like Pearson r itself — is vacuous
+    below m = 2."""
+    return int(min_sample)
+
+
+def containment_ci(c_hat, probes, alpha: float = 0.05):
+    """Hoeffding CI for a KMV containment estimate (§2.1 machinery).
+
+    The estimate ``c_hat = hits / probes`` is a mean of ``probes`` i.i.d.
+    Bernoulli membership trials (the query minima below the candidate's KMV
+    threshold are a uniform sample of K_Q — Theorem 1's sampling argument
+    applied to keys instead of tuples), so the two-sided Hoeffding bound
+    ``t = sqrt(ln(2/α) / 2·probes)`` gives ``P(|ĉ − c| ≥ t) ≤ α``.
+
+    Returns ``(lo, hi)`` clipped to [0, 1]; degenerate (0, 1) when there were
+    no probes. Shapes broadcast — per-candidate ``probes`` against a scalar
+    or per-candidate ``c_hat``. Array-namespace generic: numpy inputs stay
+    on the host (the joinability estimators call this per query on [C]
+    scalars — eager device dispatch would dominate), jax inputs stay traced.
+    """
+    import numpy as np
+    xp = jnp if isinstance(c_hat, jnp.ndarray) or isinstance(
+        probes, jnp.ndarray) else np
+    probes = xp.asarray(probes, dtype=xp.float32)
+    t = xp.sqrt(xp.log(2.0 / alpha) / (2.0 * xp.maximum(probes, 1.0)))
+    lo = xp.clip(c_hat - t, 0.0, 1.0)
+    hi = xp.clip(c_hat + t, 0.0, 1.0)
+    ok = probes > 0
+    return xp.where(ok, lo, 0.0), xp.where(ok, hi, 1.0)
 
 
 def sample_size_for_accuracy(C: float, c_var: float, eps: float, alpha: float = 0.05) -> float:

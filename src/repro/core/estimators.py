@@ -46,7 +46,8 @@ def pearson(a, b, mask) -> jnp.ndarray:
 
 
 def average_ranks(x, mask) -> jnp.ndarray:
-    """Average ranks (1-based) among valid entries; ties get the mean rank.
+    """Average ranks (1-based) among valid entries; ties get the mean rank
+    (the rank transform behind Spearman/RIN, §5.3).
 
     O(n²) pairwise formulation — branch-free and identical to the Pallas
     ``rank_transform`` kernel: rank_i = #less_i + (#equal_i + 1)/2.
@@ -61,7 +62,8 @@ def average_ranks(x, mask) -> jnp.ndarray:
 
 
 def spearman(a, b, mask) -> jnp.ndarray:
-    """Spearman's rho: Pearson over average ranks (handles ties exactly)."""
+    """Spearman's rho (§5.3 item 2): Pearson over average ranks (ties
+    handled exactly via the mean-rank transform)."""
     ra = average_ranks(a, mask)
     rb = average_ranks(b, mask)
     return pearson(ra, rb, mask)
@@ -106,7 +108,7 @@ def _qn_scale(x, mask) -> jnp.ndarray:
 
 def qn_correlation(a, b, mask) -> jnp.ndarray:
     """ρ_Qn = (Qn(u)² − Qn(v)²)/(Qn(u)² + Qn(v)²), u,v = standardized sum/diff
-    (Shevlyakov & Oja eq. for robust correlation via scale estimates)."""
+    (Shevlyakov & Oja robust correlation via scale estimates — §5.3 item 4)."""
     sa = _qn_scale(a, mask)
     sb = _qn_scale(b, mask)
     ok = (sa > 1e-12) & (sb > 1e-12)

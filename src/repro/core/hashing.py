@@ -57,7 +57,8 @@ def _fmix32(h: jnp.ndarray) -> jnp.ndarray:
 
 
 def murmur3_32(keys: jnp.ndarray, seed: np.uint32 = DEFAULT_SEED) -> jnp.ndarray:
-    """MurmurHash3-32 of integer keys (vectorised, jit-safe).
+    """``h``: MurmurHash3-32 of integer keys (paper §3.1's tuple identifier
+    hash), vectorised and jit-safe.
 
     ``uint32`` keys hash as a single 4-byte block; ``uint64``/``int64`` keys
     as two 4-byte little-endian blocks; ``int32`` is reinterpreted as uint32.
@@ -81,8 +82,9 @@ def murmur3_32(keys: jnp.ndarray, seed: np.uint32 = DEFAULT_SEED) -> jnp.ndarray
 
 
 def murmur3_32_bytes(key: bytes, seed: int = int(DEFAULT_SEED)) -> int:
-    """Reference scalar murmur3-32 over raw bytes (numpy; ingest path for
-    string keys). Matches the canonical smhasher implementation."""
+    """Reference scalar murmur3-32 over raw bytes (numpy; the ingest path
+    for string join keys, §3.1). Matches the canonical smhasher
+    implementation."""
     data = np.frombuffer(key, dtype=np.uint8)
     n = len(data)
     h = np.uint32(seed)
@@ -121,7 +123,8 @@ def murmur3_32_bytes(key: bytes, seed: int = int(DEFAULT_SEED)) -> int:
 
 
 def hash_string_keys(keys, seed: int = int(DEFAULT_SEED)) -> np.ndarray:
-    """Ingest-time helper: murmur3-32 each (str|bytes) key → uint32 array."""
+    """Ingest-time helper: murmur3-32 each (str|bytes) key → uint32 array
+    (string keys enter the §3.1 pipeline as their 32-bit identifiers)."""
     out = np.empty(len(keys), dtype=np.uint32)
     for i, k in enumerate(keys):
         if isinstance(k, str):
@@ -145,7 +148,8 @@ SENTINEL_HASH = np.uint32(0xFFFFFFFF)
 
 def sentinel_safe(key_hash: jnp.ndarray) -> jnp.ndarray:
     """Mask of hashes usable as sketch keys: neither the key-space sentinel
-    nor the (unique) preimage of the Fibonacci-space sentinel."""
+    nor the (unique) preimage of the Fibonacci-space sentinel — the padding
+    reservation of DESIGN.md §1 (2 of 2³² values)."""
     return (key_hash != SENTINEL_HASH) & (fibonacci_u32(key_hash) != SENTINEL_HASH)
 
 
@@ -159,10 +163,12 @@ def fibonacci_u32(key_hash: jnp.ndarray) -> jnp.ndarray:
 
 
 def fibonacci_unit(key_hash: jnp.ndarray) -> jnp.ndarray:
-    """``h_u(k)`` ∈ [0, 1): the Fibonacci hash scaled to the unit interval."""
+    """``h_u(k)`` ∈ [0, 1): the Fibonacci hash scaled to the unit interval
+    (the paper's h_u, §3.1/Fig. 2 — recomputed, never stored)."""
     return fibonacci_u32(key_hash).astype(jnp.float64 if jax.config.jax_enable_x64 else jnp.float32) * (1.0 / 4294967296.0)
 
 
 def unit_interval(fib_u32: jnp.ndarray) -> jnp.ndarray:
-    """Convert raw uint32 Fibonacci values to [0,1) floats."""
+    """Convert raw uint32 Fibonacci values to [0,1) floats — U(k) as the
+    KMV estimators consume it (§2.1)."""
     return fib_u32.astype(jnp.float32) * np.float32(1.0 / 4294967296.0)

@@ -24,7 +24,8 @@ from repro.core.sketch import CorrelationSketch, PAD_FIB, PAD_KEY
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
 class SketchJoin:
-    """Aligned value pairs from two sketches plus joinability statistics."""
+    """Aligned value pairs from two sketches plus joinability statistics
+    (paper Fig. 2 right table + the §2.1/§3.3 set-operation estimators)."""
 
     a: jnp.ndarray          # float32 [n], X values aligned on common keys
     b: jnp.ndarray          # float32 [n], Y values aligned on common keys

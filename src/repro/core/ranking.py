@@ -25,6 +25,8 @@ from repro.core.sketch import CorrelationSketch
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
 class QueryResult:
+    """Top-k answer to a join-correlation query (paper Defn. 3): ranked
+    candidate ids with their estimates, §4.3 bounds and join sizes."""
     indices: jnp.ndarray     # int32 [k] candidate indices (into the stack)
     scores: jnp.ndarray      # float32 [k]
     r: jnp.ndarray           # float32 [k] correlation estimates
@@ -43,7 +45,8 @@ def candidate_stats(
     bootstrap: bool = False,
     key: Optional[jax.Array] = None,
 ):
-    """Compute CandidateStats (+ join sizes) for every candidate in the stack."""
+    """CandidateStats (+ Eq. 1 join sizes) for every candidate in the
+    stack: sketch join (§3.2) → estimator (§5.3) → Hoeffding CI (§4.3)."""
     est = E.ESTIMATORS[estimator]
 
     def one(cand):
@@ -80,7 +83,9 @@ def topk_query(
     key: Optional[jax.Array] = None,
     min_sample: int = 3,
 ) -> QueryResult:
-    """Answer a top-k join-correlation query against a candidate stack."""
+    """Answer a top-k join-correlation query (paper Defn. 3) against a
+    candidate stack: score with the chosen §4.4 scorer, suppress candidates
+    under the m ≥ min_sample floor, return the k best."""
     stats, jsz = candidate_stats(query, candidates, estimator=estimator,
                                  alpha=alpha, bootstrap=bootstrap, key=key)
     # candidates whose sketch join is too small to estimate anything are

@@ -27,7 +27,8 @@ from repro.core import estimators as E
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
 class CandidateStats:
-    """Per-candidate statistics a scorer may consume (all shape [C])."""
+    """Per-candidate statistics a scorer may consume (all shape [C]) —
+    the inputs of the Eq. 5 scoring framework (§4.1/§4.4)."""
 
     r_p: jnp.ndarray                    # Pearson estimate from the sketch join
     m: jnp.ndarray                      # sketch-join sample size
@@ -39,11 +40,13 @@ class CandidateStats:
 
 
 def se_z_factor(m) -> jnp.ndarray:
+    """Fisher-Z risk factor 1 − se_z (the s2 scorer's penalty, §4.2)."""
     return 1.0 - B.fisher_z_se(m)
 
 
 def ci_h_factor(ci_len, eligible=None) -> jnp.ndarray:
-    """List-normalised Hoeffding penalty: 1 − (len − min)/(max − min).
+    """List-normalised Hoeffding penalty 1 − (len − min)/(max − min): the
+    ci_h factor of the paper's headline s4 scorer (§4.3/§4.4).
 
     ``eligible`` restricts the min/max normalisation to candidates that are
     actually in the ranked list (e.g. those whose join sample passed the
@@ -60,11 +63,14 @@ def ci_h_factor(ci_len, eligible=None) -> jnp.ndarray:
 
 
 def ci_b_factor(lo, hi) -> jnp.ndarray:
+    """Bootstrap-CI risk factor 1 − len/2 (the s3 scorer's penalty, §4.4;
+    bootstrap CIs live in [−1, 1] so len/2 ∈ [0, 1])."""
     return 1.0 - (hi - lo) * 0.5
 
 
 def score(stats: CandidateStats, scorer: str = "s4", eligible=None) -> jnp.ndarray:
-    """Return scores (higher = better) for a batch of candidates."""
+    """Eq. 5: score = |r̂| · (1 − risk), for a batch of candidates — the
+    four §4.4 scorers selected by name (s1, s2, s3, s4)."""
     if scorer == "s1":
         return jnp.abs(stats.r_p)
     if scorer == "s2":

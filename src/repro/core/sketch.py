@@ -75,6 +75,7 @@ class CorrelationSketch:
 
     @property
     def n(self) -> int:
+        """Sketch capacity: the paper's budget parameter n (§3.1)."""
         return self.key_hash.shape[-1]
 
     # ---- derived KMV quantities -------------------------------------------------
@@ -84,6 +85,7 @@ class CorrelationSketch:
         return jnp.where(self.mask, f, PAD_FIB)
 
     def n_valid(self) -> jnp.ndarray:
+        """k: stored minima count (= min(n, distinct keys seen), §2.1)."""
         return jnp.sum(self.mask.astype(jnp.int32), axis=-1)
 
     def kth_unit(self) -> jnp.ndarray:
@@ -107,6 +109,9 @@ class CorrelationSketch:
 
 
 def finalize_values(acc: jnp.ndarray, cnt: jnp.ndarray, agg: Agg, mask: jnp.ndarray) -> jnp.ndarray:
+    """Finalise the mergeable aggregation state into the per-key value x_k
+    (paper §3.1): MEAN divides the carried (sum, count), COUNT reads the
+    multiplicity, the rest pass the accumulator through. Padding → 0."""
     if agg == Agg.MEAN:
         v = acc / jnp.maximum(cnt, 1.0)
     elif agg == Agg.COUNT:
@@ -320,7 +325,8 @@ def build_sketch_cols(
     order_offset: jnp.ndarray | float = 0.0,
     pre_hashed: bool = False,
 ) -> CorrelationSketch:
-    """Sketch **all C columns of a table at once** against one key column.
+    """Sketch **all C columns of a table at once** against one key column
+    (the §3.4 streaming build fused at table granularity — DESIGN.md §1/§2).
 
     ``keys`` is ``[m]``, ``values`` is ``[C, m]``; the murmur hash of the key
     column is computed once and shared, as is the fib-order sort (see
@@ -336,7 +342,8 @@ def build_sketch_cols(
 
 
 def empty_sketch_cols(C: int, n: int, agg: Agg = Agg.MEAN) -> CorrelationSketch:
-    """Identity element of `merge`, stacked ``[C, n]`` (scan/fold carry init)."""
+    """Identity element of `merge` (the KMV ⊕ of §2.1), stacked ``[C, n]``
+    — the carry init of every scan/fold in the ingest and lifecycle paths."""
     return CorrelationSketch(
         key_hash=jnp.full((C, n), PAD_KEY, jnp.uint32),
         acc=jnp.zeros((C, n), jnp.float32),
@@ -353,7 +360,8 @@ def empty_sketch_cols(C: int, n: int, agg: Agg = Agg.MEAN) -> CorrelationSketch:
 def place_cols(sk: CorrelationSketch, capacity: int,
                offset: int = 0) -> CorrelationSketch:
     """Embed a stacked ``[C, n]`` sketch into a ``[capacity, n]`` stack at row
-    ``offset``, every other slot the `merge` identity (`empty_sketch_cols`).
+    ``offset``, every other slot the `merge` identity (`empty_sketch_cols`)
+    — the placement step of ladder-capacity compaction (DESIGN.md §4).
 
     Because empty slots are merge identities, stacks whose occupied slots are
     disjoint combine by element-wise merge into their union — this is what
@@ -503,7 +511,9 @@ def build_sketch_streaming(keys, values, *, n: int, agg: Agg = Agg.MEAN,
 
 
 def stack_sketches(sketches) -> CorrelationSketch:
-    """Stack a list of same-(n, agg) sketches along a leading axis → index shard."""
+    """Stack a list of same-(n, agg) sketches along a leading axis → the
+    dense columnar index layout of DESIGN.md §3 (legacy per-column path;
+    the fused ingest writes stacks directly)."""
     agg = sketches[0].agg
     if any(s.agg != agg for s in sketches):
         raise ValueError("all sketches in a stack must share the aggregation")

@@ -28,7 +28,9 @@ from repro.engine import ingest
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
 class IndexShard:
-    """Device-resident stacked sketches (leading axis = columns)."""
+    """Device-resident stacked sketches (leading axis = columns) — the
+    dense scan layout of DESIGN.md §3."""
+
     key_hash: jnp.ndarray   # u32 [C, n]
     values: jnp.ndarray     # f32 [C, n]
     mask: jnp.ndarray       # f32 [C, n]
@@ -38,16 +40,19 @@ class IndexShard:
 
     @property
     def num_columns(self) -> int:
+        """C: columns resident in this shard (including padding columns)."""
         return self.key_hash.shape[0]
 
     @property
     def sketch_size(self) -> int:
+        """n: the sketch budget every column was built with (§3.1)."""
         return self.key_hash.shape[1]
 
 
 @dataclasses.dataclass
 class SketchIndex:
-    """Host handle: device arrays + column catalog.
+    """Host handle: device arrays + column catalog (the engine's stand-in
+    for the paper's §5.5 dataset index).
 
     ``prep_cache`` persists the query-side candidate sort structure
     (`repro.engine.query.PreppedShard`) computed against this index: it
@@ -62,13 +67,45 @@ class SketchIndex:
 
     @property
     def num_columns(self) -> int:
+        """Real (named) columns, excluding any pad_to padding."""
         return len(self.names)
 
 
 def query_arrays(sk: CorrelationSketch):
-    """Flatten one sketch into the (kh, val, mask, cmin, cmax) query tuple."""
+    """Flatten one sketch into the (kh, val, mask, cmin, cmax) query tuple
+    the jitted programs take (col_min/col_max feed the §4.3 bounds)."""
     return (sk.key_hash, sk.values(), sk.mask.astype(jnp.float32),
             sk.col_min, sk.col_max)
+
+
+@dataclasses.dataclass(frozen=True)
+class KeyMinima:
+    """Per-candidate KMV key-minima layout (host-resident, O(C) scalars).
+
+    The two numbers that summarise each candidate's bottom-k synopsis for
+    joinability estimation (§2.1/§3.3, DESIGN.md §5): the stored-minima
+    count ``k_C`` and the KMV threshold ``τ_C = U(k_C)`` as a raw uint32
+    Fibonacci value. Together with a stage-1 hit count they yield
+    containment / Jaccard / join-size estimates with Hoeffding CIs —
+    `repro.core.containment.joinability_estimates` — without ever reading
+    the [C, n] sketch payload. Content-dependent: recompute when the index
+    mutates (the serving layers key it off the segment version).
+    """
+    count: np.ndarray   # int32 [C], valid minima per candidate (k_C)
+    tau: np.ndarray     # uint32 [C], k_C-th smallest Fibonacci value
+
+
+def key_minima(shard: IndexShard) -> KeyMinima:
+    """Extract the `KeyMinima` layout (§2.1 synopsis scalars, DESIGN.md §5)
+    from an index shard (one host pass
+    over the key/mask planes; the sketches store minima fib-ascending, so
+    the threshold is just the last valid slot's Fibonacci value)."""
+    from repro.core.containment import fib_u32_np
+    kh = np.asarray(shard.key_hash)
+    mask = np.asarray(shard.mask) > 0
+    fib = np.where(mask, fib_u32_np(kh), 0)
+    return KeyMinima(count=mask.sum(-1).astype(np.int32),
+                     tau=fib.max(-1).astype(np.uint32))
 
 
 class _IndexArrays:
@@ -106,7 +143,8 @@ def build_index(tables: Sequence[Union[Table, TableGroup]], *, n: int = 256,
                 agg: Agg = Agg.MEAN, chunk: int = 65536,
                 pad_to: Optional[int] = None,
                 engine: str = "fused") -> SketchIndex:
-    """Sketch every column and stack into an index.
+    """Sketch every column (§3.4 streaming build) and stack into an index
+    (DESIGN.md §2/§3).
 
     ``tables`` may mix single-column `Table`s and multi-column `TableGroup`s;
     groups go through the fused ingest engine (`repro.engine.ingest`) which
@@ -157,7 +195,8 @@ def precompute_prep(index: SketchIndex, mesh, shard: IndexShard, qcfg):
 
 
 def place_shard(shard: IndexShard, mesh) -> IndexShard:
-    """Column-pad an `IndexShard` to the mesh device count and device_put it
+    """Column-pad an `IndexShard` to the mesh device count (DESIGN.md §4:
+    deterministic padded shapes are the compile-cache key) and device_put it
     sharded along the column axis. The padded columns are fully-masked (never
     match, never eligible), so results are unchanged; the padded column count
     is deterministic in (C, ndev) — the compile-cache key the serving layers
@@ -188,7 +227,8 @@ def place_shard(shard: IndexShard, mesh) -> IndexShard:
 
 
 def shard_for_mesh(index: SketchIndex, mesh) -> IndexShard:
-    """Place the index arrays sharded over all mesh devices (column axis)."""
+    """Place the index arrays sharded over all mesh devices (column axis —
+    the DESIGN.md §3 brute-force scan layout)."""
     return place_shard(index.shard, mesh)
 
 

@@ -57,7 +57,8 @@ DEFAULT_BLOCK = 16
 
 
 def merge_cols(a: CorrelationSketch, b: CorrelationSketch) -> CorrelationSketch:
-    """`merge` vmapped over the leading column axis of stacked sketches."""
+    """`merge` (KMV ⊕, §2.1) vmapped over the leading column axis of
+    stacked sketches — the fold operator of the fused scan (DESIGN.md §2)."""
     if a.agg != b.agg:
         raise ValueError(f"cannot merge sketches with different aggs: {a.agg} vs {b.agg}")
     return jax.vmap(merge)(a, b)
@@ -88,7 +89,9 @@ def _ingest_block(carry: CorrelationSketch, keys_b, values_b, valid_b,
 def sketch_table(keys, values, *, n: int = 256, agg: Agg = Agg.MEAN,
                  chunk: int = DEFAULT_CHUNK, block: int = DEFAULT_BLOCK,
                  pre_hashed: bool = False) -> CorrelationSketch:
-    """Sketch every column of one table in (at most a few) fused dispatches.
+    """Sketch every column of one table in (at most a few) fused
+    dispatches — the §3.4 streaming build at table granularity
+    (DESIGN.md §2).
 
     ``keys [m]`` is the table's join-key column, ``values [C, m]`` its
     numeric columns. Tables up to ``block·chunk`` rows go through a single
@@ -134,7 +137,9 @@ def sketch_table(keys, values, *, n: int = 256, agg: Agg = Agg.MEAN,
 
 
 def source_names(t, index: int = 0):
-    """Column names contributed by one ingest source (Table or TableGroup)."""
+    """Column names contributed by one ingest source (Table or
+    TableGroup) — the §5.5 column catalog entries; positional defaults use
+    the global source index so ids never collide across append calls."""
     from repro.data.pipeline import TableGroup
     if isinstance(t, TableGroup):
         return [t.column_name(c) for c in range(t.num_columns)]
@@ -143,7 +148,8 @@ def source_names(t, index: int = 0):
 
 def sketch_source(t, *, n: int, agg: Agg, chunk: int,
                   engine: str = "fused") -> CorrelationSketch:
-    """Sketch one ingest source into a stacked ``[C, n]`` sketch.
+    """Sketch one ingest source into a stacked ``[C, n]`` sketch
+    (DESIGN.md §2).
 
     The single entry point shared by the one-shot index builder
     (`repro.engine.index.build_index`) and the streaming append path
@@ -172,7 +178,8 @@ def sketch_source(t, *, n: int, agg: Agg, chunk: int,
 # ----------------------------------------------------------------------------
 
 def tree_merge(parts: CorrelationSketch, merge_fn=merge_cols) -> CorrelationSketch:
-    """Fold P partial sketches (leading ``[P]`` axis) in log2(P) vmapped
+    """Fold P partial sketches (leading ``[P]`` axis, KMV ⊕ closure of
+    §2.1) in log2(P) vmapped
     rounds. Exact for any P by the merge closure; the tree shape only changes
     wall-clock, not results (merge is associative — tested). Works under jit
     (P is static), so it is also the per-device fold of the sharded build."""
@@ -192,7 +199,8 @@ def tree_merge(parts: CorrelationSketch, merge_fn=merge_cols) -> CorrelationSket
 
 def distributed_build_table(keys, values, mesh, *, n: int = 256,
                             agg: Agg = Agg.MEAN, pre_hashed: bool = False):
-    """Row-sharded fused table build: local `[C, n]` sketches on every
+    """Row-sharded fused table build (the distributed §3.4 construction,
+    DESIGN.md §2): local `[C, n]` sketches on every
     device, one all-gather of the partials, then a replicated tree fold.
 
     ``keys [m]`` / ``values [C, m]`` with m divisible by the device count.

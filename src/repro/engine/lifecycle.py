@@ -34,7 +34,9 @@ The design is a miniature LSM tree over column sketches:
 `LiveQueryServer` is the read side: one `repro.engine.serve.QueryServer` per
 segment, all sharing a `CompileCache` (same-shape segments share programs)
 with per-segment `PreppedShard` entries, and a deterministic cross-segment
-top-k combine. `refresh()` snapshots the segment list under the index lock,
+top-k combine. Two-stage retrieval (``qcfg.prune``, DESIGN.md §5) applies
+per segment, and `search_joinable` fans the stage-1 joinability scan out
+across all live segments with global column ids. `refresh()` snapshots the segment list under the index lock,
 so reads are consistent: a query sees either the pre- or post-mutation
 index, never a half-applied one. The one scoring caveat during the delta
 phase: the s4 ci-normalisation spans one segment's candidate list (it is the
@@ -72,7 +74,8 @@ _SEG_FIELDS = ("kh", "acc", "cnt", "order", "mask", "cmin", "cmax", "rows",
 
 @dataclasses.dataclass
 class Segment:
-    """One fixed-capacity stack of column sketches (host-resident).
+    """One fixed-capacity stack of column sketches (host-resident; the
+    LSM level of DESIGN.md §4 — capacity drawn from the segment ladder).
 
     Unlike the static `IndexShard`, a segment keeps the *full mergeable*
     sketch state (acc/cnt/order, not finalised values) so compaction can
@@ -101,6 +104,7 @@ class Segment:
 
     @classmethod
     def empty(cls, sid: int, capacity: int, n: int, agg: Agg) -> "Segment":
+        """A fresh all-identity segment (every slot the merge identity)."""
         return cls(
             sid=sid, n=n, agg=agg, capacity=capacity,
             kh=np.full((capacity, n), PAD_KEY, np.uint32),
@@ -115,9 +119,11 @@ class Segment:
 
     @property
     def free(self) -> int:
+        """Unwritten slots remaining before this segment seals."""
         return self.capacity - self.used
 
     def live_count(self) -> int:
+        """Slots that are written and not tombstoned."""
         return int(self.live.sum())
 
     def write(self, sk: CorrelationSketch, names: Sequence[str],
@@ -202,7 +208,7 @@ class Segment:
 def ladder_rung(c: int, base: int) -> int:
     """Smallest capacity on the fixed ladder ``base · 2^i`` holding c
     columns. A fixed ladder keeps the set of index shapes (hence compiled
-    query programs) logarithmic in corpus size."""
+    query programs) logarithmic in corpus size (DESIGN.md §4)."""
     cap = int(base)
     while cap < c:
         cap *= 2
@@ -210,7 +216,9 @@ def ladder_rung(c: int, base: int) -> int:
 
 
 class LiveIndex:
-    """A mutable sketch index: append / delete / compact / save / load.
+    """A mutable sketch index: append / delete / compact / save / load —
+    the paper's growing dataset collections (§5.5) served live. Exactness
+    rests on the KMV merge closure (§2.1, DESIGN.md §2/§4).
 
     All mutation is guarded by an internal lock and versioned, so a serving
     layer can snapshot a consistent segment list at any time (`segments()`),
@@ -253,10 +261,12 @@ class LiveIndex:
             return [nm for seg in self._segs for nm in seg.names[:seg.used]]
 
     def live_columns(self) -> int:
+        """Total live (written, not tombstoned) columns across segments."""
         with self._lock:
             return sum(seg.live_count() for seg in self._segs)
 
     def stats(self) -> dict:
+        """Segment/occupancy/version counters (a monitoring snapshot)."""
         with self._lock:
             return dict(
                 segments=len(self._segs),
@@ -396,6 +406,8 @@ class LiveIndex:
 
     @classmethod
     def load(cls, path: str) -> "LiveIndex":
+        """Rehydrate a `save` snapshot — bit-identical mergeable state, so
+        serving and future compactions behave as if never persisted."""
         with open(os.path.join(path, MANIFEST_FILE)) as f:
             manifest = json.load(f)
         if manifest.get("format") != 1:
@@ -433,7 +445,9 @@ class _SegEntry:
 
 
 class LiveQueryServer:
-    """Consistent batched serving over a mutating `LiveIndex`.
+    """Consistent batched serving over a mutating `LiveIndex`
+    (DESIGN.md §4; inherits two-stage pruning and joinability search —
+    DESIGN.md §5 — per segment).
 
     One `QueryServer` per segment, all sharing one `CompileCache`: programs
     are keyed on the (device-padded) segment capacity, and capacities come
@@ -529,19 +543,23 @@ class LiveQueryServer:
         self.names = names
         self._seen_version = ver
 
-    def warmup(self, cost_reps: int = 2, include_ladder: bool = True) -> None:
+    def warmup(self, cost_reps: int = 2, include_ladder: bool = True,
+               joinability: bool = False) -> None:
         """Compile every bucket program for every resident segment shape and
         measure dispatch costs (kept per capacity class so segment turnover
         doesn't lose them). ``include_ladder`` additionally pre-warms the
         upcoming ladder shapes that need not be resident yet — the
         delta-capacity rung (so the *first* append after a compact serves
         without a compile) and the rung a `compact()` of the current live
-        columns would land on — the capacity ladder is known a priori."""
+        columns would land on — the capacity ladder is known a priori.
+        ``joinability`` forwards to `QueryServer.warmup`: pre-warm the
+        `search_joinable` stage-1 scan too (``safe`` servers get it
+        regardless)."""
         ndev = int(self.mesh.devices.size)
         warmed = set()
         for sid in self._order:
             e = self._entries[sid]
-            e.srv.warmup(cost_reps=cost_reps)
+            e.srv.warmup(cost_reps=cost_reps, joinability=joinability)
             self._cap_costs[e.capacity] = dict(e.srv._bucket_cost)
             warmed.add(e.capacity)
         if include_ladder:
@@ -553,7 +571,8 @@ class LiveQueryServer:
                     continue
                 empty = Segment.empty(-1, cap, self.n, self.live.agg)
                 entry = self._make_entry(-1, 0, 0, 0, empty.to_index_shard())
-                entry.srv.warmup(cost_reps=cost_reps)
+                entry.srv.warmup(cost_reps=cost_reps,
+                                 joinability=joinability)
                 self._cap_costs[entry.capacity] = dict(entry.srv._bucket_cost)
                 warmed.add(entry.capacity)
 
@@ -610,6 +629,64 @@ class LiveQueryServer:
         sks = SV.build_query_sketches(keys_list, values_list, n=self.n,
                                       chunk=chunk)
         return self.query_batch(sks, refresh=refresh)
+
+    # -- joinability search --------------------------------------------------
+    def search_joinable_sketches(self, sketches: CorrelationSketch, *,
+                                 k: Optional[int] = None,
+                                 metric: str = "containment",
+                                 refresh: bool = True) -> SV.JoinabilityResult:
+        """Top-k joinability search across every live segment (DESIGN.md §5).
+
+        Fans the stage-1 containment scan out per segment (each segment
+        server ranks its own candidates — the global top-k is contained in
+        the union of per-segment top-ks), shifts segment-local ids into the
+        global catalog (`self.names`), and combines deterministically:
+        metric desc, global id asc. Tombstoned and unused slots have zero
+        stored minima, so they can never surface.
+        """
+        if refresh:
+            self.refresh()
+        k = int(k or self.qcfg.k)
+        nq = int(jax.tree.leaves(sketches)[0].shape[0])
+        fields = SV.JoinabilityResult._FIELDS
+        empty = {f: np.zeros((nq, k), np.float32) for f in fields}
+        empty["ids"] = np.full((nq, k), -1, np.int32)
+        parts = []
+        for sid in self._order:
+            e = self._entries[sid]
+            if e.used == 0:
+                continue
+            res = e.srv.search_joinable_sketches(sketches, k=k, metric=metric)
+            ids = np.where(res.ids >= 0, res.ids + e.base, -1)
+            parts.append(dataclasses.replace(res, ids=ids.astype(np.int32)))
+        if not parts or nq == 0:
+            return SV.JoinabilityResult(**{f: empty[f][:nq] for f in fields})
+        # every per-segment result is k wide, so the concatenation holds
+        # ≥ k columns whenever any part exists — the [:, :k] slice below is
+        # always full width
+        cat = {f: np.concatenate([getattr(p, f) for p in parts], axis=1)
+               for f in fields}
+        ok = cat["ids"] >= 0
+        pick = np.lexsort((np.where(ok, cat["ids"], np.iinfo(np.int32).max),
+                           np.where(ok, -cat["score"], np.inf)), axis=1)[:, :k]
+        take = lambda a: np.take_along_axis(a, pick, axis=1)
+        valid = take(ok)
+        out = {}
+        for f in fields:
+            taken = take(cat[f])
+            out[f] = (np.where(valid, taken, -1).astype(np.int32)
+                      if f == "ids" else np.where(valid, taken, 0.0))
+        return SV.JoinabilityResult(**out)
+
+    def search_joinable(self, keys_list, *, k: Optional[int] = None,
+                        metric: str = "containment", chunk: int = 8192,
+                        refresh: bool = True) -> SV.JoinabilityResult:
+        """Top-k joinable columns for raw query key columns (values-free),
+        across all segments — global ids index `self.names`."""
+        values = [np.zeros((len(kz),), np.float32) for kz in keys_list]
+        sks = SV.build_query_sketches(keys_list, values, n=self.n, chunk=chunk)
+        return self.search_joinable_sketches(sks, k=k, metric=metric,
+                                             refresh=refresh)
 
     # -- telemetry -----------------------------------------------------------
     def throughput(self) -> dict:

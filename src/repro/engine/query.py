@@ -35,6 +35,7 @@ import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
+from repro.core.bounds import hoeffding_eligibility_floor
 from repro.engine.index import IndexShard
 from repro.kernels import ops as K
 from repro.kernels.ops import KernelConfig
@@ -46,6 +47,13 @@ _PAD_KEY = np.uint32(0xFFFFFFFF)
 
 @dataclasses.dataclass(frozen=True)
 class QueryConfig:
+    """Knobs of the distributed query program (paper Defn. 3 + DESIGN.md §5).
+
+    ``k``/``estimator``/``scorer``/``alpha``/``min_sample`` mirror the
+    paper's query model (§4: top-k, the §5.3 estimators, the §4.4 scorers,
+    the §4.3 confidence level and the m ≥ 3 eligibility floor). The rest is
+    engine shape policy — see the field comments.
+    """
     k: int = 10
     estimator: str = "pearson"      # pearson | spearman
     scorer: str = "s4"              # s1 | s2 | s4  (s3 = bootstrap: host path)
@@ -58,6 +66,20 @@ class QueryConfig:
     #: XLA-path intersect: "sortmerge" (O(C·n·log n), no n² tensor — §Perf E2)
     #: or "eqmatrix" (the kernel-shaped reference formulation)
     intersect: str = "sortmerge"
+    #: two-stage retrieval (DESIGN.md §5): "off" = the classic full scan
+    #: (bit-identical to pre-prune behaviour); "safe" = drop candidates whose
+    #: *exact* stage-1 intersection is below ``min_sample`` — those score
+    #: −inf in the full scan, so the pruned top-k provably contains every
+    #: true top-k column; "topm" = keep the ``prune_m`` best stage-1
+    #: candidates per query (approximate, fastest)
+    prune: str = "off"              # off | safe | topm
+    #: "topm" survivor budget per query (union across a batch)
+    prune_m: int = 128
+    #: base rung of the compacted-shard capacity ladder ``prune_base · 2^i``
+    #: — stage-2 dispatch shapes are drawn from this fixed ladder, so the
+    #: compile cache stays O(log C) (same discipline as the segment ladder
+    #: of `repro.engine.lifecycle`, DESIGN.md §4)
+    prune_base: int = 64
 
 
 def _moments_from(a, b, w):
@@ -100,7 +122,8 @@ def _sortmerge_moments(q_kh, q_val, q_mask, kh, vals, mask):
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
 class PreppedShard:
-    """Precomputed candidate-side sort structure for the batched intersect.
+    """Precomputed candidate-side sort structure for the batched intersect
+    (the resident half of the XLA sortmerge path, DESIGN.md §3).
 
     Both arrays are laid out like the (padded, per-``score_chunk``-block)
     index: for each block of ``chunk`` candidate rows, ``dk`` holds the
@@ -296,21 +319,15 @@ def _shard_stats(q_kh, q_val, q_mask, q_cmin, q_cmax, shard: IndexShard,
     return r, m, hi - lo
 
 
-def score_shard(q_kh, q_val, q_mask, q_cmin, q_cmax, shard: IndexShard,
-                qcfg: QueryConfig, axis_names=None,
-                prep: Optional[PreppedShard] = None):
-    """Score every candidate in a shard; returns (scores, r, m, ci_len).
-
-    Accepts a single query (``q_kh: [n_q]``) or a batch (``q_kh: [B, n_q]``,
-    ``q_cmin/q_cmax: [B]``); outputs gain the same leading axis. The s4
-    normalisation is computed per query row — a ``[B]`` pmin/pmax across
-    shards — so each batched query sees exactly the normalisation it would
-    get alone. ``prep`` (batched sortmerge path only) supplies the
-    precomputed candidate sort structure so it is not rebuilt per dispatch.
-    """
-    r, m, ci_len = _shard_stats(q_kh, q_val, q_mask, q_cmin, q_cmax, shard,
-                                qcfg, prep=prep)
-    eligible = m >= qcfg.min_sample
+def _scores_from_stats(r, m, ci_len, qcfg: QueryConfig, axis_names=None):
+    """Scoring tail shared by the full scan and the pruned stage-2 path:
+    (r, m, ci_len) → scores, with the §4.4 scorer and the m ≥ min_sample
+    eligibility floor (ineligible → −inf). The s4 min/max normalisation runs
+    over the *eligible* candidates of the last axis (pmin/pmax across shards
+    when ``axis_names`` is given) — min/max are exact, so any candidate
+    subset containing every eligible candidate normalises identically (the
+    ``prune='safe'`` equivalence, DESIGN.md §5)."""
+    eligible = m >= hoeffding_eligibility_floor(qcfg.min_sample)
 
     if qcfg.scorer == "s1":
         s = jnp.abs(r)
@@ -328,13 +345,32 @@ def score_shard(q_kh, q_val, q_mask, q_cmin, q_cmax, shard: IndexShard,
         f = jnp.clip(1.0 - (jnp.minimum(ci_len, lmax[..., None]) - lmin[..., None])
                      / rng[..., None], 0.0, 1.0)
         s = jnp.abs(r) * f
-    s = jnp.where(eligible, s, -jnp.inf)
+    return jnp.where(eligible, s, -jnp.inf)
+
+
+def score_shard(q_kh, q_val, q_mask, q_cmin, q_cmax, shard: IndexShard,
+                qcfg: QueryConfig, axis_names=None,
+                prep: Optional[PreppedShard] = None):
+    """Score every candidate in a shard (§4: estimator → §4.3 CI → §4.4
+    scorer); returns (scores, r, m, ci_len).
+
+    Accepts a single query (``q_kh: [n_q]``) or a batch (``q_kh: [B, n_q]``,
+    ``q_cmin/q_cmax: [B]``); outputs gain the same leading axis. The s4
+    normalisation is computed per query row — a ``[B]`` pmin/pmax across
+    shards — so each batched query sees exactly the normalisation it would
+    get alone. ``prep`` (batched sortmerge path only) supplies the
+    precomputed candidate sort structure so it is not rebuilt per dispatch.
+    """
+    r, m, ci_len = _shard_stats(q_kh, q_val, q_mask, q_cmin, q_cmax, shard,
+                                qcfg, prep=prep)
+    s = _scores_from_stats(r, m, ci_len, qcfg, axis_names=axis_names)
     return s, r, m, ci_len
 
 
 def make_prep_fn(mesh, C_total: int, n: int, qcfg: QueryConfig):
     """Build a jitted program that precomputes the per-shard candidate sort
-    structure (`PreppedShard`) for the batched query path. Run it once per
+    structure (`PreppedShard`, DESIGN.md §3) for the batched query path.
+    Run it once per
     resident index + score_chunk config; pass its result to the query
     program built with ``make_query_fn(..., batch=B, with_prep=True)``.
     """
@@ -364,9 +400,559 @@ def make_prep_fn(mesh, C_total: int, n: int, qcfg: QueryConfig):
     return jax.jit(fn)
 
 
+# ----------------------------------------------------------------------------
+# two-stage retrieval: stage-1 containment scan + pruned stage-2 scoring
+# (DESIGN.md §5)
+# ----------------------------------------------------------------------------
+
+def _hits_block_single(qk_s, qm_s, kh, mask):
+    """Hit counts of one candidate block against the pre-sorted query keys.
+
+    The stage-1 twin of `_sortmerge_moments` with the query sort hoisted out
+    of the chunk loop (the query table is block-invariant): one binary
+    search per candidate slot, one reduction — no value traffic, no moment
+    sums (DESIGN.md §5)."""
+    PAD = jnp.uint32(0xFFFFFFFF)
+    ck = jnp.where(mask > 0, kh, PAD)                               # [C, n]
+    pos = jnp.clip(jnp.searchsorted(qk_s, ck.reshape(-1)),
+                   0, qk_s.shape[0] - 1).reshape(ck.shape)
+    hitc = (qk_s[pos] == ck) & (qm_s[pos] > 0) & (mask > 0)
+    return jnp.sum(hitc.astype(jnp.float32), axis=-1)               # [C]
+
+
+def _block_probes(q_kh, q_mask, dk):
+    """Probe the whole query batch against one block's sorted distinct-key
+    table ``dk [Mb]``. Returns ``flat [B·nq] i32``: the dk position of each
+    hit, or the sentinel ``Mb + 1`` for misses (one past the dump column, so
+    a size-``Mb+1`` scatter drops it as out-of-bounds). ``flat`` is the
+    whole probe state — both stages' membership tables scatter from it,
+    which is what lets stage 2 skip the binary search entirely."""
+    Mb = dk.shape[0]
+    PAD = jnp.uint32(0xFFFFFFFF)
+    qk = jnp.where(q_mask > 0, q_kh, PAD).reshape(-1)
+    pos = jnp.clip(jnp.searchsorted(dk, qk), 0, Mb - 1)
+    hit = (dk[pos] == qk) & (q_mask.reshape(-1) > 0) & (qk != PAD)
+    return jnp.where(hit, pos.astype(jnp.int32), jnp.int32(Mb + 1))
+
+
+def _block_bits(flat, B: int, T: int):
+    """Bit-packed membership table ``[T] u32``: bit b of slot t set iff
+    query row b holds distinct key t. One u32 scatter-add builds it (keys
+    are distinct within a row, so a bit is added at most once; misses index
+    out of bounds and are dropped); downstream consumers pay one u32 gather
+    for the whole batch instead of B float gathers — the memory-traffic
+    trick that makes stage 1 cheap (DESIGN.md §5). Requires B ≤ 32."""
+    nq = flat.shape[0] // B
+    bit = jnp.left_shift(jnp.uint32(1),
+                         jnp.repeat(jnp.arange(B, dtype=jnp.uint32), nq))
+    return jnp.zeros((T,), jnp.uint32).at[flat].add(bit)
+
+
+def _block_hittab(flat, B: int, T: int):
+    """Per-row float membership table ``[B, T]`` — the B > 32 fallback for
+    `_block_bits` (the exact structure `_sortmerge_moments_batched`
+    scatters internally)."""
+    nq = flat.shape[0] // B
+    row = jnp.repeat(jnp.arange(B, dtype=jnp.int32), nq) * T
+    vflat = jnp.where(flat < T, row + flat, B * T)
+    return jnp.zeros((B * T,), jnp.float32).at[vflat].set(1.0).reshape(B, T)
+
+
+def _block_vtab(flat, qv, B: int, T: int):
+    """Per-row query-value table ``[B, T]``: the value of row b's key at
+    distinct-key slot t (zero elsewhere). Scattered from the stage-1 probe
+    state, so stage 2 never re-searches."""
+    nq = flat.shape[0] // B
+    row = jnp.repeat(jnp.arange(B, dtype=jnp.int32), nq) * T
+    vflat = jnp.where(flat < T, row + flat, B * T)
+    return jnp.zeros((B * T,), jnp.float32).at[vflat].set(qv).reshape(B, T)
+
+
+def _w_from_bits(bits_g, B: int):
+    """Expand gathered bit-packed membership (u32 ``[...]``) into per-row
+    floats ``[B, ...]`` — B cheap vector ops replacing B float gathers."""
+    return jnp.stack([((bits_g >> jnp.uint32(b)) & jnp.uint32(1))
+                      .astype(jnp.float32) for b in range(B)])
+
+
+def _use_bits(B: int) -> bool:
+    return B <= 32
+
+
+def _hits_block_tables(q_kh, q_mask, kh, mask, prep):
+    """Stage-1 core for one candidate block (batched XLA sortmerge path):
+    probe → membership table → per-candidate hit counts via the per-slot
+    segment ids. Returns ``(hits [B, chunk], bits [T] u32, flat [B·nq])`` —
+    the tables are handed to stage 2 so the probe work is paid once per
+    dispatch, not once per stage (DESIGN.md §5).
+
+    Exactness: a hit bit is set exactly for (row, distinct key) membership,
+    and every valid candidate slot maps to its key's table slot (invalid
+    slots → the never-written dump column), so the count equals the exact
+    sketch intersection size — the scoring path's sample size ``m``."""
+    B = q_kh.shape[0]
+    if prep is None:
+        dk, sid = _prep_block(kh, mask)
+    else:
+        dk, sid = prep
+    Mb = dk.size
+    T = Mb + 1
+    flat = _block_probes(q_kh, q_mask, dk.reshape(-1))
+    if _use_bits(B):
+        bits = _block_bits(flat, B, T)
+        bg = jnp.take(bits, sid.reshape(-1)).reshape(kh.shape)     # [chunk, n]
+        hits = _w_from_bits(bg, B).sum(-1)
+    else:
+        bits = jnp.zeros((T,), jnp.uint32)      # stage 2 rebuilds from flat
+        tab = _block_hittab(flat, B, T)
+        w = jnp.take(tab, sid.reshape(-1), axis=-1).reshape(
+            (B,) + kh.shape)
+        hits = w.sum(-1)
+    return hits, bits, flat
+
+
+def _shard_hits(q_kh, q_mask, shard: IndexShard, qcfg: QueryConfig,
+                prep: Optional[PreppedShard] = None,
+                emit_tables: bool = False):
+    """Stage-1 scan: exact sketch-intersection sizes for every candidate in
+    a shard, chunked exactly like `_shard_stats` (same ``score_chunk``
+    blocks, so the precomputed `PreppedShard` is shared between stages).
+    Returns hits ``[..., C]`` — by key-distinctness this *is* the
+    sketch-join sample size ``m`` the scoring path would compute, which is
+    what makes ``prune='safe'`` correctness-preserving (DESIGN.md §5).
+
+    ``emit_tables`` (batched XLA-sortmerge only) additionally returns the
+    per-block probe state ``(bits [nb, T], flat [nb, B·nq])`` for the
+    stage-2 program to reuse."""
+    batched = q_kh.ndim == 2
+    C = shard.key_hash.shape[0]
+    chunk, pad, nb = _chunk_layout(C, qcfg.score_chunk)
+    kh, mask = shard.key_hash, shard.mask
+    if pad:
+        kh = jnp.pad(kh, ((0, pad), (0, 0)), constant_values=_PAD_KEY)
+        mask = jnp.pad(mask, ((0, pad), (0, 0)))
+    Cp = C + pad
+    if prep is not None:
+        assert prep.dk.shape[0] == Cp, (prep.dk.shape, Cp)
+
+    sortmerge = (qcfg.kernels.backend == "xla"
+                 and qcfg.intersect == "sortmerge")
+    assert not emit_tables or (batched and sortmerge), \
+        "probe tables exist only on the batched sortmerge path"
+    if sortmerge and not batched:
+        PAD = jnp.uint32(0xFFFFFFFF)
+        q_eff = jnp.where(q_kh != PAD, q_mask, 0.0)
+        qk = jnp.where(q_eff > 0, q_kh, PAD)
+        order = jnp.argsort(qk)
+        qk_s = qk[order]
+        qm_s = q_eff[order]
+        block = lambda ckh, cmask, cprep: _hits_block_single(
+            qk_s, qm_s, ckh, cmask)
+    elif sortmerge:
+        block = lambda ckh, cmask, cprep: _hits_block_tables(
+            q_kh, q_mask, ckh, cmask, cprep)
+    elif batched:
+        block = lambda ckh, cmask, cprep: K.containment_hits_batched(
+            q_kh, q_mask, ckh, cmask, qcfg.kernels)
+    else:
+        block = lambda ckh, cmask, cprep: K.containment_hits(
+            q_kh, q_mask, ckh, cmask, qcfg.kernels)
+
+    have_prep = prep is not None and sortmerge and batched
+    tables = sortmerge and batched
+    if nb > 1:
+        resh = lambda a: a.reshape((nb, chunk) + a.shape[1:])
+        blocks_prep = ((resh(prep.dk), resh(prep.sid)) if have_prep
+                       else (jnp.zeros((nb, 0)), jnp.zeros((nb, 0))))
+
+        def one(args):
+            ckh, cmask, cdk, csid = args
+            return block(ckh, cmask, (cdk, csid) if have_prep else None)
+
+        out = jax.lax.map(one, (resh(kh), resh(mask), *blocks_prep))
+        hits = out[0] if tables else out
+        # lax.map stacks the chunk axis in front: [nb, ..., chunk] → [..., Cp]
+        hits = jnp.moveaxis(hits, 0, -2).reshape(q_kh.shape[:-1] + (Cp,))
+        hits = hits[..., :C]
+        if emit_tables:
+            return hits, out[1], out[2]
+        return hits
+    out = block(kh, mask, (prep.dk, prep.sid) if have_prep else None)
+    hits = (out[0] if tables else out)[..., :C]
+    if emit_tables:
+        return hits, out[1][None], out[2][None]
+    return hits
+
+
+def make_stage1_fn(mesh, C_total: int, n: int, qcfg: QueryConfig,
+                   batch: Optional[int] = None, with_prep: bool = False,
+                   emit_tables: bool = False):
+    """Build the jitted stage-1 containment-scan program (DESIGN.md §5):
+    query arrays + sharded index → per-candidate hit counts ``[.., C_total]``
+    (sharded along the candidate axis, gathered to the host by the caller).
+    Same signature discipline as
+    `make_query_fn` — the full query-array tuple plus an optional trailing
+    `PreppedShard`. The hit counts are *exact* (not estimates), see
+    `_shard_hits`; turning them into containment/Jaccard/join-size
+    estimates is host-side math (`repro.core.containment`).
+
+    ``emit_tables`` makes the program also return the device-resident probe
+    state ``(bits [nb·ndev, T] u32, flat [nb·ndev, B·n_q] i32)`` that
+    `make_pruned_query_fn` consumes — the binary searches and membership
+    scatters of a dispatch are then paid exactly once across both stages."""
+    axes = tuple(mesh.axis_names)
+    ndev = int(mesh.devices.size)
+    assert C_total % ndev == 0
+    assert not (with_prep and batch is None), "prep applies to the batched path"
+    assert not emit_tables or batch is not None
+
+    def local(q_kh, q_val, q_mask, q_cmin, q_cmax, shard: IndexShard, *rest):
+        if batch is not None:
+            assert q_kh.shape[0] == batch, (q_kh.shape, batch)
+        else:
+            assert q_kh.ndim == 1, q_kh.shape
+        return _shard_hits(q_kh, q_mask, shard, qcfg,
+                           prep=rest[0] if rest else None,
+                           emit_tables=emit_tables)
+
+    spec_sharded = P(axes)
+    shard_specs = IndexShard(
+        key_hash=spec_sharded, values=spec_sharded, mask=spec_sharded,
+        col_min=spec_sharded, col_max=spec_sharded, rows=spec_sharded)
+    in_specs = (P(), P(), P(), P(), P(), shard_specs)
+    if with_prep:
+        in_specs += (PreppedShard(dk=spec_sharded, sid=spec_sharded),)
+    hits_spec = P(axes) if batch is None else P(None, axes)
+    out_specs = ((hits_spec, P(axes), P(axes)) if emit_tables else hits_spec)
+    fn = shard_map(local, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                   check_rep=False)
+    return jax.jit(fn)
+
+
+def _gathered_stats(a, w, values_g, cmin_g, cmax_g, q_cmin, q_cmax,
+                    qcfg: QueryConfig):
+    """(aligned query values, membership, gathered candidate side) → per-
+    candidate (r, m, ci_len), mirroring `_score_block` + `_shard_stats`
+    arithmetic: every per-slot float is the same untouched value the full
+    scan would see, and ``m`` (integer-valued sums of {0,1}) is exactly
+    equal. Real-valued scores agree to within a few ulps — XLA may order
+    the slot reductions differently across program shapes."""
+    b = values_g * w
+    mom = jnp.stack([w.sum(-1), a.sum(-1), b.sum(-1), (a * a).sum(-1),
+                     (b * b).sum(-1), (a * b).sum(-1)], -1)
+    if qcfg.estimator == "spearman":
+        ra = _rank_rows(a, w, qcfg)
+        rb = _rank_rows(b, w, qcfg)
+        r = K.pearson_from_moments(_moments_from(ra, rb, w))
+    else:
+        r = K.pearson_from_moments(mom)
+    m = mom[..., 0]
+    c_lo = jnp.minimum(q_cmin[..., None], cmin_g)
+    c_hi = jnp.maximum(q_cmax[..., None], cmax_g)
+    lo, hi = K.hoeffding_from_moments(mom, c_lo, c_hi, alpha=qcfg.alpha)
+    return r, m, hi - lo
+
+
+def _topk_gathered(s, r, m, gids, k, M, axes):
+    """Local top-k over gathered survivors + cross-device combine (the same
+    O(devices × k) all-gather as `make_query_fn`); ``gids`` must already be
+    global index-space ids."""
+    kk = min(k, M)
+    top_s, top_i = jax.lax.top_k(s, kk)
+    top_g = jnp.take_along_axis(jnp.broadcast_to(gids, s.shape), top_i,
+                                axis=-1)
+    cat = s.ndim - 1
+    gather = lambda x: jax.lax.all_gather(x, axes, axis=cat, tiled=True)
+    all_s = gather(top_s)
+    all_g = gather(top_g)
+    all_r = gather(jnp.take_along_axis(r, top_i, axis=-1))
+    all_m = gather(jnp.take_along_axis(m, top_i, axis=-1))
+    fs, fi = jax.lax.top_k(all_s, k)
+    take = lambda x: jnp.take_along_axis(x, fi, axis=-1)
+    return fs, take(all_g), take(all_r), take(all_m)
+
+
+def make_pruned_query_fn(mesh, C_total: int, n: int, qcfg: QueryConfig,
+                         M: int, batch: Optional[int] = None,
+                         with_prep: bool = False):
+    """Build the jitted stage-2 program: score only ``M`` gather-compacted
+    survivor columns of a ``C_total``-column index (DESIGN.md §5).
+
+    Signature: ``fn(q_kh, q_val, q_mask, q_cmin, q_cmax, shard, surv,
+    valid[, bits, flat, prep])`` — ``surv [M]`` holds global survivor
+    column ids (tail padded; ``valid [M]`` false there); ``bits``/``flat``
+    are the probe tables emitted by ``make_stage1_fn(..., emit_tables=True)``
+    for the *same* query batch, so this program re-does no binary search and
+    no membership scatter except the per-row value table. Everything runs on
+    device against the resident index — the host ships only the id vector.
+    Each device gathers the survivor rows it owns (others stay masked →
+    −inf → dropped by the cross-device top-k combine) and returns the usual
+    (scores, gids, r, m) with **gids already in index space**.
+
+    ``M`` must come from the fixed ladder ``prune_base · 2^i`` (see
+    `prune_rung`) so the compile cache stays O(log C); ``M ≥ k`` required.
+    """
+    axes = tuple(mesh.axis_names)
+    ndev = int(mesh.devices.size)
+    assert C_total % ndev == 0
+    C_local = C_total // ndev
+    assert qcfg.k <= M, (qcfg.k, M)
+    assert not (with_prep and batch is None), "prep applies to the batched path"
+    k = qcfg.k
+    chunk, _, nb = _chunk_layout(C_local, qcfg.score_chunk)
+    T = chunk * n + 1
+
+    def local(q_kh, q_val, q_mask, q_cmin, q_cmax, shard: IndexShard,
+              surv, valid, *rest):
+        if batch is not None:
+            assert q_kh.shape[0] == batch, (q_kh.shape, batch)
+        else:
+            assert q_kh.ndim == 1, q_kh.shape
+        lin = jax.lax.axis_index(axes[0])
+        for ax in axes[1:]:
+            lin = lin * jax.lax.axis_size(ax) + jax.lax.axis_index(ax)
+        loc = surv.astype(jnp.int32) - lin.astype(jnp.int32) * C_local
+        ok = valid & (loc >= 0) & (loc < C_local)
+        locc = jnp.clip(loc, 0, C_local - 1)
+        okf = ok.astype(jnp.float32)
+        batched = q_kh.ndim == 2
+
+        if with_prep and batched:
+            bits, flat, prep = rest
+            B = q_kh.shape[0]
+            qv = (q_val * q_mask).reshape(-1)
+            vtab = jax.lax.map(lambda f: _block_vtab(f, qv, B, T), flat)
+            vtab = jnp.moveaxis(vtab, 0, 1).reshape(B, nb * T)   # [B, nb·T]
+            if _use_bits(B):
+                wtab = None
+                bits_flat = bits.reshape(-1)                     # [nb·T]
+            else:
+                wtab = jax.lax.map(lambda f: _block_hittab(f, B, T), flat)
+                wtab = jnp.moveaxis(wtab, 0, 1).reshape(B, nb * T)
+            sid_g = jnp.where(ok[:, None], prep.sid[locc], chunk * n)
+            blk = jnp.clip(locc // chunk, 0, nb - 1)
+            gidx = blk[:, None] * T + sid_g                      # [M, n]
+            values_g = shard.values[locc] * okf[:, None]
+            cmin_g = jnp.where(ok, shard.col_min[locc], 0.0)
+            cmax_g = jnp.where(ok, shard.col_max[locc], 0.0)
+
+            # stream survivors in score_chunk blocks — bounds the [B, ·, n]
+            # aligned-value tensors exactly like the full scan's streaming;
+            # the s4 normalisation runs once over all M below
+            cs = min(qcfg.score_chunk, M)
+            mpad = (-M) % cs
+            mb = (M + mpad) // cs
+            padb = lambda x: (jnp.pad(x, ((0, mpad),) + ((0, 0),) *
+                                      (x.ndim - 1)) if mpad else x)
+
+            def one(args):
+                gi, vg, cl, ch = args
+                a = jnp.take(vtab, gi.reshape(-1), axis=-1).reshape(B, cs, n)
+                if _use_bits(B):
+                    bg = jnp.take(bits_flat, gi.reshape(-1)).reshape(cs, n)
+                    w = _w_from_bits(bg, B)
+                else:
+                    w = jnp.take(wtab, gi.reshape(-1),
+                                 axis=-1).reshape(B, cs, n)
+                return _gathered_stats(a, w, vg[None], cl[None], ch[None],
+                                       q_cmin, q_cmax, qcfg)
+
+            if mb > 1:
+                blocks = (padb(gidx).reshape(mb, cs, n),
+                          padb(values_g).reshape(mb, cs, n),
+                          padb(cmin_g).reshape(mb, cs),
+                          padb(cmax_g).reshape(mb, cs))
+                r, m, ci_len = jax.lax.map(one, blocks)
+                mv = lambda x: jnp.moveaxis(x, 0, -2).reshape(
+                    (B, M + mpad))[..., :M]
+                r, m, ci_len = mv(r), mv(m), mv(ci_len)
+            else:
+                r, m, ci_len = one((gidx, values_g, cmin_g, cmax_g))
+            s = _scores_from_stats(r, m, ci_len, qcfg, axis_names=axes)
+        else:
+            # generic path (single-query / eq-matrix / Pallas backends):
+            # gather the survivor sub-shard and run the ordinary scorer on it
+            sub = IndexShard(
+                key_hash=jnp.where(ok[:, None], shard.key_hash[locc],
+                                   _PAD_KEY),
+                values=shard.values[locc] * okf[:, None],
+                mask=shard.mask[locc] * okf[:, None],
+                col_min=jnp.where(ok, shard.col_min[locc], 0.0),
+                col_max=jnp.where(ok, shard.col_max[locc], 0.0),
+                rows=shard.rows[locc] * okf)
+            s, r, m, _ = score_shard(q_kh, q_val, q_mask, q_cmin, q_cmax,
+                                     sub, qcfg, axis_names=axes, prep=None)
+
+        return _topk_gathered(s, r, m, surv.astype(jnp.int32), k, M, axes)
+
+    spec_sharded = P(axes)
+    shard_specs = IndexShard(
+        key_hash=spec_sharded, values=spec_sharded, mask=spec_sharded,
+        col_min=spec_sharded, col_max=spec_sharded, rows=spec_sharded)
+    in_specs = (P(), P(), P(), P(), P(), shard_specs, P(), P())
+    if with_prep:
+        in_specs += (P(axes), P(axes),
+                     PreppedShard(dk=spec_sharded, sid=spec_sharded))
+    fn = shard_map(local, mesh=mesh, in_specs=in_specs,
+                   out_specs=(P(), P(), P(), P()),
+                   check_rep=False)  # outputs are replicated by construction
+    return jax.jit(fn)
+
+
+def make_topm_query_fn(mesh, C_total: int, n: int, qcfg: QueryConfig,
+                       batch: int, with_prep: bool = False):
+    """Build the fused ``prune='topm'`` program: stage 1, per-row top-M
+    survivor selection, gathering and stage-2 scoring in **one dispatch**
+    (DESIGN.md §5) — no host round-trip, because the survivor count is the
+    static ``qcfg.prune_m`` per device.
+
+    Semantics: each query row keeps its own M best candidates *per device
+    shard* by exact intersection size (ties → lower id, `lax.top_k`), so
+    the final result is the top-k over the union of per-shard top-Ms. A
+    candidate outside a row's top-M is not scored for that row — with
+    ``prune_m ≥`` the row's eligible-candidate count this is every candidate
+    that could score at all, and results match the full scan; smaller
+    ``prune_m`` trades recall for latency (the s4 list-normalisation then
+    spans the row's survivor list, like a per-segment list in
+    `repro.engine.lifecycle`)."""
+    axes = tuple(mesh.axis_names)
+    ndev = int(mesh.devices.size)
+    assert C_total % ndev == 0
+    C_local = C_total // ndev
+    k = qcfg.k
+    M = max(min(int(qcfg.prune_m), C_local), min(k, C_local))
+    chunk, _, nb = _chunk_layout(C_local, qcfg.score_chunk)
+    T = chunk * n + 1
+    B = int(batch)
+
+    def local(q_kh, q_val, q_mask, q_cmin, q_cmax, shard: IndexShard, *rest):
+        assert q_kh.shape[0] == B, (q_kh.shape, B)
+        lin = jax.lax.axis_index(axes[0])
+        for ax in axes[1:]:
+            lin = lin * jax.lax.axis_size(ax) + jax.lax.axis_index(ax)
+        prep = rest[0] if rest else None
+
+        if with_prep:
+            hits, bits, flat = _shard_hits(q_kh, q_mask, shard, qcfg,
+                                           prep=prep, emit_tables=True)
+        else:
+            hits = _shard_hits(q_kh, q_mask, shard, qcfg, prep=prep)
+        hits = jnp.where(
+            hits >= hoeffding_eligibility_floor(qcfg.min_sample), hits, -1.0)
+        _, ids = jax.lax.top_k(hits, M)                           # [B, M]
+
+        if with_prep:
+            qv = (q_val * q_mask).reshape(-1)
+            vtab = jax.lax.map(lambda f: _block_vtab(f, qv, B, T), flat)
+            vtab = jnp.moveaxis(vtab, 0, 1).reshape(B, nb * T)
+            sid_g = prep.sid[ids]                                 # [B, M, n]
+            blk = jnp.clip(ids // chunk, 0, nb - 1)
+            gidx = (blk[..., None] * T + sid_g).reshape(B, M * n)
+            a = jnp.take_along_axis(vtab, gidx, axis=-1).reshape(B, M, n)
+            if _use_bits(B):
+                bg = jnp.take(bits.reshape(-1), gidx)             # [B, M·n]
+                w = jnp.stack([((bg[b] >> jnp.uint32(b)) & jnp.uint32(1))
+                               .astype(jnp.float32) for b in range(B)])
+                w = w.reshape(B, M, n)
+            else:
+                wtab = jax.lax.map(lambda f: _block_hittab(f, B, T), flat)
+                wtab = jnp.moveaxis(wtab, 0, 1).reshape(B, nb * T)
+                w = jnp.take_along_axis(wtab, gidx, axis=-1).reshape(B, M, n)
+            take_rows = lambda x: jnp.take(x, ids.reshape(-1),
+                                           axis=0).reshape((B, M) +
+                                                           x.shape[1:])
+            values_g = take_rows(shard.values)
+            cmin_g = take_rows(shard.col_min)
+            cmax_g = take_rows(shard.col_max)
+            r, m, ci_len = _gathered_stats(a, w, values_g, cmin_g, cmax_g,
+                                           q_cmin, q_cmax, qcfg)
+        else:
+            # per-row candidate sets: score each row's gathered sub-sketches
+            # with the single-query kernels (vmapped over the batch)
+            take_rows = lambda x: jnp.take(x, ids.reshape(-1),
+                                           axis=0).reshape((B, M) +
+                                                           x.shape[1:])
+            ckh = take_rows(shard.key_hash)
+            cvals = take_rows(shard.values)
+            cmask = take_rows(shard.mask)
+            mom, r = jax.vmap(
+                lambda qk1, qv1, qm1, a1, b1, c1: _score_block(
+                    qk1, qv1, qm1, a1, b1, c1, qcfg))(
+                        q_kh, q_val, q_mask, ckh, cvals, cmask)
+            m = mom[..., 0]
+            c_lo = jnp.minimum(q_cmin[:, None], take_rows(shard.col_min))
+            c_hi = jnp.maximum(q_cmax[:, None], take_rows(shard.col_max))
+            lo, hi = K.hoeffding_from_moments(mom, c_lo, c_hi,
+                                              alpha=qcfg.alpha)
+            ci_len = hi - lo
+        s = _scores_from_stats(r, m, ci_len, qcfg, axis_names=axes)
+        gids = ids.astype(jnp.int32) + lin.astype(jnp.int32) * C_local
+        return _topk_gathered(s, r, m, gids, k, M, axes)
+
+    spec_sharded = P(axes)
+    shard_specs = IndexShard(
+        key_hash=spec_sharded, values=spec_sharded, mask=spec_sharded,
+        col_min=spec_sharded, col_max=spec_sharded, rows=spec_sharded)
+    in_specs = (P(), P(), P(), P(), P(), shard_specs)
+    if with_prep:
+        in_specs += (PreppedShard(dk=spec_sharded, sid=spec_sharded),)
+    fn = shard_map(local, mesh=mesh, in_specs=in_specs,
+                   out_specs=(P(), P(), P(), P()),
+                   check_rep=False)
+    return jax.jit(fn)
+
+
+def select_survivors(hits, qcfg: QueryConfig) -> np.ndarray:
+    """Host-side stage-1 → stage-2 candidate selection (DESIGN.md §5).
+
+    ``hits`` is ``[C]`` or ``[B, C]`` (a batch prunes to the *union* of its
+    rows' survivor sets — a non-survivor stays ineligible for the rows that
+    did not pick it, so per-row results are unaffected). Returns the sorted
+    survivor ids:
+
+    * ``prune='safe'`` — every candidate with ``hits ≥ min_sample`` for any
+      row. Candidates below the floor score −inf in the full scan
+      (`score_shard` eligibility, the §4.3 Hoeffding floor via
+      `repro.core.bounds.hoeffding_eligibility_floor`), so this never drops
+      a true top-k column;
+    * ``prune='topm'`` — per row, the ``prune_m`` eligible candidates with
+      the most hits (deterministic: stable sort, lower id wins ties). The
+      host-side reference of the fused on-device selection in
+      `make_topm_query_fn`.
+    """
+    h = np.atleast_2d(np.asarray(hits))
+    eligible = h >= hoeffding_eligibility_floor(qcfg.min_sample)
+    if qcfg.prune == "safe":
+        return np.nonzero(eligible.any(0))[0].astype(np.int32)
+    if qcfg.prune == "topm":
+        m = max(int(qcfg.prune_m), 1)
+        keep = np.zeros(h.shape[1], bool)
+        for row, okr in zip(h, eligible):
+            ids = np.argsort(-row, kind="stable")[:m]
+            keep[ids[okr[ids]]] = True
+        return np.nonzero(keep)[0].astype(np.int32)
+    raise ValueError(f"unknown prune mode {qcfg.prune!r}: use 'safe' or 'topm'")
+
+
+def prune_rung(n_survivors: int, base: int, C_padded: int,
+               ndev: int) -> Optional[int]:
+    """Smallest device-aligned rung of the ladder ``base · 2^i`` holding the
+    survivor set, or ``None`` when the rung would not beat the full scan
+    (≥ the padded index width) — the caller then falls back to the already
+    compiled full program. The fixed ladder keeps pruned dispatch shapes —
+    and therefore compiled stage-2 programs — logarithmic in C
+    (DESIGN.md §4)."""
+    r = max(int(base), 1)
+    while r < max(n_survivors, 1):
+        r *= 2
+    r += (-r) % ndev
+    return None if r >= C_padded else r
+
+
 def make_query_fn(mesh, C_total: int, n: int, qcfg: QueryConfig,
                   batch: Optional[int] = None, with_prep: bool = False):
-    """Build the jitted distributed query program for a given index shape.
+    """Build the jitted distributed query program for a given index shape
+    (paper Defn. 3 evaluated as the DESIGN.md §3 sharded scan).
 
     ``batch=None`` keeps the legacy single-query signature (query arrays
     ``[n]``, results ``[k]``). ``batch=B`` compiles a program that takes
@@ -426,7 +1012,8 @@ def make_query_fn(mesh, C_total: int, n: int, qcfg: QueryConfig,
 
 
 def query(index_shard: IndexShard, query_sketch, mesh, qcfg: QueryConfig):
-    """Convenience one-shot query (compiles per index shape)."""
+    """Convenience one-shot query (paper Defn. 3; compiles per index
+    shape — serving layers cache programs instead, DESIGN.md §4)."""
     from repro.engine.index import query_arrays
     qa = query_arrays(query_sketch)
     fn = make_query_fn(mesh, index_shard.num_columns, index_shard.sketch_size, qcfg)

@@ -19,7 +19,19 @@ programs serve an arbitrary query stream efficiently:
   * **measured-cost planning** — `warmup()` times each bucket program, and
     `query_batch` covers a request batch with the cheapest mix of bucket
     dispatches under those measured costs instead of always padding to the
-    largest bucket.
+    largest bucket;
+  * **two-stage retrieval** (``qcfg.prune != 'off'``, DESIGN.md §5) —
+    ``safe`` dispatches run the cheap stage-1 containment scan
+    (`repro.engine.query.make_stage1_fn`), select survivors on the host,
+    then gather-compact and score them on device against the resident index
+    and the stage-1 probe tables (`make_pruned_query_fn`); ``topm`` fuses
+    selection and scoring into one dispatch (`make_topm_query_fn`).
+    Survivor shapes come from the fixed ``prune_base · 2^i`` ladder so
+    `warmup()` leaves nothing to compile;
+  * **joinability-only queries** — `search_joinable` serves the paper's
+    *first* stage (§2/Defn. 3: "tables joinable with T_Q on K_Q") as a
+    standalone workload: top-k by containment/Jaccard/join-size with
+    Hoeffding CIs, never touching the value planes.
 
 Padding rows are copies of the last real query; because the s4 normalisation
 is per query row, they cannot perturb real results, and they are sliced off
@@ -37,9 +49,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import containment as CT
 from repro.core.sketch import Agg, CorrelationSketch, build_sketch, merge
 from repro.engine import query as Q
-from repro.engine.index import IndexShard, SketchIndex, precompute_prep, query_arrays
+from repro.engine.index import (IndexShard, KeyMinima, SketchIndex,
+                                key_minima, precompute_prep, query_arrays)
 
 
 def build_query_sketches(keys_list: Sequence[np.ndarray],
@@ -101,7 +115,7 @@ def build_query_sketches(keys_list: Sequence[np.ndarray],
 
 
 class CompileCache:
-    """Shared program cache for the serving layers.
+    """Shared program cache for the serving layers (DESIGN.md §4).
 
     Maps a hashable program key → built (jitted) callable, counting misses:
     every miss is a program construction, i.e. an XLA compile at first
@@ -116,6 +130,7 @@ class CompileCache:
         self.misses = 0
 
     def get(self, key: tuple, build):
+        """Look up ``key``, building (and counting a miss) on first use."""
         fn = self._programs.get(key)
         if fn is None:
             self.misses += 1
@@ -149,8 +164,38 @@ def _plan_cover(nq: int, buckets: tuple, costs: tuple) -> tuple:
     return tuple(sorted(plan))   # dispatch order is cost-irrelevant; be stable
 
 
+@dataclasses.dataclass(frozen=True)
+class JoinabilityResult:
+    """Top-k joinability search results (host numpy, all ``[NQ, k]``).
+
+    ``ids`` index the server's column catalog (−1 for empty tail slots when
+    fewer than k candidates have any key overlap); ``score`` is the ranking
+    metric requested from `search_joinable`; the remaining fields are the
+    per-result `repro.core.containment.JoinabilityEstimates` statistics —
+    ``hits`` is the exact sketch-intersection size, ``containment`` carries
+    its §2.1 Hoeffding CI ``[ci_lo, ci_hi]``.
+    """
+    ids: np.ndarray          # i32 [NQ, k]
+    score: np.ndarray        # f32 [NQ, k] — the requested ranking metric
+    hits: np.ndarray         # f32 [NQ, k]
+    containment: np.ndarray  # f32 [NQ, k]
+    ci_lo: np.ndarray        # f32 [NQ, k]
+    ci_hi: np.ndarray        # f32 [NQ, k]
+    jaccard: np.ndarray      # f32 [NQ, k]
+    join_size: np.ndarray    # f32 [NQ, k]
+
+    _FIELDS = ("ids", "score", "hits", "containment", "ci_lo", "ci_hi",
+               "jaccard", "join_size")
+
+
+#: metrics `search_joinable` can rank by (fields of JoinabilityEstimates)
+JOIN_METRICS = ("containment", "jaccard", "join_size", "hits")
+
+
 class QueryServer:
-    """Bucketed multi-query serving over one resident sharded index.
+    """Bucketed multi-query serving over one resident sharded index
+    (the request-facing layer of DESIGN.md §4; two-stage retrieval and
+    joinability search per DESIGN.md §5).
 
     ``index``: optional `SketchIndex` host handle — when given, the
     candidate sort structure (`PreppedShard`) is looked up in / persisted to
@@ -189,6 +234,17 @@ class QueryServer:
         # structure; don't build/ship two index-sized arrays otherwise
         self._use_prep = (qcfg.kernels.backend == "xla"
                           and qcfg.intersect == "sortmerge")
+        if qcfg.prune not in ("off", "safe", "topm"):
+            raise ValueError(f"unknown prune mode {qcfg.prune!r}: "
+                             "use 'off', 'safe' or 'topm'")
+        #: two-stage retrieval switch (DESIGN.md §5): 'off' dispatches the
+        #: classic full scan, bit-identical to pre-prune serving
+        self._prune = qcfg.prune != "off"
+        #: per-candidate KMV key-minima layout (joinability estimates) and
+        #: the index-constant D̂_C estimates derived from it; computed
+        #: lazily from a host view of the shard
+        self._minima: Optional[KeyMinima] = None
+        self._minima_dc: Optional[np.ndarray] = None
         #: measured seconds per dispatch for each bucket (filled by warmup)
         self._bucket_cost: Dict[int, float] = {}
         #: per-dispatch telemetry: (bucket B, real queries, seconds) — a
@@ -229,23 +285,109 @@ class QueryServer:
         return prep
 
     def query_fn(self, B: int):
-        qcfg = self.qcfg_for(B)
+        """The bucket-B full-scan program (`make_query_fn`), cache-shared
+        across servers with equal shapes (prune policy normalised out of
+        the key — it does not change the program)."""
+        qcfg = self._scan_qcfg(B)
         key = ("query", B, self.C, self.n, qcfg)
         return self.cache.get(
             key, lambda: Q.make_query_fn(self.mesh, self.C, self.n, qcfg,
                                          batch=B, with_prep=self._use_prep))
 
-    def warmup(self, cost_reps: int = 2):
+    # -- two-stage programs (DESIGN.md §5) -----------------------------------
+    def _scan_qcfg(self, B: int) -> Q.QueryConfig:
+        """Bucket-B config normalised for program identity: the prune policy
+        fields don't change what a scan/scoring program computes, so they
+        are reset to defaults — servers with different prune settings share
+        compiled programs for equal shapes."""
+        d = Q.QueryConfig()
+        return dataclasses.replace(self.qcfg_for(B), prune="off",
+                                   prune_m=d.prune_m, prune_base=d.prune_base)
+
+    def stage1_fn(self, B: int, emit_tables: bool = False):
+        """Stage-1 containment-scan program for bucket B (hits ``[B, C]``);
+        with ``emit_tables`` it also returns the probe state the stage-2
+        program reuses (only meaningful on the prep-backed sortmerge path)."""
+        emit = emit_tables and self._use_prep
+        qcfg = self._scan_qcfg(B)
+        key = ("stage1", B, self.C, self.n, qcfg, emit)
+        return self.cache.get(
+            key, lambda: Q.make_stage1_fn(self.mesh, self.C, self.n, qcfg,
+                                          batch=B, with_prep=self._use_prep,
+                                          emit_tables=emit))
+
+    def stage2_fn(self, B: int, M: int):
+        """Pruned scoring program for ladder rung M: survivors are gathered
+        and scored on device against the resident shard + the stage-1 probe
+        tables (`repro.engine.query.make_pruned_query_fn`)."""
+        qcfg = self._scan_qcfg(B)
+        key = ("stage2", B, self.C, self.n, M, qcfg)
+        return self.cache.get(
+            key, lambda: Q.make_pruned_query_fn(self.mesh, self.C, self.n,
+                                                qcfg, M, batch=B,
+                                                with_prep=self._use_prep))
+
+    def topm_fn(self, B: int):
+        """Fused single-dispatch ``prune='topm'`` program (stage 1 + on-
+        device per-row top-M + scoring, `make_topm_query_fn`). Keyed on
+        ``prune_m`` — it is the program's static survivor width — but not
+        on the inert ``prune_base``."""
+        qcfg = dataclasses.replace(self._scan_qcfg(B),
+                                   prune_m=self.qcfg.prune_m)
+        key = ("topm", B, self.C, self.n, qcfg)
+        return self.cache.get(
+            key, lambda: Q.make_topm_query_fn(self.mesh, self.C, self.n,
+                                              qcfg, batch=B,
+                                              with_prep=self._use_prep))
+
+    def prune_rungs(self) -> List[int]:
+        """The fixed survivor-capacity ladder ``prune_base · 2^i``
+        (device-aligned, strictly below the full index width). Rungs under
+        ``k`` are skipped — `prune_rung` targets ``max(survivors, k)``, so a
+        dispatch can never pick one."""
+        ndev = int(self.mesh.devices.size)
+        rungs: List[int] = []
+        r = max(int(self.qcfg.prune_base), 1)
+        while True:
+            ra = r + (-r) % ndev
+            if ra >= self.C:
+                break
+            if r >= self.qcfg.k and (not rungs or rungs[-1] != ra):
+                rungs.append(ra)
+            r *= 2
+        return rungs
+
+    def _dummy_queries(self, B: int):
+        return (jnp.full((B, self.n), 0xFFFFFFFF, jnp.uint32),
+                jnp.zeros((B, self.n), jnp.float32),
+                jnp.zeros((B, self.n), jnp.float32),
+                jnp.zeros((B,), jnp.float32), jnp.zeros((B,), jnp.float32))
+
+    def warmup(self, cost_reps: int = 2, joinability: bool = False):
         """Compile every bucket program once (zero-row dummy queries) and
         measure its dispatch cost, so `plan_batches` can pick buckets from
-        observed per-query cost instead of assuming bigger is cheaper."""
+        observed per-query cost instead of assuming bigger is cheaper.
+
+        ``prune='safe'`` additionally compiles the emit-tables stage-1 scan
+        and every (bucket, rung) stage-2 program — the rung set is fixed a
+        priori, so mutations of the *survivor count* at serve time never
+        trigger a compile (``cache.misses`` stays flat after warmup, same
+        contract as the segment ladder of `repro.engine.lifecycle`).
+        ``prune='topm'`` compiles only its fused program (it never
+        dispatches the full scan). Pass ``joinability=True`` to also
+        pre-warm the `search_joinable` scan (otherwise the first joinability
+        request on an ``off``/``topm`` server pays that compile; ``safe``
+        servers reuse their warmed stage-1 program either way)."""
+        rungs = self.prune_rungs() if self.qcfg.prune == "safe" else []
         for B in self.buckets:
-            qa = (jnp.full((B, self.n), 0xFFFFFFFF, jnp.uint32),
-                  jnp.zeros((B, self.n), jnp.float32),
-                  jnp.zeros((B, self.n), jnp.float32),
-                  jnp.zeros((B,), jnp.float32), jnp.zeros((B,), jnp.float32))
-            fn = self.query_fn(B)
+            qa = self._dummy_queries(B)
             args = qa + (self.shard,) + self._prep_args(B)
+            if self.qcfg.prune == "topm":
+                # the fused program is the only one a topm dispatch runs —
+                # don't compile (or cost-time) the unused full scan
+                fn = self.topm_fn(B)
+            else:
+                fn = self.query_fn(B)
             jax.block_until_ready(fn(*args))  # compile
             ts = []
             for _ in range(max(cost_reps, 1)):
@@ -253,6 +395,37 @@ class QueryServer:
                 jax.block_until_ready(fn(*args))
                 ts.append(time.perf_counter() - t0)
             self._bucket_cost[B] = float(np.median(ts))
+            if joinability and self.qcfg.prune != "safe":
+                jax.block_until_ready(self.stage1_fn(B)(*args))
+            if self.qcfg.prune == "safe":
+                s1 = self.stage1_fn(B, emit_tables=True)
+                prep_args = self._prep_args(B)
+                tabs = jax.block_until_ready(s1(*args))
+                tab_args = tuple(tabs[1:]) if self._use_prep else ()
+                for M in rungs:
+                    idx = jnp.zeros((M,), jnp.int32)
+                    ok = jnp.zeros((M,), bool)
+                    jax.block_until_ready(self.stage2_fn(B, M)(
+                        *qa, self.shard, idx, ok, *tab_args, *prep_args))
+                # pruned-path cost at the base rung (stage 1 + stage 2)
+                # replaces the full-scan cost in the planner once pruning
+                # is on — that is what a dispatch actually costs
+                if rungs:
+                    M0 = rungs[0]
+                    idx0 = jnp.zeros((M0,), jnp.int32)
+                    ok0 = jnp.zeros((M0,), bool)
+                    s2 = self.stage2_fn(B, M0)
+                    ts = []
+                    for _ in range(max(cost_reps, 1)):
+                        t0 = time.perf_counter()
+                        out1 = jax.block_until_ready(s1(*args))
+                        np.asarray(out1[0] if self._use_prep else out1)
+                        tab_args = tuple(out1[1:]) if self._use_prep else ()
+                        jax.block_until_ready(
+                            s2(*qa, self.shard, idx0, ok0, *tab_args,
+                               *prep_args))
+                        ts.append(time.perf_counter() - t0)
+                    self._bucket_cost[B] = float(np.median(ts))
 
     def _prep_args(self, B: Optional[int] = None):
         prep = self.prep(B)
@@ -260,6 +433,7 @@ class QueryServer:
 
     # -- batching ------------------------------------------------------------
     def bucket_for(self, nq: int) -> int:
+        """Smallest bucket covering ``nq`` queries (largest if none do)."""
         for b in self.buckets:
             if b >= nq:
                 return b
@@ -277,7 +451,12 @@ class QueryServer:
         return list(_plan_cover(nq, self.buckets, costs))
 
     def _dispatch(self, qa, nq: int, B: Optional[int] = None):
-        """Run one ≤bucket slice: pad to its bucket, query, slice back."""
+        """Run one ≤bucket slice: pad to its bucket, query, slice back.
+
+        With pruning enabled the slice goes through the two-stage plan
+        (stage-1 scan → host survivor selection → device gather-compaction →
+        stage-2 scoring on the rung-shaped shard); telemetry counts the
+        whole plan as one dispatch."""
         B = self.bucket_for(nq) if B is None else B
         pad = B - nq
         if pad:
@@ -286,14 +465,60 @@ class QueryServer:
                 for a in qa)
         prep_args = self._prep_args(B)
         t0 = time.perf_counter()
-        out = self.query_fn(B)(*qa, self.shard, *prep_args)
-        jax.block_until_ready(out)
+        if self._prune:
+            out = self._dispatch_pruned(qa, nq, B, prep_args)
+        else:
+            out = self.query_fn(B)(*qa, self.shard, *prep_args)
+            jax.block_until_ready(out)
         dt = time.perf_counter() - t0
         self.dispatch_log.append((B, nq, dt))
         self._total_queries += nq
         self._total_dispatches += 1
         self._total_s += dt
         return tuple(o[:nq] for o in out)
+
+    def _dispatch_pruned(self, qa, nq: int, B: int, prep_args):
+        """One two-stage dispatch (DESIGN.md §5). ``topm``: a single fused
+        program (on-device survivor selection). ``safe``: stage-1 hits →
+        host survivor selection → ladder rung → stage-2 scoring against the
+        stage-1 probe tables; falls back to the (already compiled) full-scan
+        program when the survivor set would not fit a rung below the full
+        index width. Either way, −inf rows get id −1."""
+        if self.qcfg.prune == "topm":
+            out = self.topm_fn(B)(*qa, self.shard, *prep_args)
+            s, g, r, m = (np.asarray(o) for o in jax.block_until_ready(out))
+            g = np.where(np.isfinite(s), g, -1).astype(np.int32)
+            return s, g, r, m
+        out1 = self.stage1_fn(B, emit_tables=True)(*qa, self.shard,
+                                                   *prep_args)
+        out1 = jax.block_until_ready(out1)
+        hits, tab_args = ((out1[0], tuple(out1[1:])) if self._use_prep
+                          else (out1, ()))
+        # selection sees only the real rows: bucket-padding copies must not
+        # inflate the survivor set
+        hits_np = np.asarray(hits)[:nq]
+        surv = Q.select_survivors(hits_np, self.qcfg)
+        ndev = int(self.mesh.devices.size)
+        rung = Q.prune_rung(max(len(surv), self.qcfg.k),
+                            self.qcfg.prune_base, self.C, ndev)
+        if rung is None:
+            out = self.query_fn(B)(*qa, self.shard, *prep_args)
+            s, g, r, m = (np.asarray(o)
+                          for o in jax.block_until_ready(out))
+            # same id convention as the pruned dispatch below: −inf → −1
+            g = np.where(np.isfinite(s), g, -1).astype(np.int32)
+            return s, g, r, m
+        idx = np.zeros((rung,), np.int32)
+        idx[:len(surv)] = surv
+        valid = np.arange(rung) < len(surv)
+        out = self.stage2_fn(B, rung)(*qa, self.shard, jnp.asarray(idx),
+                                      jnp.asarray(valid), *tab_args,
+                                      *prep_args)
+        s, g, r, m = (np.asarray(o) for o in jax.block_until_ready(out))
+        # stage-2 gids are already index-space; −inf rows (pruned / empty)
+        # get id −1 so they can never alias a real column
+        g = np.where(np.isfinite(s), g, -1).astype(np.int32)
+        return s, g, r, m
 
     def query_batch(self, sketches: CorrelationSketch):
         """Serve a batch of query sketches (leading [NQ] axis) → [NQ, k] results.
@@ -321,6 +546,98 @@ class QueryServer:
         sks = build_query_sketches(keys_list, values_list, n=self.n,
                                    chunk=chunk)
         return self.query_batch(sks)
+
+    # -- joinability search (stage 1 as a first-class workload) --------------
+    def key_minima(self) -> KeyMinima:
+        """Lazily computed per-candidate KMV key-minima layout of the
+        resident shard (`repro.engine.index.key_minima`), plus the
+        index-constant D̂_C estimates (cached — not recomputed per query)."""
+        if self._minima is None:
+            self._minima = key_minima(self.shard)
+            self._minima_dc = CT.distinct_from_minima(
+                self._minima.count, self._minima.tau, self.n)
+        return self._minima
+
+    def stage1_hits(self, sketches: CorrelationSketch) -> np.ndarray:
+        """Exact per-candidate sketch-intersection sizes ``[NQ, C]`` for a
+        batch of query sketches — the raw stage-1 scan, bucketed like
+        `query_batch` but with no scoring stage. On a ``prune='safe'``
+        server the warmed emit-tables program is reused (its extra outputs
+        are dropped) instead of compiling a lean twin."""
+        qa = query_arrays(sketches)
+        nq = int(qa[0].shape[0])
+        if nq == 0:
+            return np.zeros((0, self.C), np.float32)
+        emit = self.qcfg.prune == "safe"
+        rows = []
+        s = 0
+        while s < nq:
+            B = self.bucket_for(min(nq - s, self.buckets[-1]))
+            e = min(s + B, nq)
+            part = tuple(a[s:e] for a in qa)
+            if e - s < B:
+                part = tuple(jnp.concatenate(
+                    [a, jnp.broadcast_to(a[-1:], (B - (e - s),) + a.shape[1:])])
+                    for a in part)
+            out = self.stage1_fn(B, emit_tables=emit)(
+                *part, self.shard, *self._prep_args(B))
+            hits = out[0] if isinstance(out, tuple) else out
+            rows.append(np.asarray(jax.block_until_ready(hits))[:e - s])
+            s = e
+        return np.concatenate(rows, axis=0)
+
+    def search_joinable_sketches(self, sketches: CorrelationSketch, *,
+                                 k: Optional[int] = None,
+                                 metric: str = "containment"
+                                 ) -> JoinabilityResult:
+        """Top-k *joinability* search over pre-built query sketches.
+
+        The pure stage-1 workload (paper §2/Defn. 3 first clause: "tables
+        joinable with T_Q on K_Q"): per-candidate hit counts from the
+        containment scan, turned into `repro.core.containment` estimates
+        with §2.1 Hoeffding CIs, ranked by ``metric`` (one of
+        ``JOIN_METRICS``; ties → lower column id). Candidates with zero key
+        overlap never appear; short rows pad with id −1.
+        """
+        if metric not in JOIN_METRICS:
+            raise ValueError(f"unknown joinability metric {metric!r}: "
+                             f"use one of {JOIN_METRICS}")
+        k = int(k or self.qcfg.k)
+        hits = self.stage1_hits(sketches)
+        nq = hits.shape[0]
+        minima = self.key_minima()
+        q_kh = np.asarray(sketches.key_hash)
+        q_mask = np.asarray(sketches.mask)
+        out = {f: np.zeros((nq, k), np.float32)
+               for f in JoinabilityResult._FIELDS}
+        out["ids"] = np.full((nq, k), -1, np.int32)
+        for i in range(nq):
+            est = CT.joinability_estimates(
+                hits[i], CT.query_minima(q_kh[i], q_mask[i]),
+                minima.count, minima.tau, self.n,
+                cand_distinct=self._minima_dc, alpha=self.qcfg.alpha)
+            score = np.asarray(getattr(est, metric), np.float32)
+            ok = est.hits > 0
+            order = np.lexsort((np.arange(score.shape[0]),
+                                np.where(ok, -score, np.inf)))[:k]
+            order = order[ok[order]]
+            kk = order.shape[0]
+            out["ids"][i, :kk] = order
+            out["score"][i, :kk] = score[order]
+            for f in ("hits", "containment", "ci_lo", "ci_hi", "jaccard",
+                      "join_size"):
+                out[f][i, :kk] = np.asarray(getattr(est, f), np.float32)[order]
+        return JoinabilityResult(**out)
+
+    def search_joinable(self, keys_list, *, k: Optional[int] = None,
+                        metric: str = "containment", chunk: int = 8192
+                        ) -> JoinabilityResult:
+        """Top-k joinable columns for raw query *key* columns (no values
+        needed — joinability is a property of the key sets alone). Builds
+        value-less query sketches and runs `search_joinable_sketches`."""
+        values = [np.zeros((len(kz),), np.float32) for kz in keys_list]
+        sks = build_query_sketches(keys_list, values, n=self.n, chunk=chunk)
+        return self.search_joinable_sketches(sks, k=k, metric=metric)
 
     # -- telemetry -----------------------------------------------------------
     def throughput(self) -> dict:

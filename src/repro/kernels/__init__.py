@@ -5,8 +5,9 @@ BlockSpec implementation, a jit'd wrapper with backend dispatch in
 ``ops.py``, and a pure-jnp oracle in ``ref.py`` used for interpret-mode
 allclose validation and as the CPU/XLA fallback.
 
-Kernels: sketch_join (query hot loop), rank_transform (Spearman/RIN),
-hash_build (fused double hashing), flash_attention (LM substrate).
+Kernels: sketch_join (query hot loop), containment (stage-1 joinability
+pre-filter, DESIGN.md §5), rank_transform (Spearman/RIN), hash_build (fused
+double hashing), flash_attention (LM substrate).
 """
 from repro.kernels import ops, ref  # noqa: F401
 from repro.kernels.ops import KernelConfig  # noqa: F401

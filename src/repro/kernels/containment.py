@@ -1,0 +1,81 @@
+"""Pallas TPU kernel: batched containment (key-intersection) counting.
+
+Stage 1 of the two-stage retrieval engine (DESIGN.md §5): intersect one
+query sketch's key minima with a large batch of candidate sketches and
+count the matches per candidate — nothing else. Unlike the fused
+`sketch_join` kernel this never reads the value planes and accumulates a
+single scalar per candidate, so its HBM traffic is one u32 + one f32 plane
+instead of three and its VPU work is the equality indicator plus one
+reduction (≈⅙ of the moment kernel). That is what makes a
+joinability-first pre-filter cheaper than scoring (§Perf, DESIGN.md §5):
+most candidates are dismissed for the price of a key scan.
+
+TPU adaptation mirrors DESIGN.md §3: the block equality-indicator tensor
+``match[c, i, j] = (q_kh[i] == c_kh[c, j])`` is materialised in VMEM and
+reduced on the VPU — branch-free, perfectly regular. Keys are unique within
+a sketch, so summing indicators counts the exact set intersection (the
+sketch-join sample size ``m``).
+
+Grid: ``(C // block_c, n // block_n)`` — candidates outer, candidate-slot
+blocks inner, accumulating into the same [block_c] output block (the same
+reduction-grid revisiting pattern as `sketch_join.py`).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(q_kh_ref, q_mask_ref, c_kh_ref, c_mask_ref, hits_ref):
+    jblk = pl.program_id(1)
+
+    qk = q_kh_ref[0, :]          # [nq] uint32
+    qm = q_mask_ref[0, :]        # [nq] f32
+    ck = c_kh_ref[...]           # [Bc, Bn] uint32
+    cm = c_mask_ref[...]         # [Bc, Bn] f32
+
+    eq = (qk[None, :, None] == ck[:, None, :]).astype(jnp.float32)
+    eq = eq * qm[None, :, None] * cm[:, None, :]
+    blk = jnp.sum(eq, axis=(-2, -1))                    # [Bc]
+
+    @pl.when(jblk == 0)
+    def _init():
+        hits_ref[...] = jnp.zeros(hits_ref.shape, hits_ref.dtype)
+
+    # distinct keys per sketch ⇒ each (query key, candidate) pair matches in
+    # at most one j-block — plain accumulation is exact
+    hits_ref[...] = hits_ref[...] + blk[:, None]
+
+
+@functools.partial(jax.jit, static_argnames=("block_c", "block_n", "interpret"))
+def containment_hits(q_kh, q_mask, c_kh, c_mask, *, block_c: int = 8,
+                     block_n: int = 0, interpret: bool = False):
+    """See :func:`repro.kernels.ref.containment_hits` for semantics."""
+    C, n = c_kh.shape
+    nq = q_kh.shape[0]
+    if block_n <= 0:
+        block_n = n
+    # VMEM budget: the equality tensor (block_c × nq × block_n × 4B) is the
+    # biggest resident — shrink block_c to stay ≤ ~4 MiB, like sketch_join
+    while block_c > 1 and block_c * nq * block_n * 4 > 4 * 1024 * 1024:
+        block_c //= 2
+    assert C % block_c == 0 and n % block_n == 0, (C, n, block_c, block_n)
+
+    grid = (C // block_c, n // block_n)
+    hits = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, nq), lambda c, j: (0, 0)),
+            pl.BlockSpec((1, nq), lambda c, j: (0, 0)),
+            pl.BlockSpec((block_c, block_n), lambda c, j: (c, j)),
+            pl.BlockSpec((block_c, block_n), lambda c, j: (c, j)),
+        ],
+        out_specs=pl.BlockSpec((block_c, 1), lambda c, j: (c, 0)),
+        out_shape=jax.ShapeDtypeStruct((C, 1), jnp.float32),
+        interpret=interpret,
+    )(q_kh.reshape(1, nq), q_mask.reshape(1, nq), c_kh, c_mask)
+    return hits[:, 0]

@@ -14,6 +14,7 @@ from typing import Literal
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import containment as _ct
 from repro.kernels import flash_attention as _fa
 from repro.kernels import hash_build as _hb
 from repro.kernels import rank_transform as _rt
@@ -64,6 +65,31 @@ def sketch_join_moments_batched(q_kh, q_val, q_mask, c_kh, c_val, c_mask,
                 c_mask.astype(jnp.float32), interpret=cfg.interpret))(
                     q_kh, q_val, q_mask)
     return _ref.sketch_join_moments_batched(q_kh, q_val, q_mask, c_kh, c_val, c_mask)
+
+
+def containment_hits(q_kh, q_mask, c_kh, c_mask,
+                     cfg: KernelConfig = KernelConfig()):
+    """Stage-1 joinability intersect (DESIGN.md §5): exact per-candidate
+    key-intersection counts, no value traffic. Pallas on TPU, eq-matrix
+    reference on XLA (the engine's sortmerge stage-1 path bypasses this
+    wrapper — see `repro.engine.query.make_stage1_fn`)."""
+    if cfg.use_pallas:
+        return _ct.containment_hits(q_kh, q_mask.astype(jnp.float32),
+                                    c_kh, c_mask.astype(jnp.float32),
+                                    interpret=cfg.interpret)
+    return _ref.containment_hits(q_kh, q_mask, c_kh, c_mask)
+
+
+def containment_hits_batched(q_kh, q_mask, c_kh, c_mask,
+                             cfg: KernelConfig = KernelConfig()):
+    """Batched stage-1 intersect: q_* carry a leading [B] axis → hits [B, C].
+    Pallas batches through its vmap rule (one grid launch per row)."""
+    if cfg.use_pallas:
+        return jax.vmap(
+            lambda a, b: _ct.containment_hits(
+                a, b.astype(jnp.float32), c_kh, c_mask.astype(jnp.float32),
+                interpret=cfg.interpret))(q_kh, q_mask)
+    return _ref.containment_hits_batched(q_kh, q_mask, c_kh, c_mask)
 
 
 def rank_transform(x, mask, cfg: KernelConfig = KernelConfig()):

@@ -62,6 +62,35 @@ def sketch_join_moments_batched(q_kh, q_val, q_mask, c_kh, c_val, c_mask):
             q_kh, q_val, q_mask)
 
 
+def containment_hits(q_kh, q_mask, c_kh, c_mask):
+    """Stage-1 joinability intersect (DESIGN.md §5): per-candidate *exact*
+    key-set intersection counts between stored minima, no values touched.
+
+      hits: f32[C] = |{(i, j) : q_kh[i] == c_kh[c, j], both slots valid}|
+
+    Because keys are distinct within a sketch, the count equals the
+    intersection size of the two stored key sets — which is exactly the
+    sketch-join sample size ``m`` the scoring path computes (the safe-prune
+    contract of `repro.engine.query`). Same equality-indicator formulation
+    as :func:`sketch_join_moments`, reduced over both slot axes.
+    """
+    q_mask = q_mask.astype(jnp.float32)
+    c_mask = c_mask.astype(jnp.float32)
+    eq = (q_kh[None, :, None] == c_kh[:, None, :]).astype(jnp.float32)
+    eq = eq * q_mask[None, :, None] * c_mask[:, None, :]
+    return jnp.sum(eq, axis=(-2, -1))
+
+
+def containment_hits_batched(q_kh, q_mask, c_kh, c_mask):
+    """Leading-query-axis variant: q_* are [B, nq] → hits f32[B, C].
+
+    vmap of the single-query oracle, so each batch row is bit-identical to a
+    standalone call (the ground truth for the batched stage-1 engine path).
+    """
+    return jax.vmap(lambda a, b: containment_hits(a, b, c_kh, c_mask))(
+        q_kh, q_mask)
+
+
 def pearson_from_moments(moments):
     """Pearson r per candidate from the 6 accumulated moments."""
     m, sa, sb, saa, sbb, sab = [moments[..., i] for i in range(6)]

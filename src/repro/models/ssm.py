@@ -5,7 +5,7 @@ chunks carries the recurrent state, and work inside a chunk is parallel
 (associative scan for Mamba, decay-matrix linear attention for RWKV6).
 This keeps training sub-quadratic in sequence length with bounded
 activation memory — the property that makes the ``long_500k`` shapes
-feasible for the SSM/hybrid architectures (DESIGN.md §5).
+feasible for the SSM/hybrid architectures.
 
 Single-token ``*_step`` variants serve decode with O(1) state.
 """

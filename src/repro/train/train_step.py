@@ -1,6 +1,6 @@
 """The pjit training step: microbatched, mixed-precision, fully sharded.
 
-Layout (DESIGN.md §4):
+Layout:
   * params/optimizer state fp32, sharded by the logical rules (FSDP over
     ("pod","data"), TP over "model", EP over "model");
   * forward/backward in cfg.dtype (bf16) via a cast at step entry;

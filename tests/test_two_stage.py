@@ -1,0 +1,453 @@
+"""Two-stage retrieval (DESIGN.md §5): containment estimators, stage-1
+kernels, and the pruning correctness contract.
+
+The load-bearing assertions:
+
+  * stage-1 hit counts are *exact* — equal to the sketch-join sample size
+    ``m`` for every candidate (the premise of safe pruning);
+  * ``prune='off'`` is bit-identical to the PR 1 batched engine;
+  * ``prune='safe'`` top-k ⊇ full-scan top-k with bit-identical scores, on
+    randomised corpora (property test);
+  * pruned serving compiles nothing after ``warmup()`` even as survivor
+    counts vary (the capacity-ladder discipline);
+  * ``search_joinable`` ranks the truly joinable tables first and its
+    Hoeffding CI covers the true containment at ~the nominal rate.
+"""
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from conftest import given, settings, st
+
+from repro.core import build_sketch
+from repro.core import containment as CT
+from repro.core.bounds import containment_ci, hoeffding_eligibility_floor
+from repro.core.join import sketch_join
+from repro.data.pipeline import Table
+from repro.engine import index as IX
+from repro.engine import query as Q
+from repro.engine import serve as SV
+from repro.kernels import ref
+from repro.kernels.ops import KernelConfig
+from repro.kernels import ops as K
+
+N_SKETCH = 32
+#: one compile cache for the whole module: every server shares programs, so
+#: the randomised property tests pay each (shape, qcfg) compile exactly once
+CACHE = SV.CompileCache()
+
+
+def _corpus(rng, n_tables=12, key_space=2000, rows=800):
+    """Tables over a smallish key universe: real overlap structure, plus a
+    few tables over a disjoint universe (never joinable)."""
+    tables = []
+    for i in range(n_tables):
+        m = int(rng.integers(64, rows))
+        if i % 4 == 3:  # disjoint universe → zero overlap with queries
+            keys = rng.choice(key_space, size=m, replace=False).astype(
+                np.uint32) + np.uint32(1 << 20)
+        else:
+            keys = rng.choice(key_space, size=m, replace=False).astype(
+                np.uint32)
+        tables.append(Table(keys=keys,
+                            values=rng.standard_normal(m).astype(np.float32),
+                            name=f"t{i}"))
+    return tables
+
+
+def _queries(rng, nq=4, key_space=2000, rows=700):
+    out = []
+    for _ in range(nq):
+        m = int(rng.integers(64, rows))
+        keys = rng.choice(key_space, size=m, replace=False).astype(np.uint32)
+        out.append((keys, rng.standard_normal(m).astype(np.float32)))
+    return out
+
+
+def _setup(rng, qcfg, n_tables=12, buckets=(4,)):
+    tables = _corpus(rng, n_tables=n_tables)
+    idx = IX.build_index(tables, n=N_SKETCH, pad_to=n_tables)
+    mesh = jax.make_mesh((1,), ("shard",))
+    shard = IX.shard_for_mesh(idx, mesh)
+    srv = SV.QueryServer(mesh, shard, qcfg, buckets=buckets, index=idx,
+                         cache=CACHE)
+    return mesh, shard, idx, srv
+
+
+# ---------------------------------------------------------------------------
+# stage-1 exactness: hits == sketch-join m
+# ---------------------------------------------------------------------------
+
+def test_containment_hits_equal_sketch_join_m(rng):
+    qs, cs = [], []
+    for _ in range(8):
+        mq, mc = int(rng.integers(20, 400)), int(rng.integers(20, 400))
+        ks = rng.choice(1000, size=mq, replace=False).astype(np.uint32)
+        kc = rng.choice(1000, size=mc, replace=False).astype(np.uint32)
+        qs.append(build_sketch(jnp.asarray(ks),
+                               jnp.asarray(rng.standard_normal(mq),
+                                           dtype=jnp.float32), n=N_SKETCH))
+        cs.append(build_sketch(jnp.asarray(kc),
+                               jnp.asarray(rng.standard_normal(mc),
+                                           dtype=jnp.float32), n=N_SKETCH))
+    c_kh = jnp.stack([c.key_hash for c in cs])
+    c_mask = jnp.stack([c.mask for c in cs]).astype(jnp.float32)
+    for q in qs:
+        hits = ref.containment_hits(q.key_hash, q.mask.astype(jnp.float32),
+                                    c_kh, c_mask)
+        for ci_, c in enumerate(cs):
+            sj = sketch_join(q, c)
+            assert int(hits[ci_]) == int(sj.m), (ci_, int(hits[ci_]),
+                                                 int(sj.m))
+
+
+def test_containment_kernel_interpret_matches_oracle(rng):
+    C, n, nq = 8, 64, 64
+    c_kh = jnp.asarray(rng.integers(0, 300, size=(C, n)).astype(np.uint32))
+    c_mask = jnp.asarray((rng.random((C, n)) < 0.8).astype(np.float32))
+    q_kh = jnp.asarray(rng.integers(0, 300, size=(nq,)).astype(np.uint32))
+    q_mask = jnp.asarray((rng.random(nq) < 0.8).astype(np.float32))
+    want = ref.containment_hits(q_kh, q_mask, c_kh, c_mask)
+    got = K.containment_hits(q_kh, q_mask, c_kh, c_mask,
+                             KernelConfig(backend="interpret"))
+    np.testing.assert_array_equal(np.asarray(want), np.asarray(got))
+    B = 3
+    q_khb = jnp.stack([q_kh] * B)
+    q_maskb = jnp.stack([q_mask] * B)
+    wantb = ref.containment_hits_batched(q_khb, q_maskb, c_kh, c_mask)
+    gotb = K.containment_hits_batched(q_khb, q_maskb, c_kh, c_mask,
+                                      KernelConfig(backend="interpret"))
+    np.testing.assert_array_equal(np.asarray(wantb), np.asarray(gotb))
+
+
+def test_stage1_fn_matches_oracle_and_single(rng):
+    qcfg = Q.QueryConfig(k=4, score_chunk=5)   # non-divisible → padded scan
+    mesh, shard, idx, srv = _setup(rng, qcfg)
+    queries = _queries(rng, nq=4)
+    sks = SV.build_query_sketches([k for k, _ in queries],
+                                  [v for _, v in queries], n=N_SKETCH)
+    hits = srv.stage1_hits(sks)
+    want = np.asarray(ref.containment_hits_batched(
+        sks.key_hash, sks.mask.astype(jnp.float32),
+        shard.key_hash, shard.mask))
+    np.testing.assert_array_equal(hits, want)
+    # the single-query program row-matches the batched one
+    fn1 = Q.make_stage1_fn(mesh, shard.num_columns, N_SKETCH, qcfg)
+    for i in range(hits.shape[0]):
+        qa = IX.query_arrays(jax.tree.map(lambda a, i=i: a[i], sks))
+        np.testing.assert_array_equal(np.asarray(fn1(*qa, shard)), hits[i])
+
+
+# ---------------------------------------------------------------------------
+# estimators
+# ---------------------------------------------------------------------------
+
+def test_joinability_estimates_exact_when_unsaturated(rng):
+    """Both sketches unsaturated ⇒ they hold their full key sets ⇒ hits,
+    containment and join size are exact counts, CI pinned."""
+    n = 64
+    kq = rng.choice(500, size=40, replace=False).astype(np.uint32)
+    kc = rng.choice(500, size=50, replace=False).astype(np.uint32)
+    q = build_sketch(jnp.asarray(kq), jnp.zeros(40), n=n)
+    c = build_sketch(jnp.asarray(kc), jnp.zeros(50), n=n)
+    hits = ref.containment_hits(q.key_hash, q.mask.astype(jnp.float32),
+                                c.key_hash[None], c.mask[None].astype(
+                                    jnp.float32))
+    minima_count = np.asarray([int(c.n_valid())])
+    fib = CT.fib_u32_np(np.asarray(c.key_hash)[np.asarray(c.mask)])
+    minima_tau = np.asarray([fib.max()], np.uint32)
+    est = CT.joinability_estimates(
+        np.asarray(hits), CT.query_minima(np.asarray(q.key_hash),
+                                          np.asarray(q.mask)),
+        minima_count, minima_tau, n)
+    true_inter = len(set(kq.tolist()) & set(kc.tolist()))
+    assert int(est.hits[0]) == true_inter
+    np.testing.assert_allclose(est.containment[0], true_inter / len(kq),
+                               rtol=1e-6)
+    np.testing.assert_allclose(est.join_size[0], true_inter, rtol=1e-5)
+    np.testing.assert_allclose(est.ci_lo[0], est.containment[0], rtol=1e-6)
+    np.testing.assert_allclose(est.ci_hi[0], est.containment[0], rtol=1e-6)
+
+
+def test_containment_ci_covers_truth(rng):
+    """Saturated sketches: the Hoeffding CI must cover the true containment
+    at ≳ the nominal 1−α rate (it is conservative in practice)."""
+    n = 32
+    inside = total = 0
+    for _ in range(40):
+        universe = int(rng.integers(400, 4000))
+        mq = int(rng.integers(200, universe))
+        mc = int(rng.integers(200, universe))
+        kq = rng.choice(universe, size=mq, replace=False).astype(np.uint32)
+        kc = rng.choice(universe, size=mc, replace=False).astype(np.uint32)
+        q = build_sketch(jnp.asarray(kq), jnp.zeros(mq), n=n)
+        c = build_sketch(jnp.asarray(kc), jnp.zeros(mc), n=n)
+        hits = ref.containment_hits(q.key_hash, q.mask.astype(jnp.float32),
+                                    c.key_hash[None],
+                                    c.mask[None].astype(jnp.float32))
+        fib = CT.fib_u32_np(np.asarray(c.key_hash)[np.asarray(c.mask)])
+        est = CT.joinability_estimates(
+            np.asarray(hits),
+            CT.query_minima(np.asarray(q.key_hash), np.asarray(q.mask)),
+            np.asarray([int(c.n_valid())]),
+            np.asarray([fib.max()], np.uint32), n, alpha=0.05)
+        truth = len(set(kq.tolist()) & set(kc.tolist())) / mq
+        total += 1
+        inside += int(est.ci_lo[0] - 1e-6 <= truth <= est.ci_hi[0] + 1e-6)
+    assert inside / total >= 0.9, (inside, total)
+
+
+def test_containment_ci_function(rng):
+    lo, hi = containment_ci(np.float32(0.5), np.asarray([0, 8, 1 << 14]))
+    lo, hi = np.asarray(lo), np.asarray(hi)
+    assert lo[0] == 0.0 and hi[0] == 1.0          # no probes → vacuous
+    assert hi[1] - lo[1] > hi[2] - lo[2]          # more probes → tighter
+    # the floor both scoring and safe pruning route through (one definition)
+    assert hoeffding_eligibility_floor(3) == 3
+    assert hoeffding_eligibility_floor(20) == 20  # the paper's Fig. 3d value
+
+
+def test_key_minima_layout(rng):
+    tables = _corpus(rng, n_tables=6)
+    idx = IX.build_index(tables, n=N_SKETCH)
+    km = IX.key_minima(idx.shard)
+    mask = np.asarray(idx.shard.mask) > 0
+    kh = np.asarray(idx.shard.key_hash)
+    np.testing.assert_array_equal(km.count, mask.sum(-1))
+    for c in range(kh.shape[0]):
+        fib = CT.fib_u32_np(kh[c][mask[c]])
+        assert km.tau[c] == (fib.max() if fib.size else 0)
+
+
+# ---------------------------------------------------------------------------
+# pruning correctness contract
+# ---------------------------------------------------------------------------
+
+def _superset_with_equal_scores(full, pruned, tol=2e-5):
+    """Every finite full-scan top-k column must appear in the pruned top-k
+    with the same score. Scores are mathematically identical but may differ
+    by a few ulps (XLA reduction order varies with program shape), so score
+    equality is asserted to ``tol``; a column is allowed to be missing only
+    in the tie-boundary case — its score within ``tol`` of the pruned k-th
+    (then which of the tied columns holds rank k is rounding luck)."""
+    s0, g0 = np.asarray(full[0]), np.asarray(full[1])
+    s1, g1 = np.asarray(pruned[0]), np.asarray(pruned[1])
+    for i in range(s0.shape[0]):
+        fin = np.isfinite(s0[i])
+        kth = np.min(s1[i][np.isfinite(s1[i])], initial=np.inf)
+        for gid, sc in zip(g0[i][fin], s0[i][fin]):
+            j = np.nonzero(g1[i] == gid)[0]
+            if j.size == 0:
+                assert abs(sc - kth) <= tol * max(1.0, abs(sc)), (
+                    f"query {i}: column {gid} (score {sc}) dropped, "
+                    f"not a tie with the pruned k-th ({kth})")
+                continue
+            np.testing.assert_allclose(s1[i][j[0]], sc, rtol=tol, atol=tol)
+
+
+def test_prune_off_bit_identical_to_batched_engine(rng):
+    """prune='off' serving must be byte-for-byte the PR 1 batched engine."""
+    qcfg = Q.QueryConfig(k=5, scorer="s4")
+    mesh, shard, idx, srv = _setup(rng, qcfg)
+    queries = _queries(rng, nq=4)
+    sks = SV.build_query_sketches([k for k, _ in queries],
+                                  [v for _, v in queries], n=N_SKETCH)
+    out = srv.query_batch(sks)
+    prep = IX.precompute_prep(idx, mesh, shard, qcfg)
+    bfn = Q.make_query_fn(mesh, shard.num_columns, N_SKETCH, qcfg, batch=4,
+                          with_prep=True)
+    want = bfn(*IX.query_arrays(sks), shard, prep)
+    for got, ref_ in zip(out, want):
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(ref_))
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**28), scorer=st.sampled_from(["s1", "s2", "s4"]),
+       estimator=st.sampled_from(["pearson", "pearson", "spearman"]),
+       chunked=st.booleans())
+def test_safe_prune_never_drops_topk(seed, scorer, estimator, chunked):
+    """Property: prune='safe' top-k ⊇ full-scan top-k with equal scores,
+    for random corpora, every scorer, both estimators, chunked and
+    unchunked scans."""
+    rng = np.random.default_rng(seed)
+    qcfg = Q.QueryConfig(k=5, scorer=scorer, estimator=estimator,
+                         score_chunk=5 if chunked else 512, prune_base=4)
+    off = dataclasses.replace(qcfg, prune="off")
+    safe = dataclasses.replace(qcfg, prune="safe")
+    tables = _corpus(rng, n_tables=12)
+    idx = IX.build_index(tables, n=N_SKETCH, pad_to=12)
+    mesh = jax.make_mesh((1,), ("shard",))
+    shard = IX.shard_for_mesh(idx, mesh)
+    s_off = SV.QueryServer(mesh, shard, off, buckets=(4,), index=idx,
+                           cache=CACHE)
+    s_safe = SV.QueryServer(mesh, shard, safe, buckets=(4,), index=idx,
+                            cache=CACHE)
+    queries = _queries(rng, nq=4)
+    sks = SV.build_query_sketches([k for k, _ in queries],
+                                  [v for _, v in queries], n=N_SKETCH)
+    _superset_with_equal_scores(s_off.query_batch(sks),
+                                s_safe.query_batch(sks))
+
+
+def test_topm_equals_full_when_m_covers_eligible(rng):
+    """topm with prune_m ≥ #eligible candidates scores exactly the full
+    scan's finite results (the fused program's sanity anchor)."""
+    qcfg = Q.QueryConfig(k=5, scorer="s4")
+    mesh, shard, idx, s_off = _setup(rng, qcfg)
+    topm = dataclasses.replace(qcfg, prune="topm", prune_m=shard.num_columns)
+    s_topm = SV.QueryServer(mesh, shard, topm, buckets=(4,), index=idx,
+                            cache=CACHE)
+    queries = _queries(rng, nq=4)
+    sks = SV.build_query_sketches([k for k, _ in queries],
+                                  [v for _, v in queries], n=N_SKETCH)
+    _superset_with_equal_scores(s_off.query_batch(sks),
+                                s_topm.query_batch(sks))
+
+
+def test_prune_generic_paths_eqmatrix(rng):
+    """The prep-free backends (eq-matrix here, Pallas on TPU) run the
+    generic gather paths: stage-1 via the kernel oracle, stage-2 via
+    sub-shard scoring, topm via the vmapped single-query scorer. Both must
+    honour the same superset contract against their own full scan."""
+    qcfg = Q.QueryConfig(k=5, scorer="s4", intersect="eqmatrix",
+                         score_chunk=8)
+    mesh, shard, idx, s_off = _setup(rng, qcfg)
+    safe = dataclasses.replace(qcfg, prune="safe", prune_base=4)
+    topm = dataclasses.replace(qcfg, prune="topm", prune_m=shard.num_columns)
+    s_safe = SV.QueryServer(mesh, shard, safe, buckets=(4,), index=idx,
+                            cache=CACHE)
+    s_topm = SV.QueryServer(mesh, shard, topm, buckets=(4,), index=idx,
+                            cache=CACHE)
+    queries = _queries(rng, nq=4)
+    sks = SV.build_query_sketches([k for k, _ in queries],
+                                  [v for _, v in queries], n=N_SKETCH)
+    full = s_off.query_batch(sks)
+    _superset_with_equal_scores(full, s_safe.query_batch(sks))
+    _superset_with_equal_scores(full, s_topm.query_batch(sks))
+
+
+def test_block_bits_equal_hittab(rng):
+    """The bit-packed membership table must expand to exactly the per-row
+    float table it replaces (`_block_bits` vs `_block_hittab`, the B > 32
+    fallback) — for every row, including misses and the dump column."""
+    B, nq, Mb = 7, 16, 40
+    T = Mb + 1
+    # distinct positions per row (sketch keys are distinct within a row);
+    # rows may share positions (different bits / different table rows)
+    flat = np.stack([rng.choice(Mb, size=nq, replace=False)
+                     for _ in range(B)]).reshape(-1).astype(np.int32)
+    flat[rng.random(B * nq) < 0.3] = T          # misses → dropped
+    fj = jnp.asarray(flat)
+    bits = np.asarray(Q._block_bits(fj, B, T))
+    tab = np.asarray(Q._block_hittab(fj, B, T))
+    expanded = np.asarray(Q._w_from_bits(jnp.asarray(bits), B))
+    np.testing.assert_array_equal(expanded, tab)
+    assert bits[Mb] == 0                        # dump column never written
+    # value table: scattered values land at the same cells membership does
+    qv = rng.standard_normal(B * nq).astype(np.float32)
+    vtab = np.asarray(Q._block_vtab(fj, jnp.asarray(qv), B, T))
+    assert np.all((vtab != 0) <= (tab > 0))
+
+
+def test_select_survivors_and_rung():
+    qcfg = Q.QueryConfig(min_sample=3, prune="safe")
+    hits = np.array([[0, 3, 5, 2], [4, 0, 0, 2]], np.float32)
+    np.testing.assert_array_equal(Q.select_survivors(hits, qcfg), [0, 1, 2])
+    topm = dataclasses.replace(qcfg, prune="topm", prune_m=1)
+    np.testing.assert_array_equal(Q.select_survivors(hits, topm), [0, 2])
+    assert Q.prune_rung(3, 4, 64, 1) == 4
+    assert Q.prune_rung(5, 4, 64, 1) == 8
+    assert Q.prune_rung(60, 4, 64, 1) is None     # rung ≥ C → full scan
+    assert Q.prune_rung(3, 4, 64, 8) == 8         # device-aligned
+
+
+def test_pruned_serving_zero_recompile_after_warmup(rng):
+    """Survivor-count changes must ride the fixed rung ladder: no compiles
+    after warmup, including the full-scan fallback."""
+    qcfg = Q.QueryConfig(k=3, prune="safe", prune_base=2)
+    cache = SV.CompileCache()
+    tables = _corpus(rng, n_tables=12)
+    idx = IX.build_index(tables, n=N_SKETCH, pad_to=12)
+    mesh = jax.make_mesh((1,), ("shard",))
+    shard = IX.shard_for_mesh(idx, mesh)
+    srv = SV.QueryServer(mesh, shard, qcfg, buckets=(2,), index=idx,
+                         cache=cache)
+    srv.warmup()
+    misses = cache.misses
+    # queries with very different overlap → different survivor counts/rungs
+    for key_space, rows in ((200, 150), (4000, 600), (1 << 22, 100)):
+        queries = _queries(rng, nq=2, key_space=key_space, rows=rows)
+        sks = SV.build_query_sketches([k for k, _ in queries],
+                                      [v for _, v in queries], n=N_SKETCH)
+        srv.query_batch(sks)
+    assert cache.misses == misses
+
+
+# ---------------------------------------------------------------------------
+# joinability search
+# ---------------------------------------------------------------------------
+
+def test_search_joinable_ranks_true_partner_first(rng):
+    """A query that is a superset-sampled sibling of one table must rank it
+    top-1 by containment, with a CI covering the true containment."""
+    key_space = 3000
+    base = rng.choice(key_space, size=1200, replace=False).astype(np.uint32)
+    tables = [Table(keys=base[rng.choice(1200, size=600, replace=False)],
+                    values=rng.standard_normal(600).astype(np.float32),
+                    name="partner")]
+    for i in range(7):  # disjoint-universe distractors
+        m = int(rng.integers(100, 500))
+        keys = (rng.choice(key_space, size=m, replace=False).astype(np.uint32)
+                + np.uint32((i + 1) << 20))
+        tables.append(Table(keys=keys,
+                            values=rng.standard_normal(m).astype(np.float32),
+                            name=f"d{i}"))
+    idx = IX.build_index(tables, n=N_SKETCH, pad_to=8)
+    mesh = jax.make_mesh((1,), ("shard",))
+    shard = IX.shard_for_mesh(idx, mesh)
+    srv = SV.QueryServer(mesh, shard, Q.QueryConfig(k=3), buckets=(1,),
+                         index=idx, cache=CACHE)
+    res = srv.search_joinable([base], k=3)
+    assert res.ids[0, 0] == 0                      # the partner column
+    true_c = 600 / 1200
+    assert res.ci_lo[0, 0] - 1e-6 <= true_c <= res.ci_hi[0, 0] + 1e-6
+    assert res.hits[0, 0] > 0
+    # distractors share no keys: no second result
+    assert res.ids[0, 1] == -1
+    # metric validation + values-free queries work on every metric
+    for metric in SV.JOIN_METRICS:
+        r2 = srv.search_joinable([base], k=2, metric=metric)
+        assert r2.ids[0, 0] == 0
+    with pytest.raises(ValueError):
+        srv.search_joinable([base], metric="nope")
+
+
+def test_search_joinable_lifecycle_segments(rng):
+    """Joinability search fans out across live segments, uses global ids,
+    and drops deleted tables immediately."""
+    from repro.data.pipeline import multi_column_group
+    from repro.engine import lifecycle as LC
+    groups = [multi_column_group(rng, n_cols=3, n_max=900, key_space=1 << 12,
+                                 name=f"g{i}") for i in range(5)]
+    live = LC.LiveIndex(n=N_SKETCH, delta_cap=4)
+    live.append(groups[:3])
+    mesh = jax.make_mesh((1,), ("shard",))
+    srv = LC.LiveQueryServer(mesh, live, Q.QueryConfig(k=4), buckets=(1,))
+    qk = [groups[1].keys[:500]]
+    res = srv.search_joinable(qk, k=4)
+    names = [srv.names[i] for i in res.ids[0] if i >= 0]
+    assert names[0].startswith("g1.")              # own columns first
+    live.append(groups[3:])
+    res2 = srv.search_joinable(qk, k=12)
+    assert len([i for i in res2.ids[0] if i >= 0]) >= 4
+    live.delete("g1")
+    res3 = srv.search_joinable(qk, k=12)
+    names3 = [srv.names[i] for i in res3.ids[0] if i >= 0]
+    assert not any(nm.startswith("g1.") for nm in names3)
+    live.compact()
+    res4 = srv.search_joinable(qk, k=12)
+    names4 = [srv.names[i] for i in res4.ids[0] if i >= 0]
+    assert sorted(names4) == sorted(names3)
