@@ -1,14 +1,20 @@
-"""§5.5 query evaluation: end-to-end top-k latency + batched throughput.
+"""§5.5 query evaluation: end-to-end top-k latency, batched throughput, and
+the plan/executor scorer-sweep compile gate (DESIGN.md §6).
 
 Builds a sharded index and measures
 
   * the sequential single-query loop (one dispatch per query — the paper's
-    §5.5 setting, reporting the fraction under 100 ms / 200 ms), and
+    §5.5 setting, reporting the fraction under 100 ms / 200 ms),
   * the batched engine at B ∈ {1, 8, 32}: per-dispatch latency percentiles
-    and queries/sec, where one index scan is amortised over the batch.
+    and queries/sec, where one index scan is amortised over the batch, and
+  * a **scorer sweep** over one warmed `Server`: every fast scorer ×
+    estimator × prune mode served as per-request semantics against the same
+    compiled programs — recording compile counts (the sweep must compile
+    **nothing**; `--smoke` runs this as a CI regression gate) and per-combo
+    p50 latency.
 
-Emits a ``BENCH_query_latency.json`` artifact with p50/p90/p99 and
-throughput per batch size.
+Emits a ``BENCH_query_latency.json`` artifact with p50/p90/p99, throughput
+per batch size, and the ``scorer_sweep`` section.
 """
 from __future__ import annotations
 
@@ -21,7 +27,7 @@ import jax
 
 from repro.data.pipeline import Table, sbn_pair
 from repro.engine import index as IX
-from repro.engine import query as Q
+from repro.engine import plans as PL
 from repro.engine import serve as SV
 from repro.launch.mesh import make_host_mesh
 
@@ -36,25 +42,53 @@ def _percentiles(lats_ms):
                 p99=float(np.percentile(lats_ms, 99)))
 
 
-def run(n_tables: int = 512, n_queries: int = 40, n_sketch: int = 256,
-        n_rows: int = 10000, seed: int = 4, repeats: int = 3,
-        artifact: str | None = ARTIFACT):
-    rng = np.random.default_rng(seed)
+def _corpus(rng, n_tables, n_queries, n_rows):
     tables, queries = [], []
     for i in range(n_tables):
         tx, ty, r, c = sbn_pair(rng, n_max=n_rows)
         tables.append(Table(keys=ty.keys, values=ty.values, name=f"t{i}"))
         if len(queries) < n_queries:
             queries.append(tx)
+    return tables, queries
+
+
+def _build(tables, n_sketch):
     mesh = make_host_mesh()
     ndev = int(mesh.devices.size)
-    pad = ((n_tables + ndev - 1) // ndev) * ndev
+    pad = ((len(tables) + ndev - 1) // ndev) * ndev
     idx = IX.build_index(tables, n=n_sketch, pad_to=pad)
+    return mesh, idx
+
+
+def _merge_artifact(artifact, updates: dict):
+    """Merge ``updates`` into the artifact json (keeping other sections)."""
+    if not artifact:
+        return
+    data = {}
+    if os.path.exists(artifact):
+        try:
+            with open(artifact) as f:
+                data = json.load(f)
+        except (OSError, ValueError):
+            data = {}
+    data.update(updates)
+    with open(artifact, "w") as f:
+        json.dump(data, f, indent=2)
+
+
+def run(n_tables: int = 512, n_queries: int = 40, n_sketch: int = 256,
+        n_rows: int = 10000, seed: int = 4, repeats: int = 3,
+        artifact: str | None = ARTIFACT):
+    rng = np.random.default_rng(seed)
+    tables, queries = _corpus(rng, n_tables, n_queries, n_rows)
+    mesh, idx = _build(tables, n_sketch)
     shard = IX.shard_for_mesh(idx, mesh)
-    qcfg = Q.QueryConfig(k=10, scorer="s4")
+    shape = PL.ShapePolicy(k_max=10)
+    req = PL.Request(k=10, scorer="s4")
 
     # -- sequential baseline: one dispatch per query -------------------------
-    qfn = Q.make_query_fn(mesh, shard.num_columns, n_sketch, qcfg)
+    qfn = PL.make_scan_fn(mesh, shard.num_columns, n_sketch, shape)
+    ops = np.asarray(PL.request_operands(req))
     qsks = SV.build_query_sketches([q.keys for q in queries],
                                    [q.values for q in queries], n=n_sketch)
     qas = [IX.query_arrays(jax.tree.map(lambda a, i=i: a[i], qsks))
@@ -62,7 +96,7 @@ def run(n_tables: int = 512, n_queries: int = 40, n_sketch: int = 256,
     seq_lats = []
     for qa in qas:
         t0 = time.perf_counter()
-        out = qfn(*qa, shard)
+        out = qfn(*qa, shard, ops)
         jax.block_until_ready(out)
         seq_lats.append((time.perf_counter() - t0) * 1e3)
     seq_lats_post = np.array(seq_lats[1:])  # drop compile
@@ -77,8 +111,8 @@ def run(n_tables: int = 512, n_queries: int = 40, n_sketch: int = 256,
     # once per (layout, score_chunk) into idx.prep_cache — a lookup thereafter
     batched = {}
     for B in BATCH_SIZES:
-        srv = SV.QueryServer(mesh, shard, qcfg, buckets=(B,), index=idx)
-        srv.warmup()
+        srv = SV.Server(mesh, idx, shape, request=req, buckets=(B,))
+        srv.warmup(modes=("off",))
         for _ in range(repeats):
             srv.query_batch(qsks)
         stats = srv.throughput()
@@ -90,8 +124,8 @@ def run(n_tables: int = 512, n_queries: int = 40, n_sketch: int = 256,
                           qps=stats["qps"])
 
     # -- planned serving: all buckets + measured-cost dispatch plan ----------
-    srv = SV.QueryServer(mesh, shard, qcfg, buckets=BATCH_SIZES, index=idx)
-    srv.warmup()
+    srv = SV.Server(mesh, idx, shape, request=req, buckets=BATCH_SIZES)
+    srv.warmup(modes=("off",))
     for _ in range(repeats):
         srv.query_batch(qsks)
     stats = srv.throughput()
@@ -104,9 +138,7 @@ def run(n_tables: int = 512, n_queries: int = 40, n_sketch: int = 256,
                   seq=seq, batched=batched, planned=planned,
                   speedup_b32_vs_seq=batched[32]["qps"] / max(seq["qps"], 1e-12),
                   speedup_planned_vs_seq=planned["qps"] / max(seq["qps"], 1e-12))
-    if artifact:
-        with open(artifact, "w") as f:
-            json.dump(result, f, indent=2)
+    _merge_artifact(artifact, result)
 
     # flat record for the benchmarks/run.py CSV printer
     flat = dict(n_tables=n_tables, queries=len(queries))
@@ -122,10 +154,93 @@ def run(n_tables: int = 512, n_queries: int = 40, n_sketch: int = 256,
     return flat
 
 
+def run_sweep(n_tables: int = 128, n_queries: int = 16, n_sketch: int = 128,
+              n_rows: int = 4000, seed: int = 5, repeats: int = 3,
+              batch: int = 8, artifact: str | None = ARTIFACT):
+    """Scorer-sweep mode (DESIGN.md §6): one warmed `Server`, every fast
+    scorer × estimator × prune mode as per-request semantics.
+
+    Records the compile count at warmup and across the sweep — the sweep
+    **must** compile nothing (asserted; the CI `--smoke` run is the
+    compile-count regression gate) — plus per-combo dispatch p50.
+    """
+    rng = np.random.default_rng(seed)
+    tables, queries = _corpus(rng, n_tables, n_queries, n_rows)
+    mesh, idx = _build(tables, n_sketch)
+    shape = PL.ShapePolicy(k_max=10, prune_base=max(16, n_tables // 8))
+    srv = SV.Server(mesh, idx, shape, buckets=(batch,))
+    t0 = time.perf_counter()
+    srv.warmup()                      # every prune mode's plans
+    warmup_s = time.perf_counter() - t0
+    compiles_warmup = srv.cache.misses
+    qsks = SV.build_query_sketches([q.keys for q in queries],
+                                   [q.values for q in queries], n=n_sketch)
+
+    combos = {}
+    for scorer in PL.FAST_SCORERS:
+        for estimator in PL.ESTIMATORS:
+            for prune in PL.PRUNE_MODES:
+                req = PL.Request(k=10, scorer=scorer, estimator=estimator,
+                                 prune=prune)
+                lats = []
+                for _ in range(max(repeats, 1)):
+                    t0 = time.perf_counter()
+                    srv.query_batch(qsks, request=req)
+                    lats.append((time.perf_counter() - t0) * 1e3)
+                combos[f"{scorer}/{estimator}/{prune}"] = dict(
+                    p50=float(np.percentile(lats, 50)),
+                    per_query_ms=float(np.percentile(lats, 50))
+                    / max(len(queries), 1))
+    compiles_sweep = srv.cache.misses - compiles_warmup
+    # the regression gate: request semantics must never touch the compile
+    # cache — one compiled program per (bucket, index shape) serves them all
+    assert compiles_sweep == 0, (
+        f"scorer sweep triggered {compiles_sweep} compiles — the "
+        "plan/executor compile-count contract is broken")
+    sweep = dict(n_tables=n_tables, queries=len(queries),
+                 batch=batch, warmup_s=warmup_s,
+                 programs=len(srv.cache),
+                 compiles_warmup=compiles_warmup,
+                 compiles_sweep=compiles_sweep,
+                 combos=combos)
+    _merge_artifact(artifact, {"scorer_sweep": sweep})
+
+    flat = dict(n_tables=n_tables, combos=len(combos),
+                compiles_warmup=compiles_warmup,
+                compiles_sweep=compiles_sweep,
+                warmup_s=warmup_s)
+    for name, rec in combos.items():
+        flat[f"{name.replace('/', '_')}_p50"] = rec["p50"]
+    return flat
+
+
 def main():
-    r = run()
-    print("sec5p5_query_latency," + ",".join(f"{k}={v:.4g}" if isinstance(v, float)
-                                             else f"{k}={v}" for k, v in r.items()))
+    import argparse
+    ap = argparse.ArgumentParser(
+        description="§5.5 query latency + plan/executor scorer-sweep gate")
+    ap.add_argument("--smoke", action="store_true",
+                    help="small corpus, sweep-only: the CI compile-count "
+                         "regression gate (no artifact rewrite)")
+    ap.add_argument("--sweep-only", action="store_true",
+                    help="run only the scorer sweep at full size")
+    args = ap.parse_args()
+    if args.smoke:
+        r = run_sweep(n_tables=32, n_queries=4, n_sketch=32, n_rows=1000,
+                      repeats=1, artifact=None)
+        print("scorer_sweep_smoke," + ",".join(
+            f"{k}={v:.4g}" if isinstance(v, float) else f"{k}={v}"
+            for k, v in r.items()))
+        print("compile-count gate: OK (0 compiles across the request sweep)")
+        return
+    if not args.sweep_only:
+        r = run()
+        print("sec5p5_query_latency," + ",".join(
+            f"{k}={v:.4g}" if isinstance(v, float) else f"{k}={v}"
+            for k, v in r.items()))
+    rs = run_sweep()
+    print("scorer_sweep," + ",".join(
+        f"{k}={v:.4g}" if isinstance(v, float) else f"{k}={v}"
+        for k, v in rs.items()))
     print(f"wrote {os.path.abspath(ARTIFACT)}")
 
 

@@ -24,7 +24,7 @@ import numpy as np
 
 from repro.data.pipeline import Table, multi_column_group
 from repro.engine import lifecycle as L
-from repro.engine import query as Q
+from repro.engine import plans as PL
 from repro.engine import serve as SV
 from repro.launch.mesh import make_host_mesh
 
@@ -102,10 +102,13 @@ def main():
     print(f"[2/5] fused ingest + compact: {st['live']} columns / {rows} rows "
           f"in {build_s:.1f}s over {int(mesh.devices.size)} device(s)")
 
-    qcfg = Q.QueryConfig(k=args.k, scorer="s4")
-    srv = L.LiveQueryServer(mesh, live, qcfg, buckets=args.buckets)
+    # the unified Server (DESIGN.md §6): compile-relevant shape policy once,
+    # per-request query semantics forever after
+    shape = PL.ShapePolicy(k_max=args.k)
+    req = PL.Request(k=args.k, scorer="s4")
+    srv = SV.Server(mesh, live, shape, request=req, buckets=args.buckets)
     t0 = time.time()
-    srv.warmup()
+    srv.warmup()                  # every plan: scan, probe, prune, topm
     print(f"[3/5] compiled bucket programs in {time.time()-t0:.1f}s "
           f"({srv.cache.misses} programs)")
 
@@ -115,6 +118,19 @@ def main():
     hits, strong, mrr = recall(srv, queries, qsks, initial_ids)
     print(f"      recall@{args.k} on the initial corpus: {hits}/{strong} "
           f"(MRR {mrr:.2f})")
+
+    # heterogeneous per-request semantics against the same warmed programs:
+    # scorer/estimator/k/prune sweeps trigger zero compiles (asserted)
+    misses_sweep = srv.cache.misses
+    for scorer in PL.FAST_SCORERS:
+        for prune in PL.PRUNE_MODES:
+            srv.query_batch(qsks, request=PL.Request(
+                k=min(args.k, 5), scorer=scorer, prune=prune))
+    srv.query_batch(qsks, request=PL.Request(k=args.k,
+                                             estimator="spearman"))
+    assert srv.cache.misses == misses_sweep, "request sweep must not compile"
+    print(f"      per-request sweep: {3 * len(PL.PRUNE_MODES) + 1} "
+          "scorer/prune/estimator combinations, zero new compiles")
 
     # -- append mid-serving --------------------------------------------------
     misses0 = srv.cache.misses

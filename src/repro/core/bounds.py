@@ -104,9 +104,10 @@ def fisher_z_se(m) -> jnp.ndarray:
 
 def hoeffding_eligibility_floor(min_sample: int = 3) -> int:
     """The sample-size floor the scoring paths apply: candidates with
-    m < floor score −∞ (`repro.engine.query._scores_from_stats`), and the
+    m < floor score −∞ (`repro.engine.plans.score_stats`), and the
     two-stage engine's stage-1 safe pruning drops exactly the same set
-    (`select_survivors`) — both route through this one definition, which is
+    (`repro.engine.plans.select_survivors`) — both route through this one
+    definition, which is
     what makes ``prune='safe'`` correctness-preserving: a candidate whose
     *exact* sketch-intersection size is below the floor is scored −∞ by the
     full scan too, so dropping it before the O(n²) kernel can never remove

@@ -11,6 +11,12 @@ Framework (Eq. 5): score = |r̂| · (1 − risk). Four concrete scorers:
 ``ci_h`` is list-normalised (it compares the Hoeffding CI length of each
 candidate against the min/max lengths in the same ranked list), so scorers
 operate on a *batch* of candidates rather than one pair at a time.
+
+This module is the **single source** of the §4.4 formulas: the serving
+engine's compiled plans consume `se_z_factor` and `ci_h_factor_from_bounds`
+directly (`repro.engine.plans.score_stats` supplies the distributed
+normalisation bounds and the scorer selection) — there is deliberately no
+second implementation anywhere in the engine.
 """
 from __future__ import annotations
 
@@ -44,6 +50,29 @@ def se_z_factor(m) -> jnp.ndarray:
     return 1.0 - B.fisher_z_se(m)
 
 
+def ci_h_bounds(ci_len, eligible, axis=-1, keepdims=False):
+    """(min, max) CI length over the *eligible* candidates of ``axis`` — the
+    normalisation bounds of the s4 scorer (§4.4). Split out so distributed
+    callers (the plan executor, `repro.engine.plans`) can reduce the bounds
+    further across device shards with pmin/pmax before applying
+    `ci_h_factor_from_bounds` — keeping this module the only place the §4.4
+    formula lives."""
+    big = jnp.float32(3.4e38)
+    lmin = jnp.min(jnp.where(eligible, ci_len, big), axis, keepdims=keepdims)
+    lmax = jnp.max(jnp.where(eligible, ci_len, -big), axis, keepdims=keepdims)
+    return lmin, lmax
+
+
+def ci_h_factor_from_bounds(ci_len, lmin, lmax) -> jnp.ndarray:
+    """The §4.4 ci_h penalty 1 − (len − min)/(max − min), clipped to [0, 1],
+    for externally supplied normalisation bounds (broadcast against
+    ``ci_len``). This is the *single source* of the s4 formula: both the
+    local `ci_h_factor` below and the distributed executor
+    (`repro.engine.plans.score_stats`) route through it."""
+    rng = jnp.maximum(lmax - lmin, 1e-12)
+    return jnp.clip(1.0 - (jnp.minimum(ci_len, lmax) - lmin) / rng, 0.0, 1.0)
+
+
 def ci_h_factor(ci_len, eligible=None) -> jnp.ndarray:
     """List-normalised Hoeffding penalty 1 − (len − min)/(max − min): the
     ci_h factor of the paper's headline s4 scorer (§4.3/§4.4).
@@ -54,12 +83,9 @@ def ci_h_factor(ci_len, eligible=None) -> jnp.ndarray:
     """
     if eligible is None:
         eligible = jnp.ones_like(ci_len, dtype=bool)
-    big = jnp.float32(3.4e38)
-    lmin = jnp.min(jnp.where(eligible, ci_len, big), -1, keepdims=True)
-    lmax = jnp.max(jnp.where(eligible, ci_len, -big), -1, keepdims=True)
-    rng = jnp.maximum(lmax - lmin, 1e-12)
-    f = 1.0 - (jnp.minimum(ci_len, lmax) - lmin) / rng
-    return jnp.where(eligible, jnp.clip(f, 0.0, 1.0), 0.0)
+    lmin, lmax = ci_h_bounds(ci_len, eligible, keepdims=True)
+    f = ci_h_factor_from_bounds(ci_len, lmin, lmax)
+    return jnp.where(eligible, f, 0.0)
 
 
 def ci_b_factor(lo, hi) -> jnp.ndarray:

@@ -55,10 +55,10 @@ class SketchIndex:
     for the paper's §5.5 dataset index).
 
     ``prep_cache`` persists the query-side candidate sort structure
-    (`repro.engine.query.PreppedShard`) computed against this index: it
+    (`repro.engine.plans.PreppedShard`) computed against this index: it
     depends only on (index keys, device layout, score_chunk), so it is built
-    once at index time — `precompute_prep` — and every `QueryServer` for any
-    batch bucket then gets it as a cache lookup instead of recomputing.
+    once at index time — `precompute_prep` — and every server / batch bucket
+    then gets it as a cache lookup instead of recomputing.
     """
     shard: IndexShard
     names: List[str]
@@ -177,18 +177,20 @@ build_index_groups = build_index
 
 def precompute_prep(index: SketchIndex, mesh, shard: IndexShard, qcfg):
     """Build (or look up) the query-side `PreppedShard` for this index on
-    this mesh — §"prep" of `repro.engine.query`. Stored in
-    ``index.prep_cache`` keyed by (device count, score_chunk), so serving
-    layers share one copy per layout instead of recomputing per server.
-    Returns None for configs whose intersect path doesn't consume prep.
+    this mesh — §"prep" of `repro.engine.plans`. ``qcfg`` is anything that
+    carries the compile-relevant intersect fields (a `plans.ShapePolicy` or
+    a legacy `query.QueryConfig`). Stored in ``index.prep_cache`` keyed by
+    (device count, score_chunk), so serving layers share one copy per
+    layout instead of recomputing per server. Returns None for configs
+    whose intersect path doesn't consume prep.
     """
-    from repro.engine import query as Q
+    from repro.engine import plans as PL
     if not (qcfg.kernels.backend == "xla" and qcfg.intersect == "sortmerge"):
         return None
     key = (int(mesh.devices.size), int(qcfg.score_chunk))
     prep = index.prep_cache.get(key)
     if prep is None:
-        fn = Q.make_prep_fn(mesh, shard.num_columns, index.n, qcfg)
+        fn = PL.make_prep_fn(mesh, shard.num_columns, index.n, qcfg)
         prep = jax.block_until_ready(fn(shard))
         index.prep_cache[key] = prep
     return prep

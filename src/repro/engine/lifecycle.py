@@ -31,17 +31,20 @@ The design is a miniature LSM tree over column sketches:
   mergeable sketch state (npz) plus a json manifest, round-tripping
   bit-identically: a loaded index serves bit-identical query results.
 
-`LiveQueryServer` is the read side: one `repro.engine.serve.QueryServer` per
-segment, all sharing a `CompileCache` (same-shape segments share programs)
-with per-segment `PreppedShard` entries, and a deterministic cross-segment
-top-k combine. Two-stage retrieval (``qcfg.prune``, DESIGN.md §5) applies
-per segment, and `search_joinable` fans the stage-1 joinability scan out
-across all live segments with global column ids. `refresh()` snapshots the segment list under the index lock,
-so reads are consistent: a query sees either the pre- or post-mutation
-index, never a half-applied one. The one scoring caveat during the delta
-phase: the s4 ci-normalisation spans one segment's candidate list (it is the
-paper's *list*-normalised factor); after `compact()` there is a single
-segment and s4 is globally normalised again. s1/s2 are exact throughout.
+The read side is the unified `repro.engine.serve.Server` (DESIGN.md §6):
+one plan executor per segment, all sharing a `CompileCache` (same-shape
+segments share programs) with per-segment `PreppedShard` entries, and a
+deterministic cross-segment top-k combine. Two-stage retrieval
+(``Request.prune``, DESIGN.md §5) applies per segment, and
+`search_joinable` fans the stage-1 joinability scan out across all live
+segments with global column ids. `Server.refresh()` snapshots the segment
+list under the index lock, so reads are consistent: a query sees either the
+pre- or post-mutation index, never a half-applied one. (`LiveQueryServer`
+below survives as a deprecated alias.) The one scoring caveat during the
+delta phase: the s4 ci-normalisation spans one segment's candidate list (it
+is the paper's *list*-normalised factor); after `compact()` there is a
+single segment and s4 is globally normalised again. s1/s2 are exact
+throughout.
 """
 from __future__ import annotations
 
@@ -49,7 +52,6 @@ import dataclasses
 import json
 import os
 import threading
-import time
 from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import jax
@@ -62,7 +64,7 @@ from repro.data.pipeline import Table, TableGroup
 from repro.engine import ingest
 from repro.engine import query as Q
 from repro.engine import serve as SV
-from repro.engine.index import IndexShard, place_shard
+from repro.engine.index import IndexShard
 
 #: snapshot file names (under the directory passed to save/load)
 MANIFEST_FILE = "manifest.json"
@@ -431,274 +433,51 @@ class LiveIndex:
 
 
 # ----------------------------------------------------------------------------
-# segment-aware serving
+# segment-aware serving — deprecated alias of the unified Server
 # ----------------------------------------------------------------------------
 
-@dataclasses.dataclass
-class _SegEntry:
-    sid: int
-    version: int
-    base: int            # global-id offset (cumulative used slots)
-    used: int
-    capacity: int        # device-padded column count (the compile-key shape)
-    srv: SV.QueryServer
+class LiveQueryServer(SV.Server):
+    """Deprecated alias of `repro.engine.serve.Server` over a `LiveIndex`
+    (DESIGN.md §4/§6).
 
-
-class LiveQueryServer:
-    """Consistent batched serving over a mutating `LiveIndex`
-    (DESIGN.md §4; inherits two-stage pruning and joinability search —
-    DESIGN.md §5 — per segment).
-
-    One `QueryServer` per segment, all sharing one `CompileCache`: programs
-    are keyed on the (device-padded) segment capacity, and capacities come
-    from the index's fixed ladder, so after `warmup()` every
-    append/delete/compact re-uses already-compiled programs —
-    ``server.cache.misses`` stays flat across mutations (tested). Each
-    segment keeps its own `PreppedShard` entries (content-dependent), which
-    are recomputed — one dispatch, zero compiles — when a segment's version
-    moves. Results from all segments are combined into one deterministic
-    top-k with global column ids into `names`.
+    The segment-aware serving logic — one plan executor per segment sharing
+    one `CompileCache`, per-segment `PreppedShard`s, the deterministic
+    cross-segment top-k combine, the version fast-path `refresh()` — now
+    lives in the unified `Server`, which treats a static index as the
+    single-segment special case of exactly this machinery. This wrapper
+    keeps the historical constructor and its warmup cost profile (only the
+    configured ``qcfg.prune`` plan is compiled); new code should construct
+    `Server(mesh, live, ...)` directly.
     """
 
     def __init__(self, mesh, live: LiveIndex, qcfg: Q.QueryConfig,
                  buckets: Sequence[int] = (1, 8, 32),
                  batch_rows: Optional[int] = None,
                  cache: Optional[SV.CompileCache] = None):
-        self.mesh = mesh
-        self.live = live
+        import warnings
+        warnings.warn(
+            "repro.engine.lifecycle.LiveQueryServer is deprecated; use "
+            "repro.engine.serve.Server (one facade for static and live "
+            "indexes, per-request semantics — DESIGN.md §6)",
+            DeprecationWarning, stacklevel=2)
+        super().__init__(mesh, live, qcfg, buckets=buckets,
+                         batch_rows=batch_rows, cache=cache)
         self.qcfg = qcfg
-        self.buckets = tuple(sorted(set(int(b) for b in buckets)))
-        self.batch_rows = batch_rows
-        self.cache = cache if cache is not None else SV.CompileCache()
-        self.n = live.n
-        self._entries: Dict[int, _SegEntry] = {}
-        self._order: List[int] = []
-        self.names: List[str] = []
-        self._seen_version = -1
-        #: measured bucket costs survive segment turnover per capacity class
-        self._cap_costs: Dict[int, Dict[int, float]] = {}
-        #: logical request telemetry (a query counts once, however many
-        #: segments it fans out to) + dispatches of retired segment servers
-        self._q_total = 0
-        self._q_seconds = 0.0
-        self._retired = dict(dispatches=0)
-        self.refresh()
 
-    # -- segment sync --------------------------------------------------------
-    def _make_entry(self, sid: int, version: int, base: int, used: int,
-                    host_shard) -> _SegEntry:
-        shard = place_shard(host_shard, self.mesh)
-        cap = shard.num_columns
-        # a segment smaller than k still serves: clamp so the program's
-        # final top-k never asks for more candidates than the segment holds
-        qcfg = self.qcfg
-        if qcfg.k > cap:
-            qcfg = dataclasses.replace(qcfg, k=cap)
-        srv = SV.QueryServer(self.mesh, shard, qcfg, buckets=self.buckets,
-                             batch_rows=self.batch_rows, cache=self.cache)
-        srv._bucket_cost = dict(self._cap_costs.get(cap, {}))
-        return _SegEntry(sid=sid, version=version, base=base,
-                         used=used, capacity=cap, srv=srv)
+    @property
+    def live(self) -> LiveIndex:
+        return self._live
 
-    def refresh(self) -> None:
-        """Sync with the index: device-place new/changed segments, drop
-        removed ones, rebuild the global-id catalog. Free when nothing moved
-        (lock-free version fast-path — in particular, queries don't stall on
-        the index lock while a compaction is folding). The lock is held only
-        to snapshot consistent host-side views of the changed segments (a
-        concurrent append could otherwise produce a torn read); device
-        placement and server construction happen after it is released, so
-        writers are never blocked on device transfers."""
-        if self.live.version == self._seen_version:
-            return
-        with self.live._lock:
-            ver = self.live.version
-            snaps = []
-            for seg in self.live._segs:
-                old = self._entries.get(seg.sid)
-                fresh = old is None or old.version != seg.version
-                snaps.append((seg.sid, seg.version, seg.used,
-                              list(seg.names[:seg.used]),
-                              seg.host_snapshot() if fresh else None))
-        entries: Dict[int, _SegEntry] = {}
-        order: List[int] = []
-        names: List[str] = []
-        base = 0
-        for sid, version, used, seg_names, snap in snaps:
-            if snap is None:
-                old = self._entries[sid]
-                old.base = base
-                entries[sid] = old
-            else:
-                entries[sid] = self._make_entry(sid, version, base, used,
-                                                snap.to_index_shard())
-            order.append(sid)
-            names.extend(seg_names)
-            base += used
-        for sid, old in self._entries.items():
-            if entries.get(sid) is not old:   # dropped or rebuilt
-                self._retired["dispatches"] += old.srv._total_dispatches
-        self._entries = entries
-        self._order = order
-        self.names = names
-        self._seen_version = ver
+    def query_batch(self, sketches: CorrelationSketch, refresh: bool = True,
+                    *, request=None):
+        # historical signature: ``refresh`` was positional here
+        return super().query_batch(sketches, request=request,
+                                   refresh=refresh)
 
     def warmup(self, cost_reps: int = 2, include_ladder: bool = True,
-               joinability: bool = False) -> None:
-        """Compile every bucket program for every resident segment shape and
-        measure dispatch costs (kept per capacity class so segment turnover
-        doesn't lose them). ``include_ladder`` additionally pre-warms the
-        upcoming ladder shapes that need not be resident yet — the
-        delta-capacity rung (so the *first* append after a compact serves
-        without a compile) and the rung a `compact()` of the current live
-        columns would land on — the capacity ladder is known a priori.
-        ``joinability`` forwards to `QueryServer.warmup`: pre-warm the
-        `search_joinable` stage-1 scan too (``safe`` servers get it
-        regardless)."""
-        ndev = int(self.mesh.devices.size)
-        warmed = set()
-        for sid in self._order:
-            e = self._entries[sid]
-            e.srv.warmup(cost_reps=cost_reps, joinability=joinability)
-            self._cap_costs[e.capacity] = dict(e.srv._bucket_cost)
-            warmed.add(e.capacity)
-        if include_ladder:
-            ahead = {self.live.delta_cap,
-                     ladder_rung(self.live.live_columns(),
-                                 self.live.delta_cap)}
-            for cap in sorted(ahead):
-                if cap + (-cap) % ndev in warmed:
-                    continue
-                empty = Segment.empty(-1, cap, self.n, self.live.agg)
-                entry = self._make_entry(-1, 0, 0, 0, empty.to_index_shard())
-                entry.srv.warmup(cost_reps=cost_reps,
-                                 joinability=joinability)
-                self._cap_costs[entry.capacity] = dict(entry.srv._bucket_cost)
-                warmed.add(entry.capacity)
-
-    # -- queries -------------------------------------------------------------
-    def query_batch(self, sketches: CorrelationSketch,
-                    refresh: bool = True):
-        """Serve a batch of query sketches (leading [NQ] axis) against every
-        segment → combined ``[NQ, k]`` (scores, global ids, r, m) numpy
-        arrays, global ids indexing `self.names` (-1 for empty tail slots).
-        """
-        if refresh:
-            self.refresh()
-        t_start = time.perf_counter()
-        k = self.qcfg.k
-        nq = int(jax.tree.leaves(sketches)[0].shape[0])
-        empty = (np.full((nq, k), -np.inf, np.float32),
-                 np.full((nq, k), -1, np.int32),
-                 np.zeros((nq, k), np.float32), np.zeros((nq, k), np.float32))
-        if nq == 0:
-            return tuple(a[:0] for a in empty)
-        parts = []
-        for sid in self._order:
-            e = self._entries[sid]
-            if e.used == 0:
-                continue
-            s, g, r, m = e.srv.query_batch(sketches)
-            parts.append((np.asarray(s), np.asarray(g) + e.base,
-                          np.asarray(r), np.asarray(m)))
-        if not parts:
-            self._q_total += nq
-            self._q_seconds += time.perf_counter() - t_start
-            return empty
-        s = np.concatenate([p[0] for p in parts], axis=1)
-        g = np.concatenate([p[1] for p in parts], axis=1)
-        r = np.concatenate([p[2] for p in parts], axis=1)
-        m = np.concatenate([p[3] for p in parts], axis=1)
-        # deterministic combine: score desc, global id asc as tiebreak
-        out = empty
-        pick = np.lexsort((g, -s), axis=1)[:, :k]
-        take = lambda a: np.take_along_axis(a, pick, axis=1)
-        s, g, r, m = take(s), take(g), take(r), take(m)
-        kk = s.shape[1]
-        out[0][:, :kk] = s
-        out[1][:, :kk] = np.where(np.isfinite(s), g, -1)
-        out[2][:, :kk] = np.where(np.isfinite(s), r, 0.0)
-        out[3][:, :kk] = np.where(np.isfinite(s), m, 0.0)
-        self._q_total += nq
-        self._q_seconds += time.perf_counter() - t_start
-        return out
-
-    def query_columns(self, keys_list, values_list, *, chunk: int = 8192,
-                      refresh: bool = True):
-        """Convenience: raw query columns → sketches → combined top-k."""
-        sks = SV.build_query_sketches(keys_list, values_list, n=self.n,
-                                      chunk=chunk)
-        return self.query_batch(sks, refresh=refresh)
-
-    # -- joinability search --------------------------------------------------
-    def search_joinable_sketches(self, sketches: CorrelationSketch, *,
-                                 k: Optional[int] = None,
-                                 metric: str = "containment",
-                                 refresh: bool = True) -> SV.JoinabilityResult:
-        """Top-k joinability search across every live segment (DESIGN.md §5).
-
-        Fans the stage-1 containment scan out per segment (each segment
-        server ranks its own candidates — the global top-k is contained in
-        the union of per-segment top-ks), shifts segment-local ids into the
-        global catalog (`self.names`), and combines deterministically:
-        metric desc, global id asc. Tombstoned and unused slots have zero
-        stored minima, so they can never surface.
-        """
-        if refresh:
-            self.refresh()
-        k = int(k or self.qcfg.k)
-        nq = int(jax.tree.leaves(sketches)[0].shape[0])
-        fields = SV.JoinabilityResult._FIELDS
-        empty = {f: np.zeros((nq, k), np.float32) for f in fields}
-        empty["ids"] = np.full((nq, k), -1, np.int32)
-        parts = []
-        for sid in self._order:
-            e = self._entries[sid]
-            if e.used == 0:
-                continue
-            res = e.srv.search_joinable_sketches(sketches, k=k, metric=metric)
-            ids = np.where(res.ids >= 0, res.ids + e.base, -1)
-            parts.append(dataclasses.replace(res, ids=ids.astype(np.int32)))
-        if not parts or nq == 0:
-            return SV.JoinabilityResult(**{f: empty[f][:nq] for f in fields})
-        # every per-segment result is k wide, so the concatenation holds
-        # ≥ k columns whenever any part exists — the [:, :k] slice below is
-        # always full width
-        cat = {f: np.concatenate([getattr(p, f) for p in parts], axis=1)
-               for f in fields}
-        ok = cat["ids"] >= 0
-        pick = np.lexsort((np.where(ok, cat["ids"], np.iinfo(np.int32).max),
-                           np.where(ok, -cat["score"], np.inf)), axis=1)[:, :k]
-        take = lambda a: np.take_along_axis(a, pick, axis=1)
-        valid = take(ok)
-        out = {}
-        for f in fields:
-            taken = take(cat[f])
-            out[f] = (np.where(valid, taken, -1).astype(np.int32)
-                      if f == "ids" else np.where(valid, taken, 0.0))
-        return SV.JoinabilityResult(**out)
-
-    def search_joinable(self, keys_list, *, k: Optional[int] = None,
-                        metric: str = "containment", chunk: int = 8192,
-                        refresh: bool = True) -> SV.JoinabilityResult:
-        """Top-k joinable columns for raw query key columns (values-free),
-        across all segments — global ids index `self.names`."""
-        values = [np.zeros((len(kz),), np.float32) for kz in keys_list]
-        sks = SV.build_query_sketches(keys_list, values, n=self.n, chunk=chunk)
-        return self.search_joinable_sketches(sks, k=k, metric=metric,
-                                             refresh=refresh)
-
-    # -- telemetry -----------------------------------------------------------
-    def throughput(self) -> dict:
-        """Lifetime serving telemetry. ``queries``/``qps`` count *logical*
-        requests (one per query, however many segments it fanned out to);
-        ``dispatches`` counts the underlying per-segment program dispatches
-        (current + retired segment servers)."""
-        qs = [self._entries[sid].srv for sid in self._order]
-        return dict(queries=self._q_total,
-                    dispatches=self._retired["dispatches"]
-                    + sum(s._total_dispatches for s in qs),
-                    total_s=self._q_seconds,
-                    qps=self._q_total / max(self._q_seconds, 1e-12),
-                    compiles=self.cache.misses,
-                    segments=len(self._order))
+               joinability: bool = False,
+               modes: Optional[Sequence[str]] = None) -> None:
+        super().warmup(cost_reps=cost_reps, include_ladder=include_ladder,
+                       joinability=joinability,
+                       modes=modes if modes is not None
+                       else (self.request.prune,))

@@ -1,58 +1,58 @@
-"""Distributed top-k join-correlation query evaluation, single or batched.
+"""Legacy facade of the distributed query engine (pre-plan/executor API).
 
-Per query (paper Defn. 3, engine form):
+The engine's real serving core lives in `repro.engine.plans` (DESIGN.md §6):
+one compiled pipeline program per (batch, index shape, `ShapePolicy`), with
+per-request semantics — estimator, scorer, α, eligibility floor — entering
+as traced operands and k as a host-side slice of the static ``k_max`` rank
+stage. This module keeps the original API surface alive on top of it:
 
-  1. broadcast the query sketch (KB-sized);
-  2. every device runs the fused sketch-join kernel over its column shard:
-     moments → Pearson r (Eq. 3) → Hoeffding CI (§4.3) in one pass
-     (Spearman: + the rank kernel on the aligned pairs);
-  3. two scalar collectives (pmin/pmax of CI lengths) realise the paper's
-     list-normalised ci_h factor *globally*;
-  4. local top-k, then an all-gather of (score, global index) pairs —
-     O(devices × k) bytes, independent of index size;
-  5. final top-k over the gathered candidates.
+  * `QueryConfig` — the historical all-in-one config. New code should use
+    the split pair `plans.ShapePolicy` (compile-relevant) +
+    `plans.Request` (per-request); `plans.split_config` converts.
+  * `make_query_fn` / `make_stage1_fn` / `make_pruned_query_fn` /
+    `make_topm_query_fn` — **deprecated** thin wrappers that build the
+    corresponding plan and bind the request operands derived from the
+    `QueryConfig`. Results are produced by the very same compiled programs
+    the unified `repro.engine.serve.Server` dispatches, so old and new APIs
+    are bit-identical by construction.
+  * `score_shard` / `_scores_from_stats` — statically-specialised stage
+    entry points kept for tests and host-side tooling; the scorer math is
+    single-sourced in `repro.core.scoring` via `plans.score_stats`.
 
-``make_query_fn`` returns a jitted shard_map program; the same code runs on
-1 CPU device (tests) or the 512-chip production mesh (dry-run).
-
-Batched mode (``batch=B``): the same program scores B query sketches against
-every shard in one dispatch — query arrays carry a leading ``[B]`` axis, the
-intersect kernels are vmapped over it (bit-identical per row to the
-single-query path), the s4 normalisation collectives reduce a ``[B]`` vector
-(per-query min/max, *not* pooled across the batch), and the result is
-``[B, k]``. One index scan is amortised over the whole request batch — see
-``repro.engine.serve`` for the bucketing/caching layer on top.
+Shared data structures (`PreppedShard`), host-side helpers
+(`select_survivors`, `prune_rung`) and the probe-table primitives are
+re-exported from `repro.engine.plans` so existing imports keep working.
 """
 from __future__ import annotations
 
 import dataclasses
-import functools
+import warnings
 from typing import Optional
 
-import jax
 import jax.numpy as jnp
-import numpy as np
-from jax.sharding import NamedSharding, PartitionSpec as P
-from jax.experimental.shard_map import shard_map
 
-from repro.core.bounds import hoeffding_eligibility_floor
+from repro.engine import plans as PL
 from repro.engine.index import IndexShard
-from repro.kernels import ops as K
 from repro.kernels.ops import KernelConfig
 
-#: sentinel key hash for padded candidate slots — never matches a real key
-#: because real slots are masked separately anyway.
-_PAD_KEY = np.uint32(0xFFFFFFFF)
+# re-exported plan/executor primitives (canonical home: repro.engine.plans)
+from repro.engine.plans import (  # noqa: F401
+    _PAD_KEY, PreppedShard, make_prep_fn, prune_rung,
+    _block_bits, _block_hittab, _block_vtab, _prep_block, _use_bits,
+    _w_from_bits)
 
 
 @dataclasses.dataclass(frozen=True)
 class QueryConfig:
     """Knobs of the distributed query program (paper Defn. 3 + DESIGN.md §5).
 
-    ``k``/``estimator``/``scorer``/``alpha``/``min_sample`` mirror the
-    paper's query model (§4: top-k, the §5.3 estimators, the §4.4 scorers,
-    the §4.3 confidence level and the m ≥ 3 eligibility floor). The rest is
-    engine shape policy — see the field comments.
+    Historically both the compile key and the request: ``k``/``estimator``/
+    ``scorer``/``alpha``/``min_sample``/``prune`` mirror the paper's query
+    model (§4: top-k, the §5.3 estimators, the §4.4 scorers, the §4.3
+    confidence level and the m ≥ 3 eligibility floor), the rest is engine
+    shape policy. The plan/executor core (DESIGN.md §6) splits the two
+    concerns — `repro.engine.plans.split_config` maps this onto a
+    (`ShapePolicy`, `Request`) pair; prefer those for new code.
     """
     k: int = 10
     estimator: str = "pearson"      # pearson | spearman
@@ -68,285 +68,40 @@ class QueryConfig:
     intersect: str = "sortmerge"
     #: two-stage retrieval (DESIGN.md §5): "off" = the classic full scan
     #: (bit-identical to pre-prune behaviour); "safe" = drop candidates whose
-    #: *exact* stage-1 intersection is below ``min_sample`` — those score
-    #: −inf in the full scan, so the pruned top-k provably contains every
-    #: true top-k column; "topm" = keep the ``prune_m`` best stage-1
-    #: candidates per query (approximate, fastest)
+    #: *exact* stage-1 intersection is below ``min_sample``; "topm" = keep
+    #: the ``prune_m`` best stage-1 candidates per query
     prune: str = "off"              # off | safe | topm
     #: "topm" survivor budget per query (union across a batch)
     prune_m: int = 128
     #: base rung of the compacted-shard capacity ladder ``prune_base · 2^i``
-    #: — stage-2 dispatch shapes are drawn from this fixed ladder, so the
-    #: compile cache stays O(log C) (same discipline as the segment ladder
-    #: of `repro.engine.lifecycle`, DESIGN.md §4)
     prune_base: int = 64
 
 
-def _moments_from(a, b, w):
-    m = jnp.sum(w, -1)
-    return jnp.stack([m, jnp.sum(a * w, -1), jnp.sum(b * w, -1),
-                      jnp.sum(a * a * w, -1), jnp.sum(b * b * w, -1),
-                      jnp.sum(a * b * w, -1)], -1)
+def _static_scorer(qcfg: QueryConfig) -> str:
+    # the historical scoring tail treated every scorer outside {s1, s2} as
+    # s4; the static entry points keep that leniency
+    return qcfg.scorer if qcfg.scorer in ("s1", "s2") else "s4"
 
 
-def _sortmerge_moments(q_kh, q_val, q_mask, kh, vals, mask):
-    """Eq-matrix-free intersect (§Perf E2): binary-search each candidate's
-    (pre-sorted would be better; here sorted on the fly) keys against the
-    query — O(C·n·log n) and, crucially, O(C·n) HBM traffic instead of the
-    O(C·n²) equality tensor of the matmul formulation. This is the XLA-path
-    default; the Pallas kernel keeps the n² tile in VMEM instead.
-    """
-    PAD = jnp.uint32(0xFFFFFFFF)
-    # A real key hashing to the PAD sentinel is treated as non-matchable on
-    # both the single and batched sortmerge paths (keeps them bit-identical;
-    # the sentinel is indistinguishable from padding once sorted).
-    q_eff = jnp.where(q_kh != PAD, q_mask, 0.0)
-    qk = jnp.where(q_eff > 0, q_kh, PAD)
-    order = jnp.argsort(qk)
-    qk_s = qk[order]
-    qv_s = (q_val * q_eff)[order]
-    qm_s = q_eff[order]
-
-    ck = jnp.where(mask > 0, kh, PAD)               # [C, n]
-    pos = jnp.searchsorted(qk_s, ck.reshape(-1)).reshape(ck.shape)
-    pos = jnp.clip(pos, 0, qk_s.shape[0] - 1)
-    hitc = (qk_s[pos] == ck) & (qm_s[pos] > 0) & (mask > 0)   # [C, n]
-    w = hitc.astype(jnp.float32)
-    a = qv_s[pos] * w                                # query values aligned to candidate slots
-    b = vals * w
-    mom = jnp.stack([w.sum(-1), a.sum(-1), b.sum(-1), (a * a).sum(-1),
-                     (b * b).sum(-1), (a * b).sum(-1)], -1)
-    return mom, a, b, w
+def _split(qcfg: QueryConfig):
+    """(ShapePolicy, operand vector) for the deprecated builders below
+    (`split_config` already applies the historical scorer/estimator
+    leniency)."""
+    shape, req = PL.split_config(qcfg)
+    return shape, jnp.asarray(PL.request_operands(req))
 
 
-@jax.tree_util.register_dataclass
-@dataclasses.dataclass(frozen=True)
-class PreppedShard:
-    """Precomputed candidate-side sort structure for the batched intersect
-    (the resident half of the XLA sortmerge path, DESIGN.md §3).
-
-    Both arrays are laid out like the (padded, per-``score_chunk``-block)
-    index: for each block of ``chunk`` candidate rows, ``dk`` holds the
-    block's sorted distinct-key table (flat length chunk·n, PAD-filled tail)
-    and ``sid`` maps every original slot to its segment id in that table
-    (``chunk·n`` = the never-written dump column for invalid slots). They
-    depend only on (index keys, score_chunk) — compute once per index with
-    ``make_prep_fn`` and reuse for every dispatch.
-    """
-    dk: jnp.ndarray    # u32 [Cp, n]
-    sid: jnp.ndarray   # i32 [Cp, n]
+def _deprecated(name: str, replacement: str):
+    warnings.warn(
+        f"repro.engine.query.{name} is deprecated; use "
+        f"repro.engine.plans.{replacement} (per-request semantics ride in "
+        "as traced operands — see DESIGN.md §6)",
+        DeprecationWarning, stacklevel=3)
 
 
-def _prep_block(kh, mask):
-    """Sort one candidate block's keys into the (dk, sid) lookup structure."""
-    Mb = kh.shape[0] * kh.shape[1]
-    PAD = jnp.uint32(0xFFFFFFFF)
-    ck = jnp.where(mask > 0, kh, PAD).reshape(-1)            # [Mb]
-    sort_idx = jnp.argsort(ck)
-    ck_s = ck[sort_idx]
-    new_seg = jnp.concatenate([jnp.ones((1,), jnp.int32),
-                               (ck_s[1:] != ck_s[:-1]).astype(jnp.int32)])
-    seg_sorted = jnp.cumsum(new_seg) - 1                     # [Mb], segment ids
-    # dk[s] = key of segment s (every write in a segment carries the same
-    # key); unfilled tail stays PAD so dk is ascending end to end
-    dk = jnp.full((Mb,), PAD, ck.dtype).at[seg_sorted].set(ck_s)
-    # original slot → segment id, via the inverse permutation (scatter, not
-    # a second argsort); invalid candidate slots point at the never-written
-    # dump column Mb
-    rank = jnp.zeros((Mb,), jnp.int32).at[sort_idx].set(
-        jnp.arange(Mb, dtype=jnp.int32))
-    sid = seg_sorted[rank]
-    sid = jnp.where(mask.reshape(-1) > 0, sid, Mb)
-    return dk.reshape(kh.shape), sid.reshape(kh.shape).astype(jnp.int32)
-
-
-def _sortmerge_moments_batched(q_kh, q_val, q_mask, kh, vals, mask, prep=None):
-    """Leading-query-axis sortmerge: q_* are [B, n_q], candidates shared.
-
-    This is where batching actually pays: the candidate keys are sorted into
-    a distinct-key segment table *shared across the whole batch* (and across
-    dispatches, when a precomputed ``prep`` is passed — see ``make_prep_fn``),
-    each query's n_q keys binary-search that shared table (1-D searches —
-    XLA CPU collapses batch-dim gathers into scalar loops, so a naive
-    per-row vmap of `_sortmerge_moments` is slower than the sequential loop
-    it replaces), membership lands in a ``[B, D]`` table with one scatter
-    per query key, and a shared-index gather fans it back out to
-    ``[B, C, n]``.
-
-    Exactness: every float that comes out is either an untouched copy of a
-    query/candidate value or a true zero (sketch keys are distinct within a
-    row, so each membership cell is written at most once — no accumulation),
-    and the final moment sums run over the same slot order as the
-    single-query path. Batched results are therefore bit-identical to B
-    sequential calls.
-    """
-    B, nq = q_kh.shape
-    C, n = kh.shape
-    M = C * n
-    # the membership scatter below runs in int32 flat index space
-    assert B * (M + 1) < 2**31, (
-        f"batch {B} × block {M} overflows int32 scatter indices; "
-        f"lower QueryConfig.score_chunk")
-    PAD = jnp.uint32(0xFFFFFFFF)
-
-    if prep is None:
-        dk, sid = _prep_block(kh, mask)
-    else:
-        dk, sid = prep
-    dk = dk.reshape(-1)
-    sid = sid.reshape(-1)
-
-    # -- per-query membership: one 1-D search + one scatter per key ---------
-    qk = jnp.where(q_mask > 0, q_kh, PAD)                    # [B, nq]
-    qv = (q_val * q_mask).reshape(-1)
-    pos = jnp.clip(jnp.searchsorted(dk, qk.reshape(-1)), 0, M - 1)
-    hit = (dk[pos] == qk.reshape(-1)) & (q_mask.reshape(-1) > 0) \
-        & (qk.reshape(-1) != PAD)
-    row = jnp.repeat(jnp.arange(B, dtype=jnp.int32), nq) * (M + 1)
-    # misses target index B*(M+1): out of bounds → dropped by the scatter
-    flat = jnp.where(hit, row + pos.astype(jnp.int32), B * (M + 1))
-    q_hit = jnp.zeros((B * (M + 1),), jnp.float32).at[flat].set(1.0)
-    q_val_tab = jnp.zeros((B * (M + 1),), jnp.float32).at[flat].set(qv)
-
-    # -- fan back out with the shared per-slot segment ids ------------------
-    w = jnp.take(q_hit.reshape(B, M + 1), sid, axis=-1).reshape(B, C, n)
-    a = jnp.take(q_val_tab.reshape(B, M + 1), sid, axis=-1).reshape(B, C, n)
-    b = vals[None] * w
-    mom = jnp.stack([w.sum(-1), a.sum(-1), b.sum(-1), (a * a).sum(-1),
-                     (b * b).sum(-1), (a * b).sum(-1)], -1)
-    return mom, a, b, w
-
-
-def _rank_rows(x, w, qcfg: QueryConfig):
-    """rank_transform over the last axis for arbitrary leading dims."""
-    shape = x.shape
-    r = K.rank_transform(x.reshape(-1, shape[-1]), w.reshape(-1, shape[-1]),
-                         qcfg.kernels)
-    return r.reshape(shape)
-
-
-def _score_block(q_kh, q_val, q_mask, kh, vals, mask, qcfg: QueryConfig,
-                 prep=None):
-    """moments → (r, m) for one candidate block.
-
-    Query arrays are ``[n_q]`` (single) or ``[B, n_q]`` (batched); candidate
-    arrays are always ``[C, n]``. Returns moments ``[..., C, 6]``, r ``[..., C]``.
-    """
-    batched = q_kh.ndim == 2
-    if qcfg.kernels.backend == "xla" and qcfg.intersect == "sortmerge":
-        if batched:
-            mom, a, b, w = _sortmerge_moments_batched(
-                q_kh, q_val, q_mask, kh, vals, mask, prep=prep)
-        else:
-            mom, a, b, w = _sortmerge_moments(q_kh, q_val, q_mask, kh, vals, mask)
-        if qcfg.estimator == "spearman":
-            ra = _rank_rows(a, w, qcfg)
-            rb = _rank_rows(b, w, qcfg)
-            r = K.pearson_from_moments(_moments_from(ra, rb, w))
-        else:
-            r = K.pearson_from_moments(mom)
-        return mom, r
-    join = (K.sketch_join_moments_batched if batched else K.sketch_join_moments)
-    mom, aligned, hit = join(q_kh, q_val, q_mask, kh, vals, mask, qcfg.kernels)
-    if qcfg.estimator == "spearman":
-        qv = jnp.broadcast_to(q_val[..., None, :] * hit, aligned.shape)
-        ra = _rank_rows(qv, hit, qcfg)
-        rb = _rank_rows(aligned, hit, qcfg)
-        r = K.pearson_from_moments(_moments_from(ra, rb, hit))
-    else:
-        r = K.pearson_from_moments(mom)
-    return mom, r
-
-
-def _chunk_layout(C: int, score_chunk: int):
-    """(chunk, pad, nb) of the candidate streaming loop for a C-row shard."""
-    chunk = min(score_chunk, C)
-    pad = (-C) % chunk
-    return chunk, pad, (C + pad) // chunk
-
-
-def _shard_stats(q_kh, q_val, q_mask, q_cmin, q_cmax, shard: IndexShard,
-                 qcfg: QueryConfig, prep: Optional[PreppedShard] = None):
-    """Chunked scan over a shard's candidates → (r, m, ci_len), each [..., C].
-
-    Candidates stream through in ``score_chunk`` blocks under ``lax.map`` so
-    the (chunk, n_q, n) match tensor stays O(chunk·n²) regardless of shard
-    size (§Perf E1 — a 2 M-column index would otherwise need a TB-scale
-    equality tensor per device). Shards whose size is not a chunk multiple
-    are padded up with masked candidates (dropped again before returning) —
-    memory stays bounded for any C.
-    """
-    batched = q_kh.ndim == 2
-    C = shard.key_hash.shape[0]
-    chunk, pad, nb = _chunk_layout(C, qcfg.score_chunk)
-    kh, vals, mask = shard.key_hash, shard.values, shard.mask
-    if pad:
-        kh = jnp.pad(kh, ((0, pad), (0, 0)), constant_values=_PAD_KEY)
-        vals = jnp.pad(vals, ((0, pad), (0, 0)))
-        mask = jnp.pad(mask, ((0, pad), (0, 0)))
-    Cp = C + pad
-    if prep is not None:
-        assert prep.dk.shape[0] == Cp, (prep.dk.shape, Cp)
-    if nb > 1:
-        resh = lambda a: a.reshape((nb, chunk) + a.shape[1:])
-        have_prep = prep is not None
-        blocks_prep = ((resh(prep.dk), resh(prep.sid)) if have_prep
-                       else (jnp.zeros((nb, 0)), jnp.zeros((nb, 0))))
-
-        def one(args):
-            ckh, cvals, cmask, cdk, csid = args
-            return _score_block(q_kh, q_val, q_mask, ckh, cvals, cmask, qcfg,
-                                prep=(cdk, csid) if have_prep else None)
-
-        mom, r = jax.lax.map(one, (resh(kh), resh(vals), resh(mask),
-                                   *blocks_prep))
-        # lax.map stacks the chunk axis in front: [nb, ..., chunk, ·] → [..., Cp, ·]
-        mom = jnp.moveaxis(mom, 0, -3).reshape(q_kh.shape[:-1] + (Cp, mom.shape[-1]))
-        r = jnp.moveaxis(r, 0, -2).reshape(q_kh.shape[:-1] + (Cp,))
-        mom = mom[..., :C, :]
-        r = r[..., :C]
-    else:
-        mom, r = _score_block(q_kh, q_val, q_mask, kh, vals, mask, qcfg,
-                              prep=(prep.dk, prep.sid) if prep is not None else None)
-    m = mom[..., 0]
-    if batched:
-        c_lo = jnp.minimum(q_cmin[:, None], shard.col_min[None, :])
-        c_hi = jnp.maximum(q_cmax[:, None], shard.col_max[None, :])
-    else:
-        c_lo = jnp.minimum(q_cmin, shard.col_min)
-        c_hi = jnp.maximum(q_cmax, shard.col_max)
-    lo, hi = K.hoeffding_from_moments(mom, c_lo, c_hi, alpha=qcfg.alpha)
-    return r, m, hi - lo
-
-
-def _scores_from_stats(r, m, ci_len, qcfg: QueryConfig, axis_names=None):
-    """Scoring tail shared by the full scan and the pruned stage-2 path:
-    (r, m, ci_len) → scores, with the §4.4 scorer and the m ≥ min_sample
-    eligibility floor (ineligible → −inf). The s4 min/max normalisation runs
-    over the *eligible* candidates of the last axis (pmin/pmax across shards
-    when ``axis_names`` is given) — min/max are exact, so any candidate
-    subset containing every eligible candidate normalises identically (the
-    ``prune='safe'`` equivalence, DESIGN.md §5)."""
-    eligible = m >= hoeffding_eligibility_floor(qcfg.min_sample)
-
-    if qcfg.scorer == "s1":
-        s = jnp.abs(r)
-    elif qcfg.scorer == "s2":
-        se_z = 1.0 - 1.0 / jnp.sqrt(jnp.maximum(m, 4.0) - 3.0)
-        s = jnp.abs(r) * se_z
-    else:  # s4: globally list-normalised Hoeffding CI factor, per query row
-        big = jnp.float32(3.4e38)
-        lmin = jnp.min(jnp.where(eligible, ci_len, big), axis=-1)
-        lmax = jnp.max(jnp.where(eligible, ci_len, -big), axis=-1)
-        if axis_names:  # global normalisation across shards
-            lmin = jax.lax.pmin(lmin, axis_names)
-            lmax = jax.lax.pmax(lmax, axis_names)
-        rng = jnp.maximum(lmax - lmin, 1e-12)
-        f = jnp.clip(1.0 - (jnp.minimum(ci_len, lmax[..., None]) - lmin[..., None])
-                     / rng[..., None], 0.0, 1.0)
-        s = jnp.abs(r) * f
-    return jnp.where(eligible, s, -jnp.inf)
-
+# ----------------------------------------------------------------------------
+# statically-specialised stage entry points (host tooling + tests)
+# ----------------------------------------------------------------------------
 
 def score_shard(q_kh, q_val, q_mask, q_cmin, q_cmax, shard: IndexShard,
                 qcfg: QueryConfig, axis_names=None,
@@ -354,667 +109,105 @@ def score_shard(q_kh, q_val, q_mask, q_cmin, q_cmax, shard: IndexShard,
     """Score every candidate in a shard (§4: estimator → §4.3 CI → §4.4
     scorer); returns (scores, r, m, ci_len).
 
-    Accepts a single query (``q_kh: [n_q]``) or a batch (``q_kh: [B, n_q]``,
-    ``q_cmin/q_cmax: [B]``); outputs gain the same leading axis. The s4
-    normalisation is computed per query row — a ``[B]`` pmin/pmax across
-    shards — so each batched query sees exactly the normalisation it would
-    get alone. ``prep`` (batched sortmerge path only) supplies the
-    precomputed candidate sort structure so it is not rebuilt per dispatch.
+    Statically specialised on the `QueryConfig` (the compiled serving paths
+    instead trace the request operands — `repro.engine.plans`). Accepts a
+    single query (``q_kh: [n_q]``) or a batch (``q_kh: [B, n_q]``); the s4
+    normalisation is per query row (a ``[B]`` pmin/pmax across shards when
+    ``axis_names`` is given).
     """
-    r, m, ci_len = _shard_stats(q_kh, q_val, q_mask, q_cmin, q_cmax, shard,
-                                qcfg, prep=prep)
-    s = _scores_from_stats(r, m, ci_len, qcfg, axis_names=axis_names)
+    from repro.core.bounds import hoeffding_eligibility_floor
+    shape, _ = PL.split_config(qcfg)
+    r, m, ci_len = PL._shard_stats(q_kh, q_val, q_mask, q_cmin, q_cmax,
+                                   shard, shape, qcfg.estimator, qcfg.alpha,
+                                   prep=prep)
+    s = PL.score_stats(r, m, ci_len, _static_scorer(qcfg),
+                       float(hoeffding_eligibility_floor(qcfg.min_sample)),
+                       axis_names=axis_names)
     return s, r, m, ci_len
 
 
-def make_prep_fn(mesh, C_total: int, n: int, qcfg: QueryConfig):
-    """Build a jitted program that precomputes the per-shard candidate sort
-    structure (`PreppedShard`, DESIGN.md §3) for the batched query path.
-    Run it once per
-    resident index + score_chunk config; pass its result to the query
-    program built with ``make_query_fn(..., batch=B, with_prep=True)``.
+def _scores_from_stats(r, m, ci_len, qcfg: QueryConfig, axis_names=None):
+    """Deprecated: the scoring tail now lives in `repro.engine.plans.
+    score_stats`, with the §4.4 formulas single-sourced in
+    `repro.core.scoring` (se_z_factor / ci_h_factor_from_bounds)."""
+    from repro.core.bounds import hoeffding_eligibility_floor
+    return PL.score_stats(r, m, ci_len, _static_scorer(qcfg),
+                          float(hoeffding_eligibility_floor(qcfg.min_sample)),
+                          axis_names=axis_names)
+
+
+def select_survivors(hits, qcfg: QueryConfig):
+    """Host-side stage-1 → stage-2 candidate selection (DESIGN.md §5);
+    see `repro.engine.plans.select_survivors` (the canonical home)."""
+    return PL.select_survivors(hits, prune=qcfg.prune,
+                               min_sample=qcfg.min_sample,
+                               prune_m=qcfg.prune_m)
+
+
+# ----------------------------------------------------------------------------
+# deprecated program builders (thin wrappers over the plan executor)
+# ----------------------------------------------------------------------------
+
+def make_query_fn(mesh, C_total: int, n: int, qcfg: QueryConfig,
+                  batch: Optional[int] = None, with_prep: bool = False):
+    """Deprecated: build the full-scan program for one `QueryConfig`.
+
+    A thin wrapper over `repro.engine.plans.make_scan_fn` that binds the
+    config's request operands — the returned callable keeps the historical
+    signature ``fn(q_kh, q_val, q_mask, q_cmin, q_cmax, shard[, prep])``
+    and is bit-identical to the plan program the unified server dispatches
+    (it *is* that program, with the operand vector pre-bound).
     """
-    axes = tuple(mesh.axis_names)
-    ndev = int(mesh.devices.size)
-    assert C_total % ndev == 0
-
-    def local(shard: IndexShard):
-        kh, mask = shard.key_hash, shard.mask
-        C = kh.shape[0]
-        chunk, pad, nb = _chunk_layout(C, qcfg.score_chunk)
-        if pad:
-            kh = jnp.pad(kh, ((0, pad), (0, 0)), constant_values=_PAD_KEY)
-            mask = jnp.pad(mask, ((0, pad), (0, 0)))
-        resh = lambda a: a.reshape((nb, chunk) + a.shape[1:])
-        dk, sid = jax.lax.map(lambda ab: _prep_block(*ab),
-                              (resh(kh), resh(mask)))
-        return PreppedShard(dk=dk.reshape(C + pad, n),
-                            sid=sid.reshape(C + pad, n))
-
-    spec = P(axes)
-    shard_specs = IndexShard(key_hash=spec, values=spec, mask=spec,
-                             col_min=spec, col_max=spec, rows=spec)
-    fn = shard_map(local, mesh=mesh, in_specs=(shard_specs,),
-                   out_specs=PreppedShard(dk=spec, sid=spec),
-                   check_rep=False)
-    return jax.jit(fn)
-
-
-# ----------------------------------------------------------------------------
-# two-stage retrieval: stage-1 containment scan + pruned stage-2 scoring
-# (DESIGN.md §5)
-# ----------------------------------------------------------------------------
-
-def _hits_block_single(qk_s, qm_s, kh, mask):
-    """Hit counts of one candidate block against the pre-sorted query keys.
-
-    The stage-1 twin of `_sortmerge_moments` with the query sort hoisted out
-    of the chunk loop (the query table is block-invariant): one binary
-    search per candidate slot, one reduction — no value traffic, no moment
-    sums (DESIGN.md §5)."""
-    PAD = jnp.uint32(0xFFFFFFFF)
-    ck = jnp.where(mask > 0, kh, PAD)                               # [C, n]
-    pos = jnp.clip(jnp.searchsorted(qk_s, ck.reshape(-1)),
-                   0, qk_s.shape[0] - 1).reshape(ck.shape)
-    hitc = (qk_s[pos] == ck) & (qm_s[pos] > 0) & (mask > 0)
-    return jnp.sum(hitc.astype(jnp.float32), axis=-1)               # [C]
-
-
-def _block_probes(q_kh, q_mask, dk):
-    """Probe the whole query batch against one block's sorted distinct-key
-    table ``dk [Mb]``. Returns ``flat [B·nq] i32``: the dk position of each
-    hit, or the sentinel ``Mb + 1`` for misses (one past the dump column, so
-    a size-``Mb+1`` scatter drops it as out-of-bounds). ``flat`` is the
-    whole probe state — both stages' membership tables scatter from it,
-    which is what lets stage 2 skip the binary search entirely."""
-    Mb = dk.shape[0]
-    PAD = jnp.uint32(0xFFFFFFFF)
-    qk = jnp.where(q_mask > 0, q_kh, PAD).reshape(-1)
-    pos = jnp.clip(jnp.searchsorted(dk, qk), 0, Mb - 1)
-    hit = (dk[pos] == qk) & (q_mask.reshape(-1) > 0) & (qk != PAD)
-    return jnp.where(hit, pos.astype(jnp.int32), jnp.int32(Mb + 1))
-
-
-def _block_bits(flat, B: int, T: int):
-    """Bit-packed membership table ``[T] u32``: bit b of slot t set iff
-    query row b holds distinct key t. One u32 scatter-add builds it (keys
-    are distinct within a row, so a bit is added at most once; misses index
-    out of bounds and are dropped); downstream consumers pay one u32 gather
-    for the whole batch instead of B float gathers — the memory-traffic
-    trick that makes stage 1 cheap (DESIGN.md §5). Requires B ≤ 32."""
-    nq = flat.shape[0] // B
-    bit = jnp.left_shift(jnp.uint32(1),
-                         jnp.repeat(jnp.arange(B, dtype=jnp.uint32), nq))
-    return jnp.zeros((T,), jnp.uint32).at[flat].add(bit)
-
-
-def _block_hittab(flat, B: int, T: int):
-    """Per-row float membership table ``[B, T]`` — the B > 32 fallback for
-    `_block_bits` (the exact structure `_sortmerge_moments_batched`
-    scatters internally)."""
-    nq = flat.shape[0] // B
-    row = jnp.repeat(jnp.arange(B, dtype=jnp.int32), nq) * T
-    vflat = jnp.where(flat < T, row + flat, B * T)
-    return jnp.zeros((B * T,), jnp.float32).at[vflat].set(1.0).reshape(B, T)
-
-
-def _block_vtab(flat, qv, B: int, T: int):
-    """Per-row query-value table ``[B, T]``: the value of row b's key at
-    distinct-key slot t (zero elsewhere). Scattered from the stage-1 probe
-    state, so stage 2 never re-searches."""
-    nq = flat.shape[0] // B
-    row = jnp.repeat(jnp.arange(B, dtype=jnp.int32), nq) * T
-    vflat = jnp.where(flat < T, row + flat, B * T)
-    return jnp.zeros((B * T,), jnp.float32).at[vflat].set(qv).reshape(B, T)
-
-
-def _w_from_bits(bits_g, B: int):
-    """Expand gathered bit-packed membership (u32 ``[...]``) into per-row
-    floats ``[B, ...]`` — B cheap vector ops replacing B float gathers."""
-    return jnp.stack([((bits_g >> jnp.uint32(b)) & jnp.uint32(1))
-                      .astype(jnp.float32) for b in range(B)])
-
-
-def _use_bits(B: int) -> bool:
-    return B <= 32
-
-
-def _hits_block_tables(q_kh, q_mask, kh, mask, prep):
-    """Stage-1 core for one candidate block (batched XLA sortmerge path):
-    probe → membership table → per-candidate hit counts via the per-slot
-    segment ids. Returns ``(hits [B, chunk], bits [T] u32, flat [B·nq])`` —
-    the tables are handed to stage 2 so the probe work is paid once per
-    dispatch, not once per stage (DESIGN.md §5).
-
-    Exactness: a hit bit is set exactly for (row, distinct key) membership,
-    and every valid candidate slot maps to its key's table slot (invalid
-    slots → the never-written dump column), so the count equals the exact
-    sketch intersection size — the scoring path's sample size ``m``."""
-    B = q_kh.shape[0]
-    if prep is None:
-        dk, sid = _prep_block(kh, mask)
-    else:
-        dk, sid = prep
-    Mb = dk.size
-    T = Mb + 1
-    flat = _block_probes(q_kh, q_mask, dk.reshape(-1))
-    if _use_bits(B):
-        bits = _block_bits(flat, B, T)
-        bg = jnp.take(bits, sid.reshape(-1)).reshape(kh.shape)     # [chunk, n]
-        hits = _w_from_bits(bg, B).sum(-1)
-    else:
-        bits = jnp.zeros((T,), jnp.uint32)      # stage 2 rebuilds from flat
-        tab = _block_hittab(flat, B, T)
-        w = jnp.take(tab, sid.reshape(-1), axis=-1).reshape(
-            (B,) + kh.shape)
-        hits = w.sum(-1)
-    return hits, bits, flat
-
-
-def _shard_hits(q_kh, q_mask, shard: IndexShard, qcfg: QueryConfig,
-                prep: Optional[PreppedShard] = None,
-                emit_tables: bool = False):
-    """Stage-1 scan: exact sketch-intersection sizes for every candidate in
-    a shard, chunked exactly like `_shard_stats` (same ``score_chunk``
-    blocks, so the precomputed `PreppedShard` is shared between stages).
-    Returns hits ``[..., C]`` — by key-distinctness this *is* the
-    sketch-join sample size ``m`` the scoring path would compute, which is
-    what makes ``prune='safe'`` correctness-preserving (DESIGN.md §5).
-
-    ``emit_tables`` (batched XLA-sortmerge only) additionally returns the
-    per-block probe state ``(bits [nb, T], flat [nb, B·nq])`` for the
-    stage-2 program to reuse."""
-    batched = q_kh.ndim == 2
-    C = shard.key_hash.shape[0]
-    chunk, pad, nb = _chunk_layout(C, qcfg.score_chunk)
-    kh, mask = shard.key_hash, shard.mask
-    if pad:
-        kh = jnp.pad(kh, ((0, pad), (0, 0)), constant_values=_PAD_KEY)
-        mask = jnp.pad(mask, ((0, pad), (0, 0)))
-    Cp = C + pad
-    if prep is not None:
-        assert prep.dk.shape[0] == Cp, (prep.dk.shape, Cp)
-
-    sortmerge = (qcfg.kernels.backend == "xla"
-                 and qcfg.intersect == "sortmerge")
-    assert not emit_tables or (batched and sortmerge), \
-        "probe tables exist only on the batched sortmerge path"
-    if sortmerge and not batched:
-        PAD = jnp.uint32(0xFFFFFFFF)
-        q_eff = jnp.where(q_kh != PAD, q_mask, 0.0)
-        qk = jnp.where(q_eff > 0, q_kh, PAD)
-        order = jnp.argsort(qk)
-        qk_s = qk[order]
-        qm_s = q_eff[order]
-        block = lambda ckh, cmask, cprep: _hits_block_single(
-            qk_s, qm_s, ckh, cmask)
-    elif sortmerge:
-        block = lambda ckh, cmask, cprep: _hits_block_tables(
-            q_kh, q_mask, ckh, cmask, cprep)
-    elif batched:
-        block = lambda ckh, cmask, cprep: K.containment_hits_batched(
-            q_kh, q_mask, ckh, cmask, qcfg.kernels)
-    else:
-        block = lambda ckh, cmask, cprep: K.containment_hits(
-            q_kh, q_mask, ckh, cmask, qcfg.kernels)
-
-    have_prep = prep is not None and sortmerge and batched
-    tables = sortmerge and batched
-    if nb > 1:
-        resh = lambda a: a.reshape((nb, chunk) + a.shape[1:])
-        blocks_prep = ((resh(prep.dk), resh(prep.sid)) if have_prep
-                       else (jnp.zeros((nb, 0)), jnp.zeros((nb, 0))))
-
-        def one(args):
-            ckh, cmask, cdk, csid = args
-            return block(ckh, cmask, (cdk, csid) if have_prep else None)
-
-        out = jax.lax.map(one, (resh(kh), resh(mask), *blocks_prep))
-        hits = out[0] if tables else out
-        # lax.map stacks the chunk axis in front: [nb, ..., chunk] → [..., Cp]
-        hits = jnp.moveaxis(hits, 0, -2).reshape(q_kh.shape[:-1] + (Cp,))
-        hits = hits[..., :C]
-        if emit_tables:
-            return hits, out[1], out[2]
-        return hits
-    out = block(kh, mask, (prep.dk, prep.sid) if have_prep else None)
-    hits = (out[0] if tables else out)[..., :C]
-    if emit_tables:
-        return hits, out[1][None], out[2][None]
-    return hits
+    _deprecated("make_query_fn", "make_scan_fn")
+    shape, ops = _split(qcfg)
+    fn = PL.make_scan_fn(mesh, C_total, n, shape, batch=batch,
+                         with_prep=with_prep)
+    return lambda *args: fn(*args, ops)
 
 
 def make_stage1_fn(mesh, C_total: int, n: int, qcfg: QueryConfig,
                    batch: Optional[int] = None, with_prep: bool = False,
                    emit_tables: bool = False):
-    """Build the jitted stage-1 containment-scan program (DESIGN.md §5):
-    query arrays + sharded index → per-candidate hit counts ``[.., C_total]``
-    (sharded along the candidate axis, gathered to the host by the caller).
-    Same signature discipline as
-    `make_query_fn` — the full query-array tuple plus an optional trailing
-    `PreppedShard`. The hit counts are *exact* (not estimates), see
-    `_shard_hits`; turning them into containment/Jaccard/join-size
-    estimates is host-side math (`repro.core.containment`).
-
-    ``emit_tables`` makes the program also return the device-resident probe
-    state ``(bits [nb·ndev, T] u32, flat [nb·ndev, B·n_q] i32)`` that
-    `make_pruned_query_fn` consumes — the binary searches and membership
-    scatters of a dispatch are then paid exactly once across both stages."""
-    axes = tuple(mesh.axis_names)
-    ndev = int(mesh.devices.size)
-    assert C_total % ndev == 0
-    assert not (with_prep and batch is None), "prep applies to the batched path"
-    assert not emit_tables or batch is not None
-
-    def local(q_kh, q_val, q_mask, q_cmin, q_cmax, shard: IndexShard, *rest):
-        if batch is not None:
-            assert q_kh.shape[0] == batch, (q_kh.shape, batch)
-        else:
-            assert q_kh.ndim == 1, q_kh.shape
-        return _shard_hits(q_kh, q_mask, shard, qcfg,
-                           prep=rest[0] if rest else None,
-                           emit_tables=emit_tables)
-
-    spec_sharded = P(axes)
-    shard_specs = IndexShard(
-        key_hash=spec_sharded, values=spec_sharded, mask=spec_sharded,
-        col_min=spec_sharded, col_max=spec_sharded, rows=spec_sharded)
-    in_specs = (P(), P(), P(), P(), P(), shard_specs)
-    if with_prep:
-        in_specs += (PreppedShard(dk=spec_sharded, sid=spec_sharded),)
-    hits_spec = P(axes) if batch is None else P(None, axes)
-    out_specs = ((hits_spec, P(axes), P(axes)) if emit_tables else hits_spec)
-    fn = shard_map(local, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
-                   check_rep=False)
-    return jax.jit(fn)
-
-
-def _gathered_stats(a, w, values_g, cmin_g, cmax_g, q_cmin, q_cmax,
-                    qcfg: QueryConfig):
-    """(aligned query values, membership, gathered candidate side) → per-
-    candidate (r, m, ci_len), mirroring `_score_block` + `_shard_stats`
-    arithmetic: every per-slot float is the same untouched value the full
-    scan would see, and ``m`` (integer-valued sums of {0,1}) is exactly
-    equal. Real-valued scores agree to within a few ulps — XLA may order
-    the slot reductions differently across program shapes."""
-    b = values_g * w
-    mom = jnp.stack([w.sum(-1), a.sum(-1), b.sum(-1), (a * a).sum(-1),
-                     (b * b).sum(-1), (a * b).sum(-1)], -1)
-    if qcfg.estimator == "spearman":
-        ra = _rank_rows(a, w, qcfg)
-        rb = _rank_rows(b, w, qcfg)
-        r = K.pearson_from_moments(_moments_from(ra, rb, w))
-    else:
-        r = K.pearson_from_moments(mom)
-    m = mom[..., 0]
-    c_lo = jnp.minimum(q_cmin[..., None], cmin_g)
-    c_hi = jnp.maximum(q_cmax[..., None], cmax_g)
-    lo, hi = K.hoeffding_from_moments(mom, c_lo, c_hi, alpha=qcfg.alpha)
-    return r, m, hi - lo
-
-
-def _topk_gathered(s, r, m, gids, k, M, axes):
-    """Local top-k over gathered survivors + cross-device combine (the same
-    O(devices × k) all-gather as `make_query_fn`); ``gids`` must already be
-    global index-space ids."""
-    kk = min(k, M)
-    top_s, top_i = jax.lax.top_k(s, kk)
-    top_g = jnp.take_along_axis(jnp.broadcast_to(gids, s.shape), top_i,
-                                axis=-1)
-    cat = s.ndim - 1
-    gather = lambda x: jax.lax.all_gather(x, axes, axis=cat, tiled=True)
-    all_s = gather(top_s)
-    all_g = gather(top_g)
-    all_r = gather(jnp.take_along_axis(r, top_i, axis=-1))
-    all_m = gather(jnp.take_along_axis(m, top_i, axis=-1))
-    fs, fi = jax.lax.top_k(all_s, k)
-    take = lambda x: jnp.take_along_axis(x, fi, axis=-1)
-    return fs, take(all_g), take(all_r), take(all_m)
+    """Deprecated: build the stage-1 containment-scan program; a thin
+    wrapper over `repro.engine.plans.make_probe_fn` (which is request-
+    independent, so nothing needs binding)."""
+    _deprecated("make_stage1_fn", "make_probe_fn")
+    shape, _ = _split(qcfg)
+    return PL.make_probe_fn(mesh, C_total, n, shape, batch=batch,
+                            with_prep=with_prep, emit_tables=emit_tables)
 
 
 def make_pruned_query_fn(mesh, C_total: int, n: int, qcfg: QueryConfig,
                          M: int, batch: Optional[int] = None,
                          with_prep: bool = False):
-    """Build the jitted stage-2 program: score only ``M`` gather-compacted
-    survivor columns of a ``C_total``-column index (DESIGN.md §5).
-
-    Signature: ``fn(q_kh, q_val, q_mask, q_cmin, q_cmax, shard, surv,
-    valid[, bits, flat, prep])`` — ``surv [M]`` holds global survivor
-    column ids (tail padded; ``valid [M]`` false there); ``bits``/``flat``
-    are the probe tables emitted by ``make_stage1_fn(..., emit_tables=True)``
-    for the *same* query batch, so this program re-does no binary search and
-    no membership scatter except the per-row value table. Everything runs on
-    device against the resident index — the host ships only the id vector.
-    Each device gathers the survivor rows it owns (others stay masked →
-    −inf → dropped by the cross-device top-k combine) and returns the usual
-    (scores, gids, r, m) with **gids already in index space**.
-
-    ``M`` must come from the fixed ladder ``prune_base · 2^i`` (see
-    `prune_rung`) so the compile cache stays O(log C); ``M ≥ k`` required.
-    """
-    axes = tuple(mesh.axis_names)
-    ndev = int(mesh.devices.size)
-    assert C_total % ndev == 0
-    C_local = C_total // ndev
-    assert qcfg.k <= M, (qcfg.k, M)
-    assert not (with_prep and batch is None), "prep applies to the batched path"
-    k = qcfg.k
-    chunk, _, nb = _chunk_layout(C_local, qcfg.score_chunk)
-    T = chunk * n + 1
-
-    def local(q_kh, q_val, q_mask, q_cmin, q_cmax, shard: IndexShard,
-              surv, valid, *rest):
-        if batch is not None:
-            assert q_kh.shape[0] == batch, (q_kh.shape, batch)
-        else:
-            assert q_kh.ndim == 1, q_kh.shape
-        lin = jax.lax.axis_index(axes[0])
-        for ax in axes[1:]:
-            lin = lin * jax.lax.axis_size(ax) + jax.lax.axis_index(ax)
-        loc = surv.astype(jnp.int32) - lin.astype(jnp.int32) * C_local
-        ok = valid & (loc >= 0) & (loc < C_local)
-        locc = jnp.clip(loc, 0, C_local - 1)
-        okf = ok.astype(jnp.float32)
-        batched = q_kh.ndim == 2
-
-        if with_prep and batched:
-            bits, flat, prep = rest
-            B = q_kh.shape[0]
-            qv = (q_val * q_mask).reshape(-1)
-            vtab = jax.lax.map(lambda f: _block_vtab(f, qv, B, T), flat)
-            vtab = jnp.moveaxis(vtab, 0, 1).reshape(B, nb * T)   # [B, nb·T]
-            if _use_bits(B):
-                wtab = None
-                bits_flat = bits.reshape(-1)                     # [nb·T]
-            else:
-                wtab = jax.lax.map(lambda f: _block_hittab(f, B, T), flat)
-                wtab = jnp.moveaxis(wtab, 0, 1).reshape(B, nb * T)
-            sid_g = jnp.where(ok[:, None], prep.sid[locc], chunk * n)
-            blk = jnp.clip(locc // chunk, 0, nb - 1)
-            gidx = blk[:, None] * T + sid_g                      # [M, n]
-            values_g = shard.values[locc] * okf[:, None]
-            cmin_g = jnp.where(ok, shard.col_min[locc], 0.0)
-            cmax_g = jnp.where(ok, shard.col_max[locc], 0.0)
-
-            # stream survivors in score_chunk blocks — bounds the [B, ·, n]
-            # aligned-value tensors exactly like the full scan's streaming;
-            # the s4 normalisation runs once over all M below
-            cs = min(qcfg.score_chunk, M)
-            mpad = (-M) % cs
-            mb = (M + mpad) // cs
-            padb = lambda x: (jnp.pad(x, ((0, mpad),) + ((0, 0),) *
-                                      (x.ndim - 1)) if mpad else x)
-
-            def one(args):
-                gi, vg, cl, ch = args
-                a = jnp.take(vtab, gi.reshape(-1), axis=-1).reshape(B, cs, n)
-                if _use_bits(B):
-                    bg = jnp.take(bits_flat, gi.reshape(-1)).reshape(cs, n)
-                    w = _w_from_bits(bg, B)
-                else:
-                    w = jnp.take(wtab, gi.reshape(-1),
-                                 axis=-1).reshape(B, cs, n)
-                return _gathered_stats(a, w, vg[None], cl[None], ch[None],
-                                       q_cmin, q_cmax, qcfg)
-
-            if mb > 1:
-                blocks = (padb(gidx).reshape(mb, cs, n),
-                          padb(values_g).reshape(mb, cs, n),
-                          padb(cmin_g).reshape(mb, cs),
-                          padb(cmax_g).reshape(mb, cs))
-                r, m, ci_len = jax.lax.map(one, blocks)
-                mv = lambda x: jnp.moveaxis(x, 0, -2).reshape(
-                    (B, M + mpad))[..., :M]
-                r, m, ci_len = mv(r), mv(m), mv(ci_len)
-            else:
-                r, m, ci_len = one((gidx, values_g, cmin_g, cmax_g))
-            s = _scores_from_stats(r, m, ci_len, qcfg, axis_names=axes)
-        else:
-            # generic path (single-query / eq-matrix / Pallas backends):
-            # gather the survivor sub-shard and run the ordinary scorer on it
-            sub = IndexShard(
-                key_hash=jnp.where(ok[:, None], shard.key_hash[locc],
-                                   _PAD_KEY),
-                values=shard.values[locc] * okf[:, None],
-                mask=shard.mask[locc] * okf[:, None],
-                col_min=jnp.where(ok, shard.col_min[locc], 0.0),
-                col_max=jnp.where(ok, shard.col_max[locc], 0.0),
-                rows=shard.rows[locc] * okf)
-            s, r, m, _ = score_shard(q_kh, q_val, q_mask, q_cmin, q_cmax,
-                                     sub, qcfg, axis_names=axes, prep=None)
-
-        return _topk_gathered(s, r, m, surv.astype(jnp.int32), k, M, axes)
-
-    spec_sharded = P(axes)
-    shard_specs = IndexShard(
-        key_hash=spec_sharded, values=spec_sharded, mask=spec_sharded,
-        col_min=spec_sharded, col_max=spec_sharded, rows=spec_sharded)
-    in_specs = (P(), P(), P(), P(), P(), shard_specs, P(), P())
-    if with_prep:
-        in_specs += (P(axes), P(axes),
-                     PreppedShard(dk=spec_sharded, sid=spec_sharded))
-    fn = shard_map(local, mesh=mesh, in_specs=in_specs,
-                   out_specs=(P(), P(), P(), P()),
-                   check_rep=False)  # outputs are replicated by construction
-    return jax.jit(fn)
+    """Deprecated: build the stage-2 pruned-scoring program for ladder rung
+    ``M``; a thin wrapper over `repro.engine.plans.make_pruned_fn` with the
+    config's request operands pre-bound."""
+    _deprecated("make_pruned_query_fn", "make_pruned_fn")
+    shape, ops = _split(qcfg)
+    fn = PL.make_pruned_fn(mesh, C_total, n, shape, M, batch=batch,
+                           with_prep=with_prep)
+    return lambda *args: fn(*args, ops)
 
 
 def make_topm_query_fn(mesh, C_total: int, n: int, qcfg: QueryConfig,
                        batch: int, with_prep: bool = False):
-    """Build the fused ``prune='topm'`` program: stage 1, per-row top-M
-    survivor selection, gathering and stage-2 scoring in **one dispatch**
-    (DESIGN.md §5) — no host round-trip, because the survivor count is the
-    static ``qcfg.prune_m`` per device.
-
-    Semantics: each query row keeps its own M best candidates *per device
-    shard* by exact intersection size (ties → lower id, `lax.top_k`), so
-    the final result is the top-k over the union of per-shard top-Ms. A
-    candidate outside a row's top-M is not scored for that row — with
-    ``prune_m ≥`` the row's eligible-candidate count this is every candidate
-    that could score at all, and results match the full scan; smaller
-    ``prune_m`` trades recall for latency (the s4 list-normalisation then
-    spans the row's survivor list, like a per-segment list in
-    `repro.engine.lifecycle`)."""
-    axes = tuple(mesh.axis_names)
-    ndev = int(mesh.devices.size)
-    assert C_total % ndev == 0
-    C_local = C_total // ndev
-    k = qcfg.k
-    M = max(min(int(qcfg.prune_m), C_local), min(k, C_local))
-    chunk, _, nb = _chunk_layout(C_local, qcfg.score_chunk)
-    T = chunk * n + 1
-    B = int(batch)
-
-    def local(q_kh, q_val, q_mask, q_cmin, q_cmax, shard: IndexShard, *rest):
-        assert q_kh.shape[0] == B, (q_kh.shape, B)
-        lin = jax.lax.axis_index(axes[0])
-        for ax in axes[1:]:
-            lin = lin * jax.lax.axis_size(ax) + jax.lax.axis_index(ax)
-        prep = rest[0] if rest else None
-
-        if with_prep:
-            hits, bits, flat = _shard_hits(q_kh, q_mask, shard, qcfg,
-                                           prep=prep, emit_tables=True)
-        else:
-            hits = _shard_hits(q_kh, q_mask, shard, qcfg, prep=prep)
-        hits = jnp.where(
-            hits >= hoeffding_eligibility_floor(qcfg.min_sample), hits, -1.0)
-        _, ids = jax.lax.top_k(hits, M)                           # [B, M]
-
-        if with_prep:
-            qv = (q_val * q_mask).reshape(-1)
-            vtab = jax.lax.map(lambda f: _block_vtab(f, qv, B, T), flat)
-            vtab = jnp.moveaxis(vtab, 0, 1).reshape(B, nb * T)
-            sid_g = prep.sid[ids]                                 # [B, M, n]
-            blk = jnp.clip(ids // chunk, 0, nb - 1)
-            gidx = (blk[..., None] * T + sid_g).reshape(B, M * n)
-            a = jnp.take_along_axis(vtab, gidx, axis=-1).reshape(B, M, n)
-            if _use_bits(B):
-                bg = jnp.take(bits.reshape(-1), gidx)             # [B, M·n]
-                w = jnp.stack([((bg[b] >> jnp.uint32(b)) & jnp.uint32(1))
-                               .astype(jnp.float32) for b in range(B)])
-                w = w.reshape(B, M, n)
-            else:
-                wtab = jax.lax.map(lambda f: _block_hittab(f, B, T), flat)
-                wtab = jnp.moveaxis(wtab, 0, 1).reshape(B, nb * T)
-                w = jnp.take_along_axis(wtab, gidx, axis=-1).reshape(B, M, n)
-            take_rows = lambda x: jnp.take(x, ids.reshape(-1),
-                                           axis=0).reshape((B, M) +
-                                                           x.shape[1:])
-            values_g = take_rows(shard.values)
-            cmin_g = take_rows(shard.col_min)
-            cmax_g = take_rows(shard.col_max)
-            r, m, ci_len = _gathered_stats(a, w, values_g, cmin_g, cmax_g,
-                                           q_cmin, q_cmax, qcfg)
-        else:
-            # per-row candidate sets: score each row's gathered sub-sketches
-            # with the single-query kernels (vmapped over the batch)
-            take_rows = lambda x: jnp.take(x, ids.reshape(-1),
-                                           axis=0).reshape((B, M) +
-                                                           x.shape[1:])
-            ckh = take_rows(shard.key_hash)
-            cvals = take_rows(shard.values)
-            cmask = take_rows(shard.mask)
-            mom, r = jax.vmap(
-                lambda qk1, qv1, qm1, a1, b1, c1: _score_block(
-                    qk1, qv1, qm1, a1, b1, c1, qcfg))(
-                        q_kh, q_val, q_mask, ckh, cvals, cmask)
-            m = mom[..., 0]
-            c_lo = jnp.minimum(q_cmin[:, None], take_rows(shard.col_min))
-            c_hi = jnp.maximum(q_cmax[:, None], take_rows(shard.col_max))
-            lo, hi = K.hoeffding_from_moments(mom, c_lo, c_hi,
-                                              alpha=qcfg.alpha)
-            ci_len = hi - lo
-        s = _scores_from_stats(r, m, ci_len, qcfg, axis_names=axes)
-        gids = ids.astype(jnp.int32) + lin.astype(jnp.int32) * C_local
-        return _topk_gathered(s, r, m, gids, k, M, axes)
-
-    spec_sharded = P(axes)
-    shard_specs = IndexShard(
-        key_hash=spec_sharded, values=spec_sharded, mask=spec_sharded,
-        col_min=spec_sharded, col_max=spec_sharded, rows=spec_sharded)
-    in_specs = (P(), P(), P(), P(), P(), shard_specs)
-    if with_prep:
-        in_specs += (PreppedShard(dk=spec_sharded, sid=spec_sharded),)
-    fn = shard_map(local, mesh=mesh, in_specs=in_specs,
-                   out_specs=(P(), P(), P(), P()),
-                   check_rep=False)
-    return jax.jit(fn)
-
-
-def select_survivors(hits, qcfg: QueryConfig) -> np.ndarray:
-    """Host-side stage-1 → stage-2 candidate selection (DESIGN.md §5).
-
-    ``hits`` is ``[C]`` or ``[B, C]`` (a batch prunes to the *union* of its
-    rows' survivor sets — a non-survivor stays ineligible for the rows that
-    did not pick it, so per-row results are unaffected). Returns the sorted
-    survivor ids:
-
-    * ``prune='safe'`` — every candidate with ``hits ≥ min_sample`` for any
-      row. Candidates below the floor score −inf in the full scan
-      (`score_shard` eligibility, the §4.3 Hoeffding floor via
-      `repro.core.bounds.hoeffding_eligibility_floor`), so this never drops
-      a true top-k column;
-    * ``prune='topm'`` — per row, the ``prune_m`` eligible candidates with
-      the most hits (deterministic: stable sort, lower id wins ties). The
-      host-side reference of the fused on-device selection in
-      `make_topm_query_fn`.
-    """
-    h = np.atleast_2d(np.asarray(hits))
-    eligible = h >= hoeffding_eligibility_floor(qcfg.min_sample)
-    if qcfg.prune == "safe":
-        return np.nonzero(eligible.any(0))[0].astype(np.int32)
-    if qcfg.prune == "topm":
-        m = max(int(qcfg.prune_m), 1)
-        keep = np.zeros(h.shape[1], bool)
-        for row, okr in zip(h, eligible):
-            ids = np.argsort(-row, kind="stable")[:m]
-            keep[ids[okr[ids]]] = True
-        return np.nonzero(keep)[0].astype(np.int32)
-    raise ValueError(f"unknown prune mode {qcfg.prune!r}: use 'safe' or 'topm'")
-
-
-def prune_rung(n_survivors: int, base: int, C_padded: int,
-               ndev: int) -> Optional[int]:
-    """Smallest device-aligned rung of the ladder ``base · 2^i`` holding the
-    survivor set, or ``None`` when the rung would not beat the full scan
-    (≥ the padded index width) — the caller then falls back to the already
-    compiled full program. The fixed ladder keeps pruned dispatch shapes —
-    and therefore compiled stage-2 programs — logarithmic in C
-    (DESIGN.md §4)."""
-    r = max(int(base), 1)
-    while r < max(n_survivors, 1):
-        r *= 2
-    r += (-r) % ndev
-    return None if r >= C_padded else r
-
-
-def make_query_fn(mesh, C_total: int, n: int, qcfg: QueryConfig,
-                  batch: Optional[int] = None, with_prep: bool = False):
-    """Build the jitted distributed query program for a given index shape
-    (paper Defn. 3 evaluated as the DESIGN.md §3 sharded scan).
-
-    ``batch=None`` keeps the legacy single-query signature (query arrays
-    ``[n]``, results ``[k]``). ``batch=B`` compiles a program that takes
-    query arrays with a leading ``[B]`` axis and returns ``[B, k]`` results
-    bit-identical to B sequential single-query calls, while scanning the
-    index once per dispatch instead of once per query. With
-    ``with_prep=True`` (batched only) the returned callable takes a trailing
-    `PreppedShard` operand (from ``make_prep_fn``) so the candidate sort
-    structure is resident instead of rebuilt per dispatch.
-    """
-    axes = tuple(mesh.axis_names)
-    ndev = int(mesh.devices.size)
-    assert C_total % ndev == 0
-    assert not (with_prep and batch is None), "prep applies to the batched path"
-    k = qcfg.k
-
-    def local(q_kh, q_val, q_mask, q_cmin, q_cmax, shard: IndexShard,
-              *rest):
-        if batch is not None:  # the advertised static batch size is binding
-            assert q_kh.shape[0] == batch, (q_kh.shape, batch)
-        else:
-            assert q_kh.ndim == 1, q_kh.shape
-        s, r, m, _ = score_shard(q_kh, q_val, q_mask, q_cmin, q_cmax, shard,
-                                 qcfg, axis_names=axes,
-                                 prep=rest[0] if rest else None)
-        Cl = s.shape[-1]
-        kk = min(k, Cl)
-        top_s, top_i = jax.lax.top_k(s, kk)
-        # global candidate ids: shard offset + local index
-        lin = jax.lax.axis_index(axes[0])
-        for ax in axes[1:]:
-            lin = lin * jax.lax.axis_size(ax) + jax.lax.axis_index(ax)
-        gids = top_i.astype(jnp.int32) + lin.astype(jnp.int32) * Cl
-        # gather the per-device top-k everywhere (tiny); concat on the
-        # candidate axis — the last one — so batched rows stay separate
-        cat = s.ndim - 1
-        gather = lambda x: jax.lax.all_gather(x, axes, axis=cat, tiled=True)
-        all_s = gather(top_s)
-        all_g = gather(gids)
-        all_r = gather(jnp.take_along_axis(r, top_i, axis=-1))
-        all_m = gather(jnp.take_along_axis(m, top_i, axis=-1))
-        fs, fi = jax.lax.top_k(all_s, k)
-        take = lambda x: jnp.take_along_axis(x, fi, axis=-1)
-        return fs, take(all_g), take(all_r), take(all_m)
-
-    spec_sharded = P(axes)
-    shard_specs = IndexShard(
-        key_hash=spec_sharded, values=spec_sharded, mask=spec_sharded,
-        col_min=spec_sharded, col_max=spec_sharded, rows=spec_sharded)
-    in_specs = (P(), P(), P(), P(), P(), shard_specs)
-    if with_prep:
-        in_specs += (PreppedShard(dk=spec_sharded, sid=spec_sharded),)
-    fn = shard_map(local, mesh=mesh, in_specs=in_specs,
-                   out_specs=(P(), P(), P(), P()),
-                   check_rep=False)  # outputs are replicated by construction
-    return jax.jit(fn)
+    """Deprecated: build the fused ``prune='topm'`` program; a thin wrapper
+    over `repro.engine.plans.make_topm_fn` with the config's request
+    operands pre-bound."""
+    _deprecated("make_topm_query_fn", "make_topm_fn")
+    shape, ops = _split(qcfg)
+    fn = PL.make_topm_fn(mesh, C_total, n, shape, batch=batch,
+                         with_prep=with_prep)
+    return lambda *args: fn(*args, ops)
 
 
 def query(index_shard: IndexShard, query_sketch, mesh, qcfg: QueryConfig):
     """Convenience one-shot query (paper Defn. 3; compiles per index
-    shape — serving layers cache programs instead, DESIGN.md §4)."""
+    shape — serving layers cache programs instead, DESIGN.md §4/§6)."""
     from repro.engine.index import query_arrays
     qa = query_arrays(query_sketch)
-    fn = make_query_fn(mesh, index_shard.num_columns, index_shard.sketch_size, qcfg)
-    return fn(*qa, index_shard)
+    shape, ops = _split(qcfg)
+    fn = PL.make_scan_fn(mesh, index_shard.num_columns,
+                         index_shard.sketch_size, shape)
+    return fn(*qa, index_shard, ops)

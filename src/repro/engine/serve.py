@@ -1,37 +1,38 @@
-"""Batched request serving on top of the distributed query engine.
+"""Unified request serving over the plan/executor engine (DESIGN.md §4/§6).
 
-The engine (`repro.engine.query`) compiles one program per (batch, index
-shape, config); this module is the request-facing layer that makes those
-programs serve an arbitrary query stream efficiently:
+One `Server` facade serves every index flavour:
 
+  * a static `repro.engine.index.SketchIndex` (or an already-placed
+    `IndexShard`) is treated as a **single-segment live index**;
+  * a mutating `repro.engine.lifecycle.LiveIndex` is served across its
+    segments with a deterministic cross-segment top-k combine and a
+    `refresh()` that picks up mutations.
+
+Under the facade, one `_SegmentExec` per resident segment shape dispatches
+the compiled plans of `repro.engine.plans`:
+
+  * **compile cache O(shapes)** — programs are keyed on (plan kind, bucket,
+    index shape, `ShapePolicy`); per-request semantics (k, scorer,
+    estimator, prune mode, α, eligibility floor) ride in as traced operands
+    or host-side slices, so a post-warmup request sweep over every scorer ×
+    estimator × k ≤ k_max × prune mode triggers **zero compiles**
+    (`CompileCache.misses` is the counter the tests pin);
   * **batched sketch construction** — incoming query columns are cut into
     fixed-length row chunks, sketched with one vmapped `build_sketch` call,
-    and the per-query chunk sketches folded with the (exact) KMV merge;
-  * **pad-to-bucket batching** — request batches are padded up to a small
-    set of bucket sizes (default 1/8/32) so the compile cache stays tiny
-    while any batch size is served;
-  * **compile cache** — programs are cached on ``(B, C, n, qcfg)``; warming
-    the buckets once makes every later dispatch compile-free;
+    and folded with the (exact) KMV merge;
+  * **pad-to-bucket batching** + **measured-cost planning** — request
+    batches are covered by the cheapest mix of warmed bucket dispatches
+    (exact DP over `warmup()` timings);
   * **per-bucket score_chunk** — large batches shrink the candidate block so
-    the ``[B, chunk, n]`` intersect intermediates stay cache-resident
-    (``B × chunk`` is held ≈ constant); without this, B=32 dispatches run
-    ~2× slower per query than B=8 on cache-bound hosts;
-  * **measured-cost planning** — `warmup()` times each bucket program, and
-    `query_batch` covers a request batch with the cheapest mix of bucket
-    dispatches under those measured costs instead of always padding to the
-    largest bucket;
-  * **two-stage retrieval** (``qcfg.prune != 'off'``, DESIGN.md §5) —
-    ``safe`` dispatches run the cheap stage-1 containment scan
-    (`repro.engine.query.make_stage1_fn`), select survivors on the host,
-    then gather-compact and score them on device against the resident index
-    and the stage-1 probe tables (`make_pruned_query_fn`); ``topm`` fuses
-    selection and scoring into one dispatch (`make_topm_query_fn`).
-    Survivor shapes come from the fixed ``prune_base · 2^i`` ladder so
-    `warmup()` leaves nothing to compile;
+    the ``[B, chunk, n]`` intersect intermediates stay cache-resident;
+  * **two-stage retrieval** (``Request.prune``, DESIGN.md §5) — ``safe``
+    dispatches probe → host filter → gather-compacted scoring on the fixed
+    ``prune_base · 2^i`` rung ladder; ``topm`` dispatches the fused plan;
   * **joinability-only queries** — `search_joinable` serves the paper's
-    *first* stage (§2/Defn. 3: "tables joinable with T_Q on K_Q") as a
-    standalone workload: top-k by containment/Jaccard/join-size with
-    Hoeffding CIs, never touching the value planes.
+    *first* stage (§2/Defn. 3) as a standalone workload.
+
+`QueryServer` (here) and `repro.engine.lifecycle.LiveQueryServer` survive
+only as deprecated aliases of `Server`.
 
 Padding rows are copies of the last real query; because the s4 normalisation
 is per query row, they cannot perturb real results, and they are sliced off
@@ -42,6 +43,7 @@ from __future__ import annotations
 import dataclasses
 import functools
 import time
+import warnings
 from collections import deque
 from typing import Deque, Dict, List, Optional, Sequence, Tuple
 
@@ -51,9 +53,11 @@ import numpy as np
 
 from repro.core import containment as CT
 from repro.core.sketch import Agg, CorrelationSketch, build_sketch, merge
+from repro.engine import plans as PL
 from repro.engine import query as Q
 from repro.engine.index import (IndexShard, KeyMinima, SketchIndex,
-                                key_minima, precompute_prep, query_arrays)
+                                key_minima, place_shard, precompute_prep,
+                                query_arrays, shard_for_mesh)
 
 
 def build_query_sketches(keys_list: Sequence[np.ndarray],
@@ -115,14 +119,15 @@ def build_query_sketches(keys_list: Sequence[np.ndarray],
 
 
 class CompileCache:
-    """Shared program cache for the serving layers (DESIGN.md §4).
+    """Shared program cache for the serving layers (DESIGN.md §4/§6).
 
     Maps a hashable program key → built (jitted) callable, counting misses:
     every miss is a program construction, i.e. an XLA compile at first
     dispatch, so ``misses`` is the serving layer's compile counter — the
-    lifecycle tests assert it stays flat across index mutations. One cache
-    can back many `QueryServer`s (the segment-aware dispatch of
-    `repro.engine.lifecycle`), so segments with equal shapes share programs.
+    lifecycle and plan tests assert it stays flat across index mutations
+    *and* across per-request semantic sweeps. One cache can back many
+    segment executors (and many `Server`s), so segments with equal shapes
+    share programs.
     """
 
     def __init__(self):
@@ -192,54 +197,47 @@ class JoinabilityResult:
 JOIN_METRICS = ("containment", "jaccard", "join_size", "hits")
 
 
-class QueryServer:
-    """Bucketed multi-query serving over one resident sharded index
-    (the request-facing layer of DESIGN.md §4; two-stage retrieval and
-    joinability search per DESIGN.md §5).
+class _SegmentExec:
+    """Plan executor for one resident (shard, `ShapePolicy`) pair — the
+    engine room behind `Server` (one per segment on a live index, exactly
+    one for a static index).
 
-    ``index``: optional `SketchIndex` host handle — when given, the
-    candidate sort structure (`PreppedShard`) is looked up in / persisted to
-    ``index.prep_cache`` so every server (and every bucket's score_chunk)
-    shares one copy per layout. ``batch_rows``: per-dispatch candidate-row
-    budget — the effective ``score_chunk`` of a bucket is shrunk toward
-    ``batch_rows / B`` (floored at 64 rows, never raised above the
-    configured value), keeping the ``[B, chunk, n]`` intersect tensors
-    cache-resident at large B (defaults to ``8 × qcfg.score_chunk``, i.e.
-    buckets up to 8 run the configured chunk unchanged).
+    Owns the bucketed dispatch loop: program lookup in the shared
+    `CompileCache` (keys carry only compile-relevant shape — see `_key`),
+    the per-bucket `PreppedShard`s, measured-cost bucket planning, the
+    two-stage dispatch plumbing and per-dispatch telemetry. Request
+    semantics arrive per call as a `repro.engine.plans.Request`.
     """
 
-    def __init__(self, mesh, shard: IndexShard, qcfg: Q.QueryConfig,
+    def __init__(self, mesh, shard: IndexShard, shape: PL.ShapePolicy,
                  buckets: Sequence[int] = (1, 8, 32), prep=None,
                  index: Optional[SketchIndex] = None,
                  batch_rows: Optional[int] = None,
                  cache: Optional[CompileCache] = None):
         self.mesh = mesh
         self.shard = shard
-        self.qcfg = qcfg
-        self.index = index
         self.buckets = tuple(sorted(set(int(b) for b in buckets)))
         assert self.buckets and all(b > 0 for b in self.buckets)
-        self.batch_rows = int(batch_rows or 8 * qcfg.score_chunk)
+        self.batch_rows = int(batch_rows or 8 * shape.score_chunk)
         self.C = shard.num_columns
         self.n = shard.sketch_size
-        #: program cache — pass a shared `CompileCache` to pool compiled
-        #: programs (and the compile counter) across servers/segments
+        # clamp the static rank width to the candidate count: a segment
+        # smaller than k_max still serves (the facade pads rows back out)
+        if shape.k_max > self.C:
+            shape = dataclasses.replace(shape, k_max=self.C)
+        self.shape = shape
+        self.k_max = shape.k_max
+        self.index = index
         self.cache = cache if cache is not None else CompileCache()
         #: PreppedShards keyed by effective score_chunk; a legacy ``prep``
         #: argument seeds the base-chunk entry
         self._preps: Dict[int, object] = {}
         if prep is not None:
-            self._preps[qcfg.score_chunk] = prep
+            self._preps[shape.score_chunk] = prep
         # only the XLA sortmerge intersect consumes the precomputed sort
         # structure; don't build/ship two index-sized arrays otherwise
-        self._use_prep = (qcfg.kernels.backend == "xla"
-                          and qcfg.intersect == "sortmerge")
-        if qcfg.prune not in ("off", "safe", "topm"):
-            raise ValueError(f"unknown prune mode {qcfg.prune!r}: "
-                             "use 'off', 'safe' or 'topm'")
-        #: two-stage retrieval switch (DESIGN.md §5): 'off' dispatches the
-        #: classic full scan, bit-identical to pre-prune serving
-        self._prune = qcfg.prune != "off"
+        self._use_prep = (shape.kernels.backend == "xla"
+                          and shape.intersect == "sortmerge")
         #: per-candidate KMV key-minima layout (joinability estimates) and
         #: the index-constant D̂_C estimates derived from it; computed
         #: lazily from a host view of the shard
@@ -255,104 +253,103 @@ class QueryServer:
         self._total_dispatches = 0
         self._total_s = 0.0
 
-    # -- compile cache -------------------------------------------------------
-    def qcfg_for(self, B: int) -> Q.QueryConfig:
-        """Bucket-B query config: score_chunk shrunk toward the row budget
-        (floored at 64 rows, and never *raised* above the configured value —
-        a user-lowered score_chunk is a memory bound and stays binding)."""
-        chunk = min(self.qcfg.score_chunk, max(64, self.batch_rows // B))
-        if chunk == self.qcfg.score_chunk:
-            return self.qcfg
-        return dataclasses.replace(self.qcfg, score_chunk=chunk)
+    # -- shape policy per bucket ---------------------------------------------
+    def chunk_for(self, B: int) -> int:
+        """Bucket-B score_chunk: shrunk toward the row budget (floored at 64
+        rows, and never *raised* above the configured value — a user-lowered
+        score_chunk is a memory bound and stays binding)."""
+        return min(self.shape.score_chunk, max(64, self.batch_rows // B))
 
+    def shape_for(self, B: int) -> PL.ShapePolicy:
+        chunk = self.chunk_for(B)
+        if chunk == self.shape.score_chunk:
+            return self.shape
+        return dataclasses.replace(self.shape, score_chunk=chunk)
+
+    def _key(self, kind: str, B: int, extra: tuple = ()) -> tuple:
+        """Compile-cache key: plan kind + bucket + index shape + the
+        compile-relevant shape policy — and **nothing request-shaped**."""
+        sh = self.shape_for(B)
+        return (kind, B, self.C, self.n, sh.score_chunk, sh.intersect,
+                sh.kernels, sh.k_max) + tuple(extra)
+
+    # -- compiled plans ------------------------------------------------------
     def prep(self, B: Optional[int] = None):
         """Device-resident candidate sort structure for bucket B's chunking
         (built once per (index, score_chunk) — a cache lookup when the index
         handle carries a persisted prep)."""
         if not self._use_prep:
             return None
-        qcfg = self.qcfg_for(B) if B is not None else self.qcfg
-        prep = self._preps.get(qcfg.score_chunk)
+        sh = self.shape_for(B) if B is not None else self.shape
+        prep = self._preps.get(sh.score_chunk)
         if prep is None:
             if self.index is not None:
-                prep = precompute_prep(self.index, self.mesh, self.shard, qcfg)
+                prep = precompute_prep(self.index, self.mesh, self.shard, sh)
             else:
                 fn = self.cache.get(
-                    ("prep", self.C, self.n, qcfg),
-                    lambda: Q.make_prep_fn(self.mesh, self.C, self.n, qcfg))
+                    ("prep", self.C, self.n, sh.score_chunk),
+                    lambda: PL.make_prep_fn(self.mesh, self.C, self.n, sh))
                 prep = jax.block_until_ready(fn(self.shard))
-            self._preps[qcfg.score_chunk] = prep
+            self._preps[sh.score_chunk] = prep
         return prep
 
-    def query_fn(self, B: int):
-        """The bucket-B full-scan program (`make_query_fn`), cache-shared
-        across servers with equal shapes (prune policy normalised out of
-        the key — it does not change the program)."""
-        qcfg = self._scan_qcfg(B)
-        key = ("query", B, self.C, self.n, qcfg)
+    def _prep_args(self, B: Optional[int] = None):
+        prep = self.prep(B)
+        return (prep,) if prep is not None else ()
+
+    def scan_fn(self, B: int):
+        """The bucket-B full-scan plan (`plans.make_scan_fn`) — one compiled
+        program for every scorer × estimator × α × floor × k ≤ k_max."""
         return self.cache.get(
-            key, lambda: Q.make_query_fn(self.mesh, self.C, self.n, qcfg,
-                                         batch=B, with_prep=self._use_prep))
+            self._key("scan", B),
+            lambda: PL.make_scan_fn(self.mesh, self.C, self.n,
+                                    self.shape_for(B), batch=B,
+                                    with_prep=self._use_prep))
 
-    # -- two-stage programs (DESIGN.md §5) -----------------------------------
-    def _scan_qcfg(self, B: int) -> Q.QueryConfig:
-        """Bucket-B config normalised for program identity: the prune policy
-        fields don't change what a scan/scoring program computes, so they
-        are reset to defaults — servers with different prune settings share
-        compiled programs for equal shapes."""
-        d = Q.QueryConfig()
-        return dataclasses.replace(self.qcfg_for(B), prune="off",
-                                   prune_m=d.prune_m, prune_base=d.prune_base)
-
-    def stage1_fn(self, B: int, emit_tables: bool = False):
-        """Stage-1 containment-scan program for bucket B (hits ``[B, C]``);
-        with ``emit_tables`` it also returns the probe state the stage-2
-        program reuses (only meaningful on the prep-backed sortmerge path)."""
+    def probe_fn(self, B: int, emit_tables: bool = False):
+        """Stage-1 containment-scan plan for bucket B (hits ``[B, C]``);
+        with ``emit_tables`` it also returns the probe state the pruned
+        plan reuses (only meaningful on the prep-backed sortmerge path)."""
         emit = emit_tables and self._use_prep
-        qcfg = self._scan_qcfg(B)
-        key = ("stage1", B, self.C, self.n, qcfg, emit)
         return self.cache.get(
-            key, lambda: Q.make_stage1_fn(self.mesh, self.C, self.n, qcfg,
-                                          batch=B, with_prep=self._use_prep,
-                                          emit_tables=emit))
+            self._key("probe", B, (emit,)),
+            lambda: PL.make_probe_fn(self.mesh, self.C, self.n,
+                                     self.shape_for(B), batch=B,
+                                     with_prep=self._use_prep,
+                                     emit_tables=emit))
 
-    def stage2_fn(self, B: int, M: int):
-        """Pruned scoring program for ladder rung M: survivors are gathered
+    def prune_fn(self, B: int, M: int):
+        """Pruned scoring plan for ladder rung M: survivors are gathered
         and scored on device against the resident shard + the stage-1 probe
-        tables (`repro.engine.query.make_pruned_query_fn`)."""
-        qcfg = self._scan_qcfg(B)
-        key = ("stage2", B, self.C, self.n, M, qcfg)
+        tables (`plans.make_pruned_fn`)."""
         return self.cache.get(
-            key, lambda: Q.make_pruned_query_fn(self.mesh, self.C, self.n,
-                                                qcfg, M, batch=B,
-                                                with_prep=self._use_prep))
+            self._key("prune", B, (M,)),
+            lambda: PL.make_pruned_fn(self.mesh, self.C, self.n,
+                                      self.shape_for(B), M, batch=B,
+                                      with_prep=self._use_prep))
 
     def topm_fn(self, B: int):
-        """Fused single-dispatch ``prune='topm'`` program (stage 1 + on-
-        device per-row top-M + scoring, `make_topm_query_fn`). Keyed on
-        ``prune_m`` — it is the program's static survivor width — but not
-        on the inert ``prune_base``."""
-        qcfg = dataclasses.replace(self._scan_qcfg(B),
-                                   prune_m=self.qcfg.prune_m)
-        key = ("topm", B, self.C, self.n, qcfg)
+        """Fused single-dispatch ``prune='topm'`` plan (`plans.make_topm_fn`).
+        Keyed on ``prune_m`` — the program's static survivor width."""
         return self.cache.get(
-            key, lambda: Q.make_topm_query_fn(self.mesh, self.C, self.n,
-                                              qcfg, batch=B,
-                                              with_prep=self._use_prep))
+            self._key("topm", B, (self.shape.prune_m,)),
+            lambda: PL.make_topm_fn(self.mesh, self.C, self.n,
+                                    self.shape_for(B), batch=B,
+                                    with_prep=self._use_prep))
 
     def prune_rungs(self) -> List[int]:
         """The fixed survivor-capacity ladder ``prune_base · 2^i``
         (device-aligned, strictly below the full index width). Rungs under
-        ``k`` are skipped — `prune_rung` targets ``max(survivors, k)``, so a
-        dispatch can never pick one."""
+        ``k_max`` are skipped — `plans.prune_rung` targets
+        ``max(survivors, k_max)``, so a dispatch can never pick one."""
         ndev = int(self.mesh.devices.size)
         rungs: List[int] = []
-        r = max(int(self.qcfg.prune_base), 1)
+        r = max(int(self.shape.prune_base), 1)
         while True:
             ra = r + (-r) % ndev
             if ra >= self.C:
                 break
-            if r >= self.qcfg.k and (not rungs or rungs[-1] != ra):
+            if r >= self.k_max and (not rungs or rungs[-1] != ra):
                 rungs.append(ra)
             r *= 2
         return rungs
@@ -363,73 +360,91 @@ class QueryServer:
                 jnp.zeros((B, self.n), jnp.float32),
                 jnp.zeros((B,), jnp.float32), jnp.zeros((B,), jnp.float32))
 
-    def warmup(self, cost_reps: int = 2, joinability: bool = False):
-        """Compile every bucket program once (zero-row dummy queries) and
-        measure its dispatch cost, so `plan_batches` can pick buckets from
+    # -- warmup --------------------------------------------------------------
+    def warmup(self, cost_reps: int = 2, modes: Sequence[str] = ("off",),
+               joinability: bool = False, cost_mode: Optional[str] = None,
+               request: Optional[PL.Request] = None):
+        """Compile the plans of every requested prune ``mode`` for every
+        bucket (zero-row dummy queries) and measure the ``cost_mode``
+        plan's dispatch cost, so `plan_batches` can pick buckets from
         observed per-query cost instead of assuming bigger is cheaper.
 
-        ``prune='safe'`` additionally compiles the emit-tables stage-1 scan
-        and every (bucket, rung) stage-2 program — the rung set is fixed a
-        priori, so mutations of the *survivor count* at serve time never
-        trigger a compile (``cache.misses`` stays flat after warmup, same
-        contract as the segment ladder of `repro.engine.lifecycle`).
-        ``prune='topm'`` compiles only its fused program (it never
-        dispatches the full scan). Pass ``joinability=True`` to also
-        pre-warm the `search_joinable` scan (otherwise the first joinability
-        request on an ``off``/``topm`` server pays that compile; ``safe``
-        servers reuse their warmed stage-1 program either way)."""
-        rungs = self.prune_rungs() if self.qcfg.prune == "safe" else []
-        for B in self.buckets:
-            qa = self._dummy_queries(B)
-            args = qa + (self.shard,) + self._prep_args(B)
-            if self.qcfg.prune == "topm":
-                # the fused program is the only one a topm dispatch runs —
-                # don't compile (or cost-time) the unused full scan
-                fn = self.topm_fn(B)
-            else:
-                fn = self.query_fn(B)
-            jax.block_until_ready(fn(*args))  # compile
+        ``'off'`` warms the full scan; ``'safe'`` warms the scan (the
+        fallback when the survivor set outgrows the ladder), the emit-tables
+        probe and every (bucket, rung) pruned plan — the rung set is fixed a
+        priori, so survivor-count changes at serve time never compile;
+        ``'topm'`` warms the fused plan. Because request semantics are
+        traced operands, warming a plan once covers **every** scorer ×
+        estimator × k ≤ k_max × α (`CompileCache.misses` stays flat across
+        request sweeps — the DESIGN.md §6 contract). Pass
+        ``joinability=True`` to also pre-warm the bare `search_joinable`
+        probe (``'safe'`` warms a reusable probe either way)."""
+        modes = tuple(modes)
+        if cost_mode is None:
+            cost_mode = modes[0]
+        rungs = self.prune_rungs() if "safe" in modes else []
+        # cost dispatches run under the *serving* request's semantics (a
+        # spearman server must not feed the bucket planner pearson timings
+        # — their relative bucket costs differ); compiled programs are
+        # request-independent either way
+        ops = jnp.asarray(PL.request_operands(
+            request if request is not None else PL.Request()))
+
+        def _time(fn):
             ts = []
             for _ in range(max(cost_reps, 1)):
                 t0 = time.perf_counter()
-                jax.block_until_ready(fn(*args))
+                fn()
                 ts.append(time.perf_counter() - t0)
-            self._bucket_cost[B] = float(np.median(ts))
-            if joinability and self.qcfg.prune != "safe":
-                jax.block_until_ready(self.stage1_fn(B)(*args))
-            if self.qcfg.prune == "safe":
-                s1 = self.stage1_fn(B, emit_tables=True)
-                prep_args = self._prep_args(B)
+            return float(np.median(ts))
+
+        for B in self.buckets:
+            qa = self._dummy_queries(B)
+            prep_args = self._prep_args(B)
+            args = qa + (self.shard,) + prep_args
+            scan = topm = None
+            if "off" in modes or "safe" in modes:
+                scan = self.scan_fn(B)
+                jax.block_until_ready(scan(*args, ops))
+            if "topm" in modes:
+                topm = self.topm_fn(B)
+                jax.block_until_ready(topm(*args, ops))
+            if joinability and "safe" not in modes:
+                jax.block_until_ready(self.probe_fn(B)(*args))
+            s1 = None
+            if "safe" in modes:
+                s1 = self.probe_fn(B, emit_tables=True)
                 tabs = jax.block_until_ready(s1(*args))
                 tab_args = tuple(tabs[1:]) if self._use_prep else ()
                 for M in rungs:
                     idx = jnp.zeros((M,), jnp.int32)
                     ok = jnp.zeros((M,), bool)
-                    jax.block_until_ready(self.stage2_fn(B, M)(
-                        *qa, self.shard, idx, ok, *tab_args, *prep_args))
-                # pruned-path cost at the base rung (stage 1 + stage 2)
-                # replaces the full-scan cost in the planner once pruning
-                # is on — that is what a dispatch actually costs
-                if rungs:
-                    M0 = rungs[0]
-                    idx0 = jnp.zeros((M0,), jnp.int32)
-                    ok0 = jnp.zeros((M0,), bool)
-                    s2 = self.stage2_fn(B, M0)
-                    ts = []
-                    for _ in range(max(cost_reps, 1)):
-                        t0 = time.perf_counter()
-                        out1 = jax.block_until_ready(s1(*args))
-                        np.asarray(out1[0] if self._use_prep else out1)
-                        tab_args = tuple(out1[1:]) if self._use_prep else ()
-                        jax.block_until_ready(
-                            s2(*qa, self.shard, idx0, ok0, *tab_args,
-                               *prep_args))
-                        ts.append(time.perf_counter() - t0)
-                    self._bucket_cost[B] = float(np.median(ts))
+                    jax.block_until_ready(self.prune_fn(B, M)(
+                        *qa, self.shard, idx, ok, *tab_args, *prep_args,
+                        ops))
+            # measured per-dispatch cost of the default plan: that is what
+            # a serve-time dispatch of this server actually costs
+            if cost_mode == "topm" and topm is not None:
+                self._bucket_cost[B] = _time(
+                    lambda: jax.block_until_ready(topm(*args, ops)))
+            elif cost_mode == "safe" and rungs:
+                M0 = rungs[0]
+                idx0 = jnp.zeros((M0,), jnp.int32)
+                ok0 = jnp.zeros((M0,), bool)
+                s2 = self.prune_fn(B, M0)
 
-    def _prep_args(self, B: Optional[int] = None):
-        prep = self.prep(B)
-        return (prep,) if prep is not None else ()
+                def _two_stage():
+                    out1 = jax.block_until_ready(s1(*args))
+                    np.asarray(out1[0] if self._use_prep else out1)
+                    tab_args = tuple(out1[1:]) if self._use_prep else ()
+                    jax.block_until_ready(
+                        s2(*qa, self.shard, idx0, ok0, *tab_args,
+                           *prep_args, ops))
+
+                self._bucket_cost[B] = _time(_two_stage)
+            elif scan is not None:
+                self._bucket_cost[B] = _time(
+                    lambda: jax.block_until_ready(scan(*args, ops)))
 
     # -- batching ------------------------------------------------------------
     def bucket_for(self, nq: int) -> int:
@@ -450,13 +465,12 @@ class QueryServer:
         costs = tuple(sorted(self._bucket_cost.items()))
         return list(_plan_cover(nq, self.buckets, costs))
 
-    def _dispatch(self, qa, nq: int, B: Optional[int] = None):
-        """Run one ≤bucket slice: pad to its bucket, query, slice back.
-
-        With pruning enabled the slice goes through the two-stage plan
-        (stage-1 scan → host survivor selection → device gather-compaction →
-        stage-2 scoring on the rung-shaped shard); telemetry counts the
-        whole plan as one dispatch."""
+    # -- dispatch ------------------------------------------------------------
+    def _dispatch(self, qa, nq: int, req: PL.Request, ops,
+                  B: Optional[int] = None):
+        """Run one ≤bucket slice under ``req``'s semantics: pad to the
+        bucket, dispatch the plan its prune mode selects, slice back.
+        Telemetry counts a two-stage plan as one dispatch."""
         B = self.bucket_for(nq) if B is None else B
         pad = B - nq
         if pad:
@@ -465,10 +479,15 @@ class QueryServer:
                 for a in qa)
         prep_args = self._prep_args(B)
         t0 = time.perf_counter()
-        if self._prune:
-            out = self._dispatch_pruned(qa, nq, B, prep_args)
+        if req.prune == "topm":
+            out = self.topm_fn(B)(*qa, self.shard, *prep_args, ops)
+            s, g, r, m = (np.asarray(o) for o in jax.block_until_ready(out))
+            g = np.where(np.isfinite(s), g, -1).astype(np.int32)
+            out = (s, g, r, m)
+        elif req.prune == "safe":
+            out = self._dispatch_safe(qa, nq, B, prep_args, req, ops)
         else:
-            out = self.query_fn(B)(*qa, self.shard, *prep_args)
+            out = self.scan_fn(B)(*qa, self.shard, *prep_args, ops)
             jax.block_until_ready(out)
         dt = time.perf_counter() - t0
         self.dispatch_log.append((B, nq, dt))
@@ -477,32 +496,27 @@ class QueryServer:
         self._total_s += dt
         return tuple(o[:nq] for o in out)
 
-    def _dispatch_pruned(self, qa, nq: int, B: int, prep_args):
-        """One two-stage dispatch (DESIGN.md §5). ``topm``: a single fused
-        program (on-device survivor selection). ``safe``: stage-1 hits →
-        host survivor selection → ladder rung → stage-2 scoring against the
-        stage-1 probe tables; falls back to the (already compiled) full-scan
-        program when the survivor set would not fit a rung below the full
-        index width. Either way, −inf rows get id −1."""
-        if self.qcfg.prune == "topm":
-            out = self.topm_fn(B)(*qa, self.shard, *prep_args)
-            s, g, r, m = (np.asarray(o) for o in jax.block_until_ready(out))
-            g = np.where(np.isfinite(s), g, -1).astype(np.int32)
-            return s, g, r, m
-        out1 = self.stage1_fn(B, emit_tables=True)(*qa, self.shard,
-                                                   *prep_args)
+    def _dispatch_safe(self, qa, nq: int, B: int, prep_args, req, ops):
+        """One two-stage dispatch (DESIGN.md §5): probe → host filter →
+        ladder rung → gather-compacted scoring against the probe tables;
+        falls back to the (already compiled) full-scan plan when the
+        survivor set would not fit a rung below the full index width.
+        Either way, −inf rows get id −1."""
+        out1 = self.probe_fn(B, emit_tables=True)(*qa, self.shard,
+                                                  *prep_args)
         out1 = jax.block_until_ready(out1)
         hits, tab_args = ((out1[0], tuple(out1[1:])) if self._use_prep
                           else (out1, ()))
         # selection sees only the real rows: bucket-padding copies must not
         # inflate the survivor set
         hits_np = np.asarray(hits)[:nq]
-        surv = Q.select_survivors(hits_np, self.qcfg)
+        surv = PL.select_survivors(hits_np, prune="safe",
+                                   min_sample=req.min_sample)
         ndev = int(self.mesh.devices.size)
-        rung = Q.prune_rung(max(len(surv), self.qcfg.k),
-                            self.qcfg.prune_base, self.C, ndev)
+        rung = PL.prune_rung(max(len(surv), self.k_max),
+                             self.shape.prune_base, self.C, ndev)
         if rung is None:
-            out = self.query_fn(B)(*qa, self.shard, *prep_args)
+            out = self.scan_fn(B)(*qa, self.shard, *prep_args, ops)
             s, g, r, m = (np.asarray(o)
                           for o in jax.block_until_ready(out))
             # same id convention as the pruned dispatch below: −inf → −1
@@ -511,17 +525,18 @@ class QueryServer:
         idx = np.zeros((rung,), np.int32)
         idx[:len(surv)] = surv
         valid = np.arange(rung) < len(surv)
-        out = self.stage2_fn(B, rung)(*qa, self.shard, jnp.asarray(idx),
-                                      jnp.asarray(valid), *tab_args,
-                                      *prep_args)
+        out = self.prune_fn(B, rung)(*qa, self.shard, jnp.asarray(idx),
+                                     jnp.asarray(valid), *tab_args,
+                                     *prep_args, ops)
         s, g, r, m = (np.asarray(o) for o in jax.block_until_ready(out))
         # stage-2 gids are already index-space; −inf rows (pruned / empty)
         # get id −1 so they can never alias a real column
         g = np.where(np.isfinite(s), g, -1).astype(np.int32)
         return s, g, r, m
 
-    def query_batch(self, sketches: CorrelationSketch):
-        """Serve a batch of query sketches (leading [NQ] axis) → [NQ, k] results.
+    def query_batch(self, sketches: CorrelationSketch, req: PL.Request):
+        """Serve a batch of query sketches (leading [NQ] axis) under one
+        request's semantics → ``[NQ, min(req.k, k_max)]`` results.
 
         The batch is covered by the bucket plan of `plan_batches` (measured
         per-dispatch costs after `warmup()`; greedy max-bucket before). Only
@@ -529,25 +544,25 @@ class QueryServer:
         """
         qa = query_arrays(sketches)
         nq = int(qa[0].shape[0])
+        k_ret = min(int(req.k), self.k_max)
         if nq == 0:
-            empty = lambda dt: jnp.zeros((0, self.qcfg.k), dt)
+            empty = lambda dt: jnp.zeros((0, k_ret), dt)
             return (empty(jnp.float32), empty(jnp.int32),
                     empty(jnp.float32), empty(jnp.float32))
+        ops = jnp.asarray(PL.request_operands(req))
         outs = []
         s = 0
         for B in self.plan_batches(nq):
             e = min(s + B, nq)
-            outs.append(self._dispatch(tuple(a[s:e] for a in qa), e - s, B=B))
+            outs.append(self._dispatch(tuple(a[s:e] for a in qa), e - s,
+                                       req, ops, B=B))
             s = e
-        return tuple(jnp.concatenate(parts) for parts in zip(*outs))
+        out = tuple(jnp.concatenate(parts) for parts in zip(*outs))
+        if k_ret < self.k_max:   # request k is a host-side slice (§6)
+            out = tuple(o[:, :k_ret] for o in out)
+        return out
 
-    def query_columns(self, keys_list, values_list, *, chunk: int = 8192):
-        """Convenience: raw query columns → sketches → batched top-k."""
-        sks = build_query_sketches(keys_list, values_list, n=self.n,
-                                   chunk=chunk)
-        return self.query_batch(sks)
-
-    # -- joinability search (stage 1 as a first-class workload) --------------
+    # -- joinability (stage 1 as a first-class workload) ---------------------
     def key_minima(self) -> KeyMinima:
         """Lazily computed per-candidate KMV key-minima layout of the
         resident shard (`repro.engine.index.key_minima`), plus the
@@ -560,15 +575,14 @@ class QueryServer:
 
     def stage1_hits(self, sketches: CorrelationSketch) -> np.ndarray:
         """Exact per-candidate sketch-intersection sizes ``[NQ, C]`` for a
-        batch of query sketches — the raw stage-1 scan, bucketed like
-        `query_batch` but with no scoring stage. On a ``prune='safe'``
-        server the warmed emit-tables program is reused (its extra outputs
-        are dropped) instead of compiling a lean twin."""
+        batch of query sketches — the raw probe plan, bucketed like
+        `query_batch` but with no scoring stage. An already-warmed
+        emit-tables probe is reused (its extra outputs are dropped) instead
+        of compiling a lean twin."""
         qa = query_arrays(sketches)
         nq = int(qa[0].shape[0])
         if nq == 0:
             return np.zeros((0, self.C), np.float32)
-        emit = self.qcfg.prune == "safe"
         rows = []
         s = 0
         while s < nq:
@@ -579,7 +593,8 @@ class QueryServer:
                 part = tuple(jnp.concatenate(
                     [a, jnp.broadcast_to(a[-1:], (B - (e - s),) + a.shape[1:])])
                     for a in part)
-            out = self.stage1_fn(B, emit_tables=emit)(
+            emit = self._use_prep and self._key("probe", B, (True,)) in self.cache
+            out = self.probe_fn(B, emit_tables=emit)(
                 *part, self.shard, *self._prep_args(B))
             hits = out[0] if isinstance(out, tuple) else out
             rows.append(np.asarray(jax.block_until_ready(hits))[:e - s])
@@ -587,9 +602,8 @@ class QueryServer:
         return np.concatenate(rows, axis=0)
 
     def search_joinable_sketches(self, sketches: CorrelationSketch, *,
-                                 k: Optional[int] = None,
-                                 metric: str = "containment"
-                                 ) -> JoinabilityResult:
+                                 k: int, metric: str = "containment",
+                                 alpha: float = 0.05) -> JoinabilityResult:
         """Top-k *joinability* search over pre-built query sketches.
 
         The pure stage-1 workload (paper §2/Defn. 3 first clause: "tables
@@ -602,7 +616,7 @@ class QueryServer:
         if metric not in JOIN_METRICS:
             raise ValueError(f"unknown joinability metric {metric!r}: "
                              f"use one of {JOIN_METRICS}")
-        k = int(k or self.qcfg.k)
+        k = int(k)
         hits = self.stage1_hits(sketches)
         nq = hits.shape[0]
         minima = self.key_minima()
@@ -615,7 +629,7 @@ class QueryServer:
             est = CT.joinability_estimates(
                 hits[i], CT.query_minima(q_kh[i], q_mask[i]),
                 minima.count, minima.tau, self.n,
-                cand_distinct=self._minima_dc, alpha=self.qcfg.alpha)
+                cand_distinct=self._minima_dc, alpha=alpha)
             score = np.asarray(getattr(est, metric), np.float32)
             ok = est.hits > 0
             order = np.lexsort((np.arange(score.shape[0]),
@@ -628,16 +642,6 @@ class QueryServer:
                       "join_size"):
                 out[f][i, :kk] = np.asarray(getattr(est, f), np.float32)[order]
         return JoinabilityResult(**out)
-
-    def search_joinable(self, keys_list, *, k: Optional[int] = None,
-                        metric: str = "containment", chunk: int = 8192
-                        ) -> JoinabilityResult:
-        """Top-k joinable columns for raw query *key* columns (no values
-        needed — joinability is a property of the key sets alone). Builds
-        value-less query sketches and runs `search_joinable_sketches`."""
-        values = [np.zeros((len(kz),), np.float32) for kz in keys_list]
-        sks = build_query_sketches(keys_list, values, n=self.n, chunk=chunk)
-        return self.search_joinable_sketches(sks, k=k, metric=metric)
 
     # -- telemetry -----------------------------------------------------------
     def throughput(self) -> dict:
@@ -656,3 +660,508 @@ class QueryServer:
             dispatch_p90_ms=float(np.percentile(lat_ms, 90)),
             dispatch_p99_ms=float(np.percentile(lat_ms, 99)),
             per_query_ms=1e3 * self._total_s / max(self._total_queries, 1))
+
+
+@dataclasses.dataclass
+class _SegEntry:
+    sid: int
+    version: int
+    base: int            # global-id offset (cumulative used slots)
+    used: int
+    capacity: int        # device-padded column count (the compile-key shape)
+    exec: _SegmentExec
+
+
+def _is_live(source) -> bool:
+    from repro.engine import lifecycle as LC
+    return isinstance(source, LC.LiveIndex)
+
+
+class Server:
+    """The unified serving facade (DESIGN.md §6): one class, every index
+    flavour, per-request query semantics.
+
+    ``source`` may be a `repro.engine.lifecycle.LiveIndex` (served across
+    its segments with `refresh()` picking up mutations), a
+    `repro.engine.index.SketchIndex` (placed on the mesh and served as a
+    single-segment live index) or an already-placed `IndexShard`.
+
+    ``policy`` is the compile-relevant `repro.engine.plans.ShapePolicy`
+    (or a legacy `QueryConfig`, which is split via `plans.split_config`);
+    ``request`` is the *default* `plans.Request` — every serving method
+    accepts a per-call ``request=`` override, and because request semantics
+    are traced operands / host-side slices, heterogeneous requests share
+    the warmed programs: after `warmup()` a sweep over every scorer ×
+    estimator × k ≤ k_max × prune mode compiles nothing.
+
+    Results combine across segments deterministically (score desc, global
+    id asc; −inf rows get id −1) into ``[NQ, request.k]`` numpy arrays with
+    ids indexing `self.names`.
+    """
+
+    def __init__(self, mesh, source, policy=None, *,
+                 request: Optional[PL.Request] = None,
+                 buckets: Sequence[int] = (1, 8, 32),
+                 batch_rows: Optional[int] = None,
+                 cache: Optional[CompileCache] = None,
+                 index: Optional[SketchIndex] = None, prep=None):
+        self.mesh = mesh
+        if isinstance(policy, Q.QueryConfig):
+            shape, req0 = PL.split_config(policy)
+            request = request if request is not None else req0
+        elif policy is None:
+            shape = PL.ShapePolicy()
+        else:
+            shape = policy
+        self.shape = shape
+        self.request = request if request is not None else PL.Request()
+        if self.request.prune not in PL.PRUNE_MODES:  # constructor-time, as
+            raise ValueError(                        # the old servers did
+                f"unknown prune mode {self.request.prune!r}: "
+                f"use one of {PL.PRUNE_MODES}")
+        self.buckets = tuple(sorted(set(int(b) for b in buckets)))
+        self._batch_rows = batch_rows
+        self.cache = cache if cache is not None else CompileCache()
+        self._entries: Dict[int, _SegEntry] = {}
+        self._order: List[int] = []
+        self.names: List[str] = []
+        self._seen_version = -1
+        #: measured bucket costs survive segment turnover per capacity class
+        self._cap_costs: Dict[int, Dict[int, float]] = {}
+        #: logical request telemetry (a query counts once, however many
+        #: segments it fans out to) + dispatches of retired segment execs
+        self._q_total = 0
+        self._q_seconds = 0.0
+        self._retired = dict(dispatches=0)
+
+        if _is_live(source):
+            self._live = source
+            self.n = source.n
+            self.refresh()
+        else:
+            self._live = None
+            if isinstance(source, SketchIndex):
+                index = index if index is not None else source
+                shard = shard_for_mesh(source, mesh)
+            else:
+                shard = source      # an IndexShard the caller already placed
+            self.n = shard.sketch_size
+            ex = _SegmentExec(mesh, shard, shape, buckets=self.buckets,
+                              prep=prep, index=index, batch_rows=batch_rows,
+                              cache=self.cache)
+            used = len(index.names) if index is not None else ex.C
+            self._entries[0] = _SegEntry(sid=0, version=0, base=0, used=used,
+                                         capacity=ex.C, exec=ex)
+            self._order = [0]
+            self.names = list(index.names) if index is not None else []
+
+    # -- segment sync --------------------------------------------------------
+    @property
+    def _exec(self) -> _SegmentExec:
+        """The single static executor (static sources only)."""
+        assert self._live is None and len(self._order) == 1
+        return self._entries[self._order[0]].exec
+
+    def _make_entry(self, sid: int, version: int, base: int, used: int,
+                    host_shard) -> _SegEntry:
+        shard = place_shard(host_shard, self.mesh)
+        ex = _SegmentExec(self.mesh, shard, self.shape, buckets=self.buckets,
+                          batch_rows=self._batch_rows, cache=self.cache)
+        ex._bucket_cost = dict(self._cap_costs.get(ex.C, {}))
+        return _SegEntry(sid=sid, version=version, base=base,
+                         used=used, capacity=ex.C, exec=ex)
+
+    def refresh(self) -> None:
+        """Sync with a live index: device-place new/changed segments, drop
+        removed ones, rebuild the global-id catalog. A no-op for static
+        sources, and free when nothing moved (lock-free version fast-path —
+        in particular, queries don't stall on the index lock while a
+        compaction is folding). The lock is held only to snapshot consistent
+        host-side views of the changed segments (a concurrent append could
+        otherwise produce a torn read); device placement and executor
+        construction happen after it is released, so writers are never
+        blocked on device transfers."""
+        if self._live is None or self._live.version == self._seen_version:
+            return
+        with self._live._lock:
+            ver = self._live.version
+            snaps = []
+            for seg in self._live._segs:
+                old = self._entries.get(seg.sid)
+                fresh = old is None or old.version != seg.version
+                snaps.append((seg.sid, seg.version, seg.used,
+                              list(seg.names[:seg.used]),
+                              seg.host_snapshot() if fresh else None))
+        entries: Dict[int, _SegEntry] = {}
+        order: List[int] = []
+        names: List[str] = []
+        base = 0
+        for sid, version, used, seg_names, snap in snaps:
+            if snap is None:
+                old = self._entries[sid]
+                old.base = base
+                entries[sid] = old
+            else:
+                entries[sid] = self._make_entry(sid, version, base, used,
+                                                snap.to_index_shard())
+            order.append(sid)
+            names.extend(seg_names)
+            base += used
+        for sid, old in self._entries.items():
+            if entries.get(sid) is not old:   # dropped or rebuilt
+                self._retired["dispatches"] += old.exec._total_dispatches
+        self._entries = entries
+        self._order = order
+        self.names = names
+        self._seen_version = ver
+
+    # -- warmup --------------------------------------------------------------
+    def warmup(self, cost_reps: int = 2, include_ladder: bool = True,
+               joinability: bool = False,
+               modes: Optional[Sequence[str]] = None) -> None:
+        """Compile the serving plans for every resident segment shape and
+        measure dispatch costs (kept per capacity class so live-segment
+        turnover doesn't lose them).
+
+        ``modes`` defaults to **every** prune mode — after this warmup any
+        request (scorer, estimator, k ≤ k_max, prune mode, α) dispatches
+        with zero compiles (the DESIGN.md §6 contract; the deprecated
+        server aliases pass their config's single mode instead, preserving
+        the historical warmup cost). ``include_ladder`` (live sources)
+        additionally pre-warms the upcoming capacity-ladder shapes — the
+        delta rung and the rung a `compact()` would land on — so the first
+        mutation after warmup serves without a compile. ``joinability``
+        pre-warms the bare `search_joinable` probe."""
+        modes = tuple(modes) if modes is not None else PL.PRUNE_MODES
+        cost_mode = self.request.prune if self.request.prune in modes \
+            else modes[0]
+        warmed = set()
+        for sid in self._order:
+            e = self._entries[sid]
+            e.exec.warmup(cost_reps=cost_reps, modes=modes,
+                          joinability=joinability, cost_mode=cost_mode,
+                          request=self.request)
+            self._cap_costs[e.exec.C] = dict(e.exec._bucket_cost)
+            warmed.add(e.exec.C)
+        if self._live is not None and include_ladder:
+            from repro.engine import lifecycle as LC
+            ndev = int(self.mesh.devices.size)
+            ahead = {self._live.delta_cap,
+                     LC.ladder_rung(self._live.live_columns(),
+                                    self._live.delta_cap)}
+            for cap in sorted(ahead):
+                if cap + (-cap) % ndev in warmed:
+                    continue
+                empty = LC.Segment.empty(-1, cap, self.n, self._live.agg)
+                entry = self._make_entry(-1, 0, 0, 0, empty.to_index_shard())
+                entry.exec.warmup(cost_reps=cost_reps, modes=modes,
+                                  joinability=joinability,
+                                  cost_mode=cost_mode,
+                                  request=self.request)
+                self._cap_costs[entry.exec.C] = dict(entry.exec._bucket_cost)
+                warmed.add(entry.exec.C)
+
+    # -- queries -------------------------------------------------------------
+    def plan_batches(self, nq: int) -> List[int]:
+        """Measured-cost bucket cover for ``nq`` queries (the DP over the
+        `warmup()` timings). For a static source this is the single
+        executor's plan; for a live source it is the first segment's —
+        every segment plans independently at dispatch time."""
+        if not self._order:
+            return []
+        return self._entries[self._order[0]].exec.plan_batches(nq)
+
+    def query_batch(self, sketches: CorrelationSketch, *,
+                    request: Optional[PL.Request] = None,
+                    refresh: bool = True):
+        """Serve a batch of query sketches (leading [NQ] axis) against every
+        segment → combined ``[NQ, k]`` (scores, global ids, r, m) numpy
+        arrays, global ids indexing `self.names` (-1 for empty tail slots).
+        ``request`` overrides the server's default semantics for this call
+        only — no compiles, whatever it asks for (post-warmup).
+        """
+        req = request if request is not None else self.request
+        if req.k > self.shape.k_max:
+            # k beyond the policy width would come back as fabricated
+            # −inf/−1 tail rows indistinguishable from "no more matches" —
+            # refuse instead (segments *smaller* than k still pad
+            # legitimately: other segments fill the global top-k)
+            raise ValueError(
+                f"request k={req.k} exceeds ShapePolicy.k_max="
+                f"{self.shape.k_max}; raise k_max (a compile-time width) "
+                "or lower k")
+        if refresh:
+            self.refresh()
+        t_start = time.perf_counter()
+        k = int(req.k)
+        nq = int(jax.tree.leaves(sketches)[0].shape[0])
+        empty = (np.full((nq, k), -np.inf, np.float32),
+                 np.full((nq, k), -1, np.int32),
+                 np.zeros((nq, k), np.float32), np.zeros((nq, k), np.float32))
+        if nq == 0:
+            return tuple(a[:0] for a in empty)
+        parts = []
+        for sid in self._order:
+            e = self._entries[sid]
+            if e.used == 0:
+                continue
+            s, g, r, m = e.exec.query_batch(sketches, req)
+            parts.append((np.asarray(s), np.asarray(g) + e.base,
+                          np.asarray(r), np.asarray(m)))
+        if not parts:
+            self._q_total += nq
+            self._q_seconds += time.perf_counter() - t_start
+            return empty
+        s = np.concatenate([p[0] for p in parts], axis=1)
+        g = np.concatenate([p[1] for p in parts], axis=1)
+        r = np.concatenate([p[2] for p in parts], axis=1)
+        m = np.concatenate([p[3] for p in parts], axis=1)
+        # deterministic combine: score desc, global id asc as tiebreak
+        out = empty
+        pick = np.lexsort((g, -s), axis=1)[:, :k]
+        take = lambda a: np.take_along_axis(a, pick, axis=1)
+        s, g, r, m = take(s), take(g), take(r), take(m)
+        kk = s.shape[1]
+        out[0][:, :kk] = s
+        out[1][:, :kk] = np.where(np.isfinite(s), g, -1)
+        out[2][:, :kk] = np.where(np.isfinite(s), r, 0.0)
+        out[3][:, :kk] = np.where(np.isfinite(s), m, 0.0)
+        self._q_total += nq
+        self._q_seconds += time.perf_counter() - t_start
+        return out
+
+    def query_columns(self, keys_list, values_list, *, chunk: int = 8192,
+                      request: Optional[PL.Request] = None,
+                      refresh: bool = True):
+        """Convenience: raw query columns → sketches → combined top-k."""
+        sks = build_query_sketches(keys_list, values_list, n=self.n,
+                                   chunk=chunk)
+        return self.query_batch(sks, request=request, refresh=refresh)
+
+    # -- joinability search --------------------------------------------------
+    def stage1_hits(self, sketches: CorrelationSketch, *,
+                    refresh: bool = True) -> np.ndarray:
+        """Exact per-candidate sketch-intersection sizes ``[NQ, C_global]``
+        across every segment, sliced to the used slots so the candidate
+        axis is exactly the global id space of `self.names`."""
+        if refresh:
+            self.refresh()
+        parts = [self._entries[sid].exec.stage1_hits(sketches)[:, :
+                 self._entries[sid].used] for sid in self._order]
+        return (np.concatenate(parts, axis=1) if parts
+                else np.zeros((0, 0), np.float32))
+
+    def search_joinable_sketches(self, sketches: CorrelationSketch, *,
+                                 k: Optional[int] = None,
+                                 metric: str = "containment",
+                                 request: Optional[PL.Request] = None,
+                                 refresh: bool = True) -> JoinabilityResult:
+        """Top-k joinability search across every live segment (DESIGN.md §5).
+
+        Fans the stage-1 containment scan out per segment (each segment
+        executor ranks its own candidates — the global top-k is contained in
+        the union of per-segment top-ks), shifts segment-local ids into the
+        global catalog (`self.names`), and combines deterministically:
+        metric desc, global id asc. Tombstoned and unused slots have zero
+        stored minima, so they can never surface.
+        """
+        if metric not in JOIN_METRICS:
+            raise ValueError(f"unknown joinability metric {metric!r}: "
+                             f"use one of {JOIN_METRICS}")
+        req = request if request is not None else self.request
+        if refresh:
+            self.refresh()
+        k = int(k or req.k)
+        nq = int(jax.tree.leaves(sketches)[0].shape[0])
+        fields = JoinabilityResult._FIELDS
+        empty = {f: np.zeros((nq, k), np.float32) for f in fields}
+        empty["ids"] = np.full((nq, k), -1, np.int32)
+        parts = []
+        for sid in self._order:
+            e = self._entries[sid]
+            if e.used == 0:
+                continue
+            res = e.exec.search_joinable_sketches(sketches, k=k,
+                                                  metric=metric,
+                                                  alpha=req.alpha)
+            ids = np.where(res.ids >= 0, res.ids + e.base, -1)
+            parts.append(dataclasses.replace(res, ids=ids.astype(np.int32)))
+        if not parts or nq == 0:
+            return JoinabilityResult(**{f: empty[f][:nq] for f in fields})
+        # every per-segment result is k wide, so the concatenation holds
+        # ≥ k columns whenever any part exists — the [:, :k] slice below is
+        # always full width
+        cat = {f: np.concatenate([getattr(p, f) for p in parts], axis=1)
+               for f in fields}
+        ok = cat["ids"] >= 0
+        pick = np.lexsort((np.where(ok, cat["ids"], np.iinfo(np.int32).max),
+                           np.where(ok, -cat["score"], np.inf)), axis=1)[:, :k]
+        take = lambda a: np.take_along_axis(a, pick, axis=1)
+        valid = take(ok)
+        out = {}
+        for f in fields:
+            taken = take(cat[f])
+            out[f] = (np.where(valid, taken, -1).astype(np.int32)
+                      if f == "ids" else np.where(valid, taken, 0.0))
+        return JoinabilityResult(**out)
+
+    def search_joinable(self, keys_list, *, k: Optional[int] = None,
+                        metric: str = "containment", chunk: int = 8192,
+                        request: Optional[PL.Request] = None,
+                        refresh: bool = True) -> JoinabilityResult:
+        """Top-k joinable columns for raw query *key* columns (no values
+        needed — joinability is a property of the key sets alone), across
+        all segments — global ids index `self.names`."""
+        values = [np.zeros((len(kz),), np.float32) for kz in keys_list]
+        sks = build_query_sketches(keys_list, values, n=self.n, chunk=chunk)
+        return self.search_joinable_sketches(sks, k=k, metric=metric,
+                                             request=request,
+                                             refresh=refresh)
+
+    # -- telemetry -----------------------------------------------------------
+    def throughput(self) -> dict:
+        """Lifetime serving telemetry. For live sources ``queries``/``qps``
+        count *logical* requests (one per query, however many segments it
+        fanned out to) and ``dispatches`` the underlying per-segment plan
+        dispatches; static sources report the single executor's
+        dispatch-level numbers (including latency percentiles)."""
+        if self._live is None:
+            return self._exec.throughput()
+        execs = [self._entries[sid].exec for sid in self._order]
+        return dict(queries=self._q_total,
+                    dispatches=self._retired["dispatches"]
+                    + sum(x._total_dispatches for x in execs),
+                    total_s=self._q_seconds,
+                    qps=self._q_total / max(self._q_seconds, 1e-12),
+                    compiles=self.cache.misses,
+                    segments=len(self._order))
+
+
+# ----------------------------------------------------------------------------
+# deprecated alias: the historical single-index server API
+# ----------------------------------------------------------------------------
+
+class QueryServer(Server):
+    """Deprecated alias of `Server` for a static, already-placed
+    `IndexShard` — kept so existing call sites (and their exact output
+    conventions) survive the plan/executor refactor.
+
+    Differences from the unified facade, preserved for back-compat:
+    ``query_batch`` returns the executor's raw per-program output (no
+    cross-segment combine, no −inf → −1 rewrite on the full-scan path) and
+    ``warmup`` compiles only the configured ``qcfg.prune`` plan. New code
+    should construct `Server` directly.
+    """
+
+    def __init__(self, mesh, shard: IndexShard, qcfg,
+                 buckets: Sequence[int] = (1, 8, 32), prep=None,
+                 index: Optional[SketchIndex] = None,
+                 batch_rows: Optional[int] = None,
+                 cache: Optional[CompileCache] = None):
+        warnings.warn(
+            "repro.engine.serve.QueryServer is deprecated; use "
+            "repro.engine.serve.Server (one facade for static and live "
+            "indexes, per-request semantics — DESIGN.md §6)",
+            DeprecationWarning, stacklevel=2)
+        super().__init__(mesh, shard, qcfg, buckets=buckets,
+                         batch_rows=batch_rows, cache=cache, index=index,
+                         prep=prep)
+        self.qcfg = qcfg
+
+    # -- legacy surface, delegated to the single executor --------------------
+    @property
+    def shard(self) -> IndexShard:
+        return self._exec.shard
+
+    @property
+    def C(self) -> int:
+        return self._exec.C
+
+    @property
+    def batch_rows(self) -> int:
+        return self._exec.batch_rows
+
+    @property
+    def dispatch_log(self):
+        return self._exec.dispatch_log
+
+    @property
+    def _bucket_cost(self):
+        return self._exec._bucket_cost
+
+    @_bucket_cost.setter
+    def _bucket_cost(self, value):
+        self._exec._bucket_cost = value
+
+    @property
+    def _total_dispatches(self) -> int:
+        return self._exec._total_dispatches
+
+    def qcfg_for(self, B: int):
+        """Bucket-B query config (legacy view of `_SegmentExec.shape_for`)."""
+        chunk = self._exec.chunk_for(B)
+        if chunk == self.qcfg.score_chunk:
+            return self.qcfg
+        return dataclasses.replace(self.qcfg, score_chunk=chunk)
+
+    def prep(self, B: Optional[int] = None):
+        return self._exec.prep(B)
+
+    def query_fn(self, B: int):
+        return self._exec.scan_fn(B)
+
+    def stage1_fn(self, B: int, emit_tables: bool = False):
+        return self._exec.probe_fn(B, emit_tables=emit_tables)
+
+    def stage2_fn(self, B: int, M: int):
+        return self._exec.prune_fn(B, M)
+
+    def topm_fn(self, B: int):
+        return self._exec.topm_fn(B)
+
+    def prune_rungs(self) -> List[int]:
+        return self._exec.prune_rungs()
+
+    def bucket_for(self, nq: int) -> int:
+        return self._exec.bucket_for(nq)
+
+    def warmup(self, cost_reps: int = 2, joinability: bool = False,
+               modes: Optional[Sequence[str]] = None) -> None:
+        super().warmup(cost_reps=cost_reps, joinability=joinability,
+                       modes=modes if modes is not None
+                       else (self.request.prune,))
+
+    def query_batch(self, sketches: CorrelationSketch, *,
+                    request: Optional[PL.Request] = None):
+        """Legacy output convention: the raw program results — jnp arrays
+        for the full scan (gids of −inf rows left as the program produced
+        them), numpy with −1 ids on the pruned paths."""
+        return self._exec.query_batch(
+            sketches, request if request is not None else self.request)
+
+    def query_columns(self, keys_list, values_list, *, chunk: int = 8192,
+                      request: Optional[PL.Request] = None):
+        sks = build_query_sketches(keys_list, values_list, n=self.n,
+                                   chunk=chunk)
+        return self.query_batch(sks, request=request)
+
+    def stage1_hits(self, sketches: CorrelationSketch) -> np.ndarray:
+        return self._exec.stage1_hits(sketches)
+
+    def key_minima(self) -> KeyMinima:
+        return self._exec.key_minima()
+
+    def search_joinable_sketches(self, sketches: CorrelationSketch, *,
+                                 k: Optional[int] = None,
+                                 metric: str = "containment"
+                                 ) -> JoinabilityResult:
+        return self._exec.search_joinable_sketches(
+            sketches, k=int(k or self.request.k), metric=metric,
+            alpha=self.request.alpha)
+
+    def search_joinable(self, keys_list, *, k: Optional[int] = None,
+                        metric: str = "containment", chunk: int = 8192
+                        ) -> JoinabilityResult:
+        values = [np.zeros((len(kz),), np.float32) for kz in keys_list]
+        sks = build_query_sketches(keys_list, values, n=self.n, chunk=chunk)
+        return self.search_joinable_sketches(sks, k=k, metric=metric)

@@ -25,15 +25,17 @@ ICI_BW = 50e9
 def run(cols_per_device: int, n: int, k: int, multi_pod: bool,
         estimator: str = "pearson", score_chunk: int = 512):
     from repro.engine.index import IndexShard
-    from repro.engine import query as Q
+    from repro.engine import plans as PL
     from repro.launch.mesh import make_production_mesh
     from repro.launch import hlo_cost
 
     mesh = make_production_mesh(multi_pod=multi_pod)
     ndev = int(mesh.devices.size)
     C = cols_per_device * ndev
-    qcfg = Q.QueryConfig(k=k, estimator=estimator, score_chunk=score_chunk)
-    fn = Q.make_query_fn(mesh, C, n, qcfg)
+    # one compiled plan serves every estimator/scorer (traced request
+    # operands, DESIGN.md §6) — `estimator` only names the analysis cell
+    shape = PL.ShapePolicy(k_max=k, score_chunk=score_chunk)
+    fn = PL.make_scan_fn(mesh, C, n, shape)
 
     shard_abs = IndexShard(
         key_hash=jax.ShapeDtypeStruct((C, n), jnp.uint32),
@@ -47,8 +49,9 @@ def run(cols_per_device: int, n: int, k: int, multi_pod: bool,
              jax.ShapeDtypeStruct((n,), jnp.float32),
              jax.ShapeDtypeStruct((), jnp.float32),
              jax.ShapeDtypeStruct((), jnp.float32))
+    ops_abs = jax.ShapeDtypeStruct((4,), jnp.float32)
     with mesh:
-        lowered = fn.lower(*q_abs, shard_abs)
+        lowered = fn.lower(*q_abs, shard_abs, ops_abs)
         compiled = lowered.compile()
     rep = hlo_cost.analyze(compiled.as_text())
     ma = compiled.memory_analysis()

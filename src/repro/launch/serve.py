@@ -35,7 +35,6 @@ def main():
     from repro.core import build_sketch
     from repro.data.pipeline import Table, sbn_pair, skewed_pair
     from repro.engine import index as IX
-    from repro.engine import query as Q
     from repro.engine import serve as SV
     from repro.launch.mesh import make_host_mesh
 
@@ -60,13 +59,15 @@ def main():
           f"{build_s:.1f}s ({args.tables/build_s:.0f} cols/s)")
     shard = IX.shard_for_mesh(idx, mesh)
 
-    qcfg = Q.QueryConfig(k=args.k, estimator=args.estimator, scorer=args.scorer)
+    from repro.engine import plans as PL
+    shape = PL.ShapePolicy(k_max=args.k)
+    req = PL.Request(k=args.k, estimator=args.estimator, scorer=args.scorer)
 
     if args.batch > 0:
         # only buckets the request loop can actually select (≤ args.batch)
         buckets = tuple(b for b in (1, 8, 32) if b < args.batch) + (args.batch,)
-        srv = SV.QueryServer(mesh, shard, qcfg, buckets=buckets)
-        srv.warmup()
+        srv = SV.Server(mesh, idx, shape, request=req, buckets=buckets)
+        srv.warmup(modes=("off",))
         qsks = SV.build_query_sketches([q.keys for q in queries],
                                        [q.values for q in queries],
                                        n=args.sketch_size)
@@ -80,7 +81,8 @@ def main():
               f"p99 {st['dispatch_p99_ms']:.1f} ms")
         return
 
-    qfn = Q.make_query_fn(mesh, shard.num_columns, args.sketch_size, qcfg)
+    qfn = PL.make_scan_fn(mesh, shard.num_columns, args.sketch_size, shape)
+    ops = jnp.asarray(PL.request_operands(req))
 
     lat = []
     for i, qt in enumerate(queries):
@@ -88,7 +90,7 @@ def main():
                            n=args.sketch_size)
         qa = IX.query_arrays(qsk)
         t0 = time.time()
-        s, g, r, m = qfn(*qa, shard)
+        s, g, r, m = qfn(*qa, shard, ops)
         jax.block_until_ready(s)
         lat.append((time.time() - t0) * 1000)
         if i == 0:
