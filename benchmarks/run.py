@@ -1,11 +1,16 @@
 """Benchmark harness: one entry per paper table/figure + the engineering
-suites (ingest / latency / lifecycle / prune) + the roofline report.
+suites (ingest / latency / lifecycle / prune / scaling) + the roofline
+report.
 
     PYTHONPATH=src python -m benchmarks.run [--fast] [--only <suite,...>]
 
 Prints ``name,key=value,...`` CSV lines. Sizes are scaled for a single-CPU
-container; drop --fast for larger corpora. Artifact schemas and
-regeneration instructions live in benchmarks/README.md.
+container; drop --fast for larger corpora. A full-size run (no --fast)
+refreshes **every** committed BENCH_*.json artifact in one go:
+
+    PYTHONPATH=src python -m benchmarks.run --only latency,ingest,lifecycle,prune,scaling
+
+Artifact schemas and regeneration instructions live in benchmarks/README.md.
 """
 from __future__ import annotations
 
@@ -25,12 +30,14 @@ def main() -> None:
                          "only written by full-size runs")
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: accuracy,rmse,ranking,"
-                         "runtime,latency,ingest,lifecycle,prune,roofline")
+                         "runtime,latency,ingest,lifecycle,prune,scaling,"
+                         "roofline")
     args = ap.parse_args()
 
     from benchmarks import (bench_accuracy, bench_ingest, bench_lifecycle,
                             bench_prune, bench_query_latency, bench_ranking,
-                            bench_rmse, bench_roofline, bench_runtime)
+                            bench_rmse, bench_roofline, bench_runtime,
+                            bench_scaling)
 
     fast = args.fast
     suites = {
@@ -46,7 +53,8 @@ def main() -> None:
             n_pairs=10 if fast else 25, n_rows=20000 if fast else 60000),
         "latency": lambda: bench_query_latency.run(
             n_tables=128 if fast else 512, n_queries=12 if fast else 40,
-            n_rows=4000 if fast else 10000),
+            n_rows=4000 if fast else 10000,
+            artifact=None if fast else bench_query_latency.ARTIFACT),
         "ingest": lambda: bench_ingest.run(
             n_cols=8 if fast else 32, n_rows=131072 if fast else 1_000_000,
             chunk=16384 if fast else 65536,
@@ -62,11 +70,17 @@ def main() -> None:
             pool=4000 if fast else 20000, n_sketch=64 if fast else 256,
             batch=4 if fast else 8, repeats=2 if fast else 3,
             artifact=None if fast else bench_prune.ARTIFACT),
+        "scaling": lambda: bench_scaling.run(
+            scales=(512, 4096, 16384) if fast else (512, 4096, 32768, 131072),
+            n_sketch=32 if fast else 64, batch=4 if fast else 8,
+            repeats=3 if fast else 5,
+            artifact=None if fast else bench_scaling.ARTIFACT),
     }
     names = {"accuracy": "fig3_accuracy", "rmse": "fig4_rmse",
              "ranking": "table1_ranking", "runtime": "table2_runtime",
              "latency": "sec5p5_query_latency", "ingest": "ingest",
-             "lifecycle": "lifecycle", "prune": "prune"}
+             "lifecycle": "lifecycle", "prune": "prune",
+             "scaling": "scaling"}
     only = set(args.only.split(",")) if args.only else None
 
     for key, fn in suites.items():

@@ -31,10 +31,14 @@ import jax.numpy as jnp
 
 from repro.core import hashing
 
-#: Sentinel key-hash used in padding slots (mask is authoritative).
-PAD_KEY = np.uint32(0xFFFFFFFF)
-#: Sentinel Fibonacci value for padding: +inf in the bottom-k order.
-PAD_FIB = np.uint32(0xFFFFFFFF)
+#: Sentinel key-hash used in padding slots (mask is authoritative). The
+#: literal lives in exactly one place — `hashing.SENTINEL_HASH` — because the
+#: build-time `sentinel_safe` reservation and every padding consumer must
+#: agree bit-for-bit (a lint test greps the tree for stray copies).
+PAD_KEY = hashing.SENTINEL_HASH
+#: Sentinel Fibonacci value for padding: +inf in the bottom-k order (the
+#: same reserved value — see the `SENTINEL_HASH` docstring).
+PAD_FIB = hashing.SENTINEL_HASH
 
 
 class Agg(enum.Enum):

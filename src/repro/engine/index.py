@@ -20,7 +20,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.sketch import Agg, CorrelationSketch
+from repro.core.sketch import PAD_KEY, Agg, CorrelationSketch
 from repro.data.pipeline import Table, TableGroup
 from repro.engine import ingest
 
@@ -108,13 +108,118 @@ def key_minima(shard: IndexShard) -> KeyMinima:
                      tau=fib.max(-1).astype(np.uint32))
 
 
+@dataclasses.dataclass
+class Postings:
+    """QCR-style inverted key index (DESIGN.md §7): every stored
+    ``(key hash → column)`` pair of an index/segment, key-sorted into two
+    flat parallel arrays
+
+        keys  u32 [E]   sorted ascending; PAD_KEY in the [used, E) tail
+        cols  i32 [E]   owning column id per entry; −1 in the tail
+
+    with ``E = capacity × n`` — the *capacity* bound on entries, so the
+    array shape is a function of the segment's ladder capacity alone and
+    mutation never changes it (the zero-recompile contract of DESIGN.md §4
+    carries over to the inverted candidate source). An equal-key run lists
+    every column containing that key; stage-1 candidate generation is one
+    ``searchsorted`` per query key plus a fixed-width window gather
+    (`repro.engine.candidates.InvertedSource`), O(n_q · (log E + W)) —
+    independent of the corpus size C, which is the point (paper §2/§4:
+    joinable-column search over large collections; ROADMAP: the QCR index).
+
+    Host-resident and mutable: `insert_col`/`remove_col` maintain the
+    sorted layout incrementally under appends and tombstone deletes
+    (`repro.engine.lifecycle`); entry order within an equal-key run is not
+    part of the contract (windows cover whole runs).
+    """
+    keys: np.ndarray    # u32 [E] sorted ascending (PAD_KEY-padded tail)
+    cols: np.ndarray    # i32 [E] column id per entry (−1 in the tail)
+    used: int           # live entries (prefix length)
+
+    @property
+    def E(self) -> int:
+        return int(self.keys.shape[0])
+
+    def max_run(self) -> int:
+        """Longest equal-key run among live entries — the lower bound on
+        the query-side gather window W."""
+        if self.used == 0:
+            return 1
+        k = self.keys[:self.used]
+        bounds = np.flatnonzero(np.concatenate(([True], k[1:] != k[:-1])))
+        runs = np.diff(np.concatenate((bounds, [self.used])))
+        return int(runs.max())
+
+    def insert_col(self, col: int, key_hash: np.ndarray,
+                   mask: np.ndarray) -> None:
+        """Merge one column's valid keys into the sorted layout (the
+        append path). Idempotent against re-written slots: any stale
+        entries of ``col`` are dropped first."""
+        if (self.cols[:self.used] == col).any():
+            self.remove_col(col)
+        keys = np.asarray(key_hash, np.uint32)[np.asarray(mask) > 0]
+        keys = keys[keys != PAD_KEY]
+        if keys.size == 0:
+            return
+        assert self.used + keys.size <= self.E, "postings capacity overflow"
+        keys = np.sort(keys)
+        pos = np.searchsorted(self.keys[:self.used], keys)
+        # single right-to-left shift pass: entry i of the old prefix moves
+        # by the number of new keys inserted at or before it
+        new_keys = np.insert(self.keys[:self.used], pos, keys)
+        new_cols = np.insert(self.cols[:self.used], pos,
+                             np.full(keys.size, col, np.int32))
+        self.used += int(keys.size)
+        self.keys[:self.used] = new_keys
+        self.cols[:self.used] = new_cols
+
+    def remove_col(self, col: int) -> None:
+        """Drop every entry of ``col`` and re-pad the tail — tombstoned
+        columns leave the postings *immediately* (they can never surface
+        as candidates, independent of the match-time col ≥ 0 guard)."""
+        keep = self.cols[:self.used] != col
+        kept = int(keep.sum())
+        if kept == self.used:
+            return
+        self.keys[:kept] = self.keys[:self.used][keep]
+        self.cols[:kept] = self.cols[:self.used][keep]
+        self.keys[kept:self.used] = PAD_KEY
+        self.cols[kept:self.used] = -1
+        self.used = kept
+
+    def copy(self) -> "Postings":
+        return Postings(keys=self.keys.copy(), cols=self.cols.copy(),
+                        used=self.used)
+
+
+def build_postings(key_hash, mask, capacity: Optional[int] = None) -> Postings:
+    """Build the `Postings` layout from ``[C, n]`` key/mask planes in one
+    host pass (the fold-identity reference: incremental maintenance must
+    stay result-equal to this). ``capacity`` defaults to C — pass the
+    segment's ladder capacity so E is mutation-stable."""
+    kh = np.asarray(key_hash)
+    m = (np.asarray(mask) > 0) & (kh != PAD_KEY)
+    C, n = kh.shape
+    cap = C if capacity is None else int(capacity)
+    assert cap >= C, (cap, C)
+    E = cap * n
+    cols_idx, slots = np.nonzero(m)
+    keys = kh[cols_idx, slots]
+    order = np.argsort(keys, kind="stable")
+    out_keys = np.full((E,), PAD_KEY, np.uint32)
+    out_cols = np.full((E,), -1, np.int32)
+    out_keys[:keys.size] = keys[order]
+    out_cols[:keys.size] = cols_idx[order].astype(np.int32)
+    return Postings(keys=out_keys, cols=out_cols, used=int(keys.size))
+
+
 class _IndexArrays:
     """Preallocated ``[C, n]`` host staging arrays the ingest engine writes
     finished sketch stacks into — no per-column Python list, no
     `stack_sketches`. One slice-assign per table group."""
 
     def __init__(self, target: int, n: int):
-        self.kh = np.full((target, n), 0xFFFFFFFF, np.uint32)
+        self.kh = np.full((target, n), PAD_KEY, np.uint32)
         self.vals = np.zeros((target, n), np.float32)
         self.mask = np.zeros((target, n), np.float32)
         self.cmin = np.zeros((target,), np.float32)
@@ -210,7 +315,7 @@ def place_shard(shard: IndexShard, mesh) -> IndexShard:
     pad = (-C) % ndev
     if pad:
         shard = IndexShard(
-            key_hash=jnp.pad(shard.key_hash, ((0, pad), (0, 0)), constant_values=0xFFFFFFFF),
+            key_hash=jnp.pad(shard.key_hash, ((0, pad), (0, 0)), constant_values=PAD_KEY),
             values=jnp.pad(shard.values, ((0, pad), (0, 0))),
             mask=jnp.pad(shard.mask, ((0, pad), (0, 0))),
             col_min=jnp.pad(shard.col_min, (0, pad)),

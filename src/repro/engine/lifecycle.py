@@ -64,7 +64,7 @@ from repro.data.pipeline import Table, TableGroup
 from repro.engine import ingest
 from repro.engine import query as Q
 from repro.engine import serve as SV
-from repro.engine.index import IndexShard
+from repro.engine.index import IndexShard, Postings, build_postings
 
 #: snapshot file names (under the directory passed to save/load)
 MANIFEST_FILE = "manifest.json"
@@ -103,6 +103,10 @@ class Segment:
     used: int = 0
     sealed: bool = False
     version: int = 0     # bumped on every mutation; serving keys off it
+    #: inverted postings (DESIGN.md §7) — built lazily on first use, then
+    #: maintained incrementally by write/tombstone; never persisted (a
+    #: fresh rebuild after load is fold-identical by construction)
+    _postings: Optional[Postings] = None
 
     @classmethod
     def empty(cls, sid: int, capacity: int, n: int, agg: Agg) -> "Segment":
@@ -145,6 +149,9 @@ class Segment:
         self.live[sl] = True
         self.names.extend(names)
         self.tables.extend([table_id] * C)
+        if self._postings is not None:
+            for s in range(sl.start, sl.stop):
+                self._postings.insert_col(s, self.kh[s], self.mask[s])
         self.used += C
         if self.used == self.capacity:
             self.sealed = True
@@ -160,7 +167,9 @@ class Segment:
             mask=self.mask.copy(), cmin=self.cmin.copy(),
             cmax=self.cmax.copy(), rows=self.rows.copy(),
             names=list(self.names), tables=list(self.tables),
-            live=self.live.copy())
+            live=self.live.copy(),
+            _postings=(self._postings.copy()
+                       if self._postings is not None else None))
 
     def tombstone(self, slot: int) -> None:
         """Reset a slot to the merge identity: masked out at scoring time
@@ -174,7 +183,21 @@ class Segment:
         self.cmin[slot] = np.inf
         self.cmax[slot] = -np.inf
         self.rows[slot] = 0.0
+        if self._postings is not None:
+            self._postings.remove_col(slot)
         self.version += 1
+
+    def postings(self) -> Postings:
+        """This segment's inverted postings (DESIGN.md §7). Built on first
+        use from the current slots (tombstoned slots are already the merge
+        identity, so they contribute nothing) and maintained incrementally
+        by `write`/`tombstone` from then on. Capacity is the segment
+        capacity, so E = capacity · n is fixed for the segment's lifetime —
+        every mutation reuses the compiled inverted-probe program."""
+        if self._postings is None:
+            self._postings = build_postings(self.kh, self.mask,
+                                            capacity=self.capacity)
+        return self._postings
 
     def as_sketch(self, slots: Optional[np.ndarray] = None) -> CorrelationSketch:
         """Stacked device sketch of (a subset of) this segment's slots."""

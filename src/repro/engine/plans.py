@@ -50,13 +50,18 @@ from jax.experimental.shard_map import shard_map
 
 from repro.core import scoring as SC
 from repro.core.bounds import hoeffding_eligibility_floor
+from repro.core.sketch import PAD_KEY
 from repro.engine.index import IndexShard
 from repro.kernels import ops as K
 from repro.kernels.ops import KernelConfig
 
 #: sentinel key hash for padded candidate slots — never matches a real key
-#: because real slots are masked separately anyway.
-_PAD_KEY = np.uint32(0xFFFFFFFF)
+#: because real slots are masked separately anyway. Canonically defined in
+#: `repro.core.hashing.SENTINEL_HASH`; `_PAD_KEY` survives as the historical
+#: local name (re-exported by `repro.engine.query`).
+_PAD_KEY = PAD_KEY
+#: the same sentinel as a traced-friendly jnp scalar for in-program use
+_JPAD = jnp.uint32(PAD_KEY)
 
 #: request-semantics vocabularies: the scorers served by the fused fast path
 #: (s3 = bootstrap stays a host-side path, `repro.core.scoring.score`), the
@@ -99,6 +104,13 @@ class ShapePolicy:
     #: used by the ``prune`` plan — stage-2 dispatch shapes are drawn from
     #: this fixed ladder, so the compile cache stays O(log C) (DESIGN.md §4)
     prune_base: int = 64
+    #: stage-1 candidate generation (DESIGN.md §7): "scan" = the containment
+    #: scan over every resident column (bit-identical to the pre-source
+    #: engine), "inverted" = the QCR-style inverted key index — sub-linear
+    #: in corpus size, same exact hit counts (`repro.engine.candidates`).
+    #: Affects the stage-1-consuming paths (prune='safe'/'topm',
+    #: `stage1_hits`, `search_joinable`); prune='off' is scan by definition
+    candidates: str = "scan"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -190,7 +202,7 @@ def _sortmerge_moments(q_kh, q_val, q_mask, kh, vals, mask):
     O(C·n²) equality tensor of the matmul formulation. This is the XLA-path
     default; the Pallas kernel keeps the n² tile in VMEM instead.
     """
-    PAD = jnp.uint32(0xFFFFFFFF)
+    PAD = _JPAD
     # A real key hashing to the PAD sentinel is treated as non-matchable on
     # both the single and batched sortmerge paths (keeps them bit-identical;
     # the sentinel is indistinguishable from padding once sorted).
@@ -234,7 +246,7 @@ class PreppedShard:
 def _prep_block(kh, mask):
     """Sort one candidate block's keys into the (dk, sid) lookup structure."""
     Mb = kh.shape[0] * kh.shape[1]
-    PAD = jnp.uint32(0xFFFFFFFF)
+    PAD = _JPAD
     ck = jnp.where(mask > 0, kh, PAD).reshape(-1)            # [Mb]
     sort_idx = jnp.argsort(ck)
     ck_s = ck[sort_idx]
@@ -281,7 +293,7 @@ def _sortmerge_moments_batched(q_kh, q_val, q_mask, kh, vals, mask, prep=None):
     assert B * (M + 1) < 2**31, (
         f"batch {B} × block {M} overflows int32 scatter indices; "
         f"lower ShapePolicy.score_chunk")
-    PAD = jnp.uint32(0xFFFFFFFF)
+    PAD = _JPAD
 
     if prep is None:
         dk, sid = _prep_block(kh, mask)
@@ -666,7 +678,7 @@ def _hits_block_single(qk_s, qm_s, kh, mask):
     of the chunk loop (the query table is block-invariant): one binary
     search per candidate slot, one reduction — no value traffic, no moment
     sums (DESIGN.md §5)."""
-    PAD = jnp.uint32(0xFFFFFFFF)
+    PAD = _JPAD
     ck = jnp.where(mask > 0, kh, PAD)                               # [C, n]
     pos = jnp.clip(jnp.searchsorted(qk_s, ck.reshape(-1)),
                    0, qk_s.shape[0] - 1).reshape(ck.shape)
@@ -682,7 +694,7 @@ def _block_probes(q_kh, q_mask, dk):
     whole probe state — both stages' membership tables scatter from it,
     which is what lets stage 2 skip the binary search entirely."""
     Mb = dk.shape[0]
-    PAD = jnp.uint32(0xFFFFFFFF)
+    PAD = _JPAD
     qk = jnp.where(q_mask > 0, q_kh, PAD).reshape(-1)
     pos = jnp.clip(jnp.searchsorted(dk, qk), 0, Mb - 1)
     hit = (dk[pos] == qk) & (q_mask.reshape(-1) > 0) & (qk != PAD)
@@ -794,7 +806,7 @@ def _shard_hits(q_kh, q_mask, shard: IndexShard, shape: ShapePolicy,
     assert not emit_tables or (batched and sortmerge), \
         "probe tables exist only on the batched sortmerge path"
     if sortmerge and not batched:
-        PAD = jnp.uint32(0xFFFFFFFF)
+        PAD = _JPAD
         q_eff = jnp.where(q_kh != PAD, q_mask, 0.0)
         qk = jnp.where(q_eff > 0, q_kh, PAD)
         order = jnp.argsort(qk)

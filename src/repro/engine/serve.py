@@ -52,12 +52,14 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import containment as CT
-from repro.core.sketch import Agg, CorrelationSketch, build_sketch, merge
+from repro.core.sketch import PAD_KEY, Agg, CorrelationSketch, build_sketch, merge
+from repro.engine import candidates as CD
 from repro.engine import plans as PL
 from repro.engine import query as Q
 from repro.engine.index import (IndexShard, KeyMinima, SketchIndex,
-                                key_minima, place_shard, precompute_prep,
-                                query_arrays, shard_for_mesh)
+                                build_postings, key_minima, place_shard,
+                                precompute_prep, query_arrays,
+                                shard_for_mesh)
 
 
 def build_query_sketches(keys_list: Sequence[np.ndarray],
@@ -213,9 +215,14 @@ class _SegmentExec:
                  buckets: Sequence[int] = (1, 8, 32), prep=None,
                  index: Optional[SketchIndex] = None,
                  batch_rows: Optional[int] = None,
-                 cache: Optional[CompileCache] = None):
+                 cache: Optional[CompileCache] = None, postings=None):
         self.mesh = mesh
         self.shard = shard
+        #: host `Postings` for the inverted candidate source — passed in by
+        #: the live-index refresh (incrementally maintained per segment) or
+        #: built lazily from a host view of the shard on first use
+        self._postings_host = postings
+        self._sources: Dict[str, object] = {}
         self.buckets = tuple(sorted(set(int(b) for b in buckets)))
         assert self.buckets and all(b > 0 for b in self.buckets)
         self.batch_rows = int(batch_rows or 8 * shape.score_chunk)
@@ -328,6 +335,47 @@ class _SegmentExec:
                                       self.shape_for(B), M, batch=B,
                                       with_prep=self._use_prep))
 
+    def prune_plain_fn(self, B: int, M: int):
+        """Table-free variant of `prune_fn` for candidate sources that do
+        not emit scan probe state (the inverted source, DESIGN.md §7):
+        `plans.make_pruned_fn(with_prep=False)` gathers the survivor
+        sub-shard and scores it standalone. Identical plan when the scan
+        path is table-free anyway (non-prep backends)."""
+        if not self._use_prep:
+            return self.prune_fn(B, M)
+        return self.cache.get(
+            self._key("prune", B, (M, "plain")),
+            lambda: PL.make_pruned_fn(self.mesh, self.C, self.n,
+                                      self.shape_for(B), M, batch=B,
+                                      with_prep=False))
+
+    def source(self, kind: Optional[str] = None):
+        """The stage-1 candidate source of this executor
+        (`repro.engine.candidates`): the `ShapePolicy.candidates` choice by
+        default, or an explicit ``kind`` override. Constructed lazily and
+        cached; the inverted source builds its postings from a host view of
+        the shard unless the live-index refresh supplied incrementally
+        maintained ones."""
+        kind = kind if kind is not None else self.shape.candidates
+        src = self._sources.get(kind)
+        if src is None:
+            if kind == "scan":
+                src = CD.ScanSource(self)
+            elif kind == "inverted":
+                if self._postings_host is None:
+                    self._postings_host = build_postings(
+                        np.asarray(self.shard.key_hash),
+                        np.asarray(self.shard.mask))
+                src = CD.InvertedSource(self._postings_host, C=self.C,
+                                        n=self.n, cache=self.cache,
+                                        kernels=self.shape.kernels)
+            else:
+                raise ValueError(
+                    f"unknown candidate source {kind!r}: use one of "
+                    f"{CD.CANDIDATE_SOURCES}")
+            self._sources[kind] = src
+        return src
+
     def topm_fn(self, B: int):
         """Fused single-dispatch ``prune='topm'`` plan (`plans.make_topm_fn`).
         Keyed on ``prune_m`` — the program's static survivor width."""
@@ -355,7 +403,7 @@ class _SegmentExec:
         return rungs
 
     def _dummy_queries(self, B: int):
-        return (jnp.full((B, self.n), 0xFFFFFFFF, jnp.uint32),
+        return (jnp.full((B, self.n), PAD_KEY, jnp.uint32),
                 jnp.zeros((B, self.n), jnp.float32),
                 jnp.zeros((B, self.n), jnp.float32),
                 jnp.zeros((B,), jnp.float32), jnp.zeros((B,), jnp.float32))
@@ -398,21 +446,26 @@ class _SegmentExec:
                 ts.append(time.perf_counter() - t0)
             return float(np.median(ts))
 
+        inv = self.shape.candidates == "inverted"
+        req0 = request if request is not None else PL.Request()
         for B in self.buckets:
             qa = self._dummy_queries(B)
             prep_args = self._prep_args(B)
             args = qa + (self.shard,) + prep_args
             scan = topm = None
-            if "off" in modes or "safe" in modes:
+            # the sourced safe/topm dispatches fall back to the full scan
+            # when the survivor set outgrows the rung ladder, so an
+            # inverted server warms it for those modes too
+            if "off" in modes or "safe" in modes or (inv and "topm" in modes):
                 scan = self.scan_fn(B)
                 jax.block_until_ready(scan(*args, ops))
-            if "topm" in modes:
+            if "topm" in modes and not inv:
                 topm = self.topm_fn(B)
                 jax.block_until_ready(topm(*args, ops))
-            if joinability and "safe" not in modes:
+            if joinability and "safe" not in modes and not inv:
                 jax.block_until_ready(self.probe_fn(B)(*args))
             s1 = None
-            if "safe" in modes:
+            if "safe" in modes and not inv:
                 s1 = self.probe_fn(B, emit_tables=True)
                 tabs = jax.block_until_ready(s1(*args))
                 tab_args = tuple(tabs[1:]) if self._use_prep else ()
@@ -422,11 +475,29 @@ class _SegmentExec:
                     jax.block_until_ready(self.prune_fn(B, M)(
                         *qa, self.shard, idx, ok, *tab_args, *prep_args,
                         ops))
+            if inv and ("safe" in modes or "topm" in modes or joinability):
+                # postings probe (current + next window rung) and the
+                # table-free pruned plans the sourced dispatches feed
+                self.source().warmup(B)
+                for M in (self.prune_rungs()
+                          if ("safe" in modes or "topm" in modes) else []):
+                    idx = jnp.zeros((M,), jnp.int32)
+                    ok = jnp.zeros((M,), bool)
+                    jax.block_until_ready(self.prune_plain_fn(B, M)(
+                        *qa, self.shard, idx, ok, ops))
             # measured per-dispatch cost of the default plan: that is what
             # a serve-time dispatch of this server actually costs
             if cost_mode == "topm" and topm is not None:
                 self._bucket_cost[B] = _time(
                     lambda: jax.block_until_ready(topm(*args, ops)))
+            elif cost_mode == "topm" and inv:
+                self._bucket_cost[B] = _time(
+                    lambda: self._dispatch_topm_sourced(
+                        qa, B, B, prep_args, req0, ops))
+            elif cost_mode == "safe" and rungs and inv:
+                self._bucket_cost[B] = _time(
+                    lambda: self._dispatch_safe(qa, B, B, prep_args, req0,
+                                                ops))
             elif cost_mode == "safe" and rungs:
                 M0 = rungs[0]
                 idx0 = jnp.zeros((M0,), jnp.int32)
@@ -480,10 +551,15 @@ class _SegmentExec:
         prep_args = self._prep_args(B)
         t0 = time.perf_counter()
         if req.prune == "topm":
-            out = self.topm_fn(B)(*qa, self.shard, *prep_args, ops)
-            s, g, r, m = (np.asarray(o) for o in jax.block_until_ready(out))
-            g = np.where(np.isfinite(s), g, -1).astype(np.int32)
-            out = (s, g, r, m)
+            if self.source().kind != "scan":
+                out = self._dispatch_topm_sourced(qa, nq, B, prep_args, req,
+                                                  ops)
+            else:
+                out = self.topm_fn(B)(*qa, self.shard, *prep_args, ops)
+                s, g, r, m = (np.asarray(o)
+                              for o in jax.block_until_ready(out))
+                g = np.where(np.isfinite(s), g, -1).astype(np.int32)
+                out = (s, g, r, m)
         elif req.prune == "safe":
             out = self._dispatch_safe(qa, nq, B, prep_args, req, ops)
         else:
@@ -497,11 +573,21 @@ class _SegmentExec:
         return tuple(o[:nq] for o in out)
 
     def _dispatch_safe(self, qa, nq: int, B: int, prep_args, req, ops):
-        """One two-stage dispatch (DESIGN.md §5): probe → host filter →
-        ladder rung → gather-compacted scoring against the probe tables;
-        falls back to the (already compiled) full-scan plan when the
-        survivor set would not fit a rung below the full index width.
-        Either way, −inf rows get id −1."""
+        """One two-stage dispatch (DESIGN.md §5): stage-1 hit counts from
+        the configured candidate source → host filter → ladder rung →
+        gather-compacted stage-2 scoring; falls back to the (already
+        compiled) full-scan plan when the survivor set would not fit a rung
+        below the full index width. Either way, −inf rows get id −1.
+
+        The scan source keeps the historical fused path verbatim: its
+        emit-tables probe shares the binary-search/membership state with
+        the pruned plan. Any other source feeds the table-free pruned plan
+        (`prune_plain_fn`) — same survivors (hit counts are exact and
+        source-independent), scores equal to ulp-level reassociation."""
+        if self.source().kind != "scan":
+            hits_np = self.source().hit_counts(qa, B)[:nq]
+            return self._prune_and_score(qa, B, prep_args, req, ops,
+                                         hits_np=hits_np, tab_args=None)
         out1 = self.probe_fn(B, emit_tables=True)(*qa, self.shard,
                                                   *prep_args)
         out1 = jax.block_until_ready(out1)
@@ -510,6 +596,14 @@ class _SegmentExec:
         # selection sees only the real rows: bucket-padding copies must not
         # inflate the survivor set
         hits_np = np.asarray(hits)[:nq]
+        return self._prune_and_score(qa, B, prep_args, req, ops,
+                                     hits_np=hits_np, tab_args=tab_args)
+
+    def _prune_and_score(self, qa, B: int, prep_args, req, ops, *,
+                         hits_np, tab_args):
+        """Shared stage-2 tail of the safe dispatch: survivor selection,
+        rung choice, pruned (or fallback full-scan) scoring.
+        ``tab_args=None`` selects the table-free pruned plan."""
         surv = PL.select_survivors(hits_np, prune="safe",
                                    min_sample=req.min_sample)
         ndev = int(self.mesh.devices.size)
@@ -525,12 +619,48 @@ class _SegmentExec:
         idx = np.zeros((rung,), np.int32)
         idx[:len(surv)] = surv
         valid = np.arange(rung) < len(surv)
-        out = self.prune_fn(B, rung)(*qa, self.shard, jnp.asarray(idx),
-                                     jnp.asarray(valid), *tab_args,
-                                     *prep_args, ops)
+        if tab_args is None:
+            out = self.prune_plain_fn(B, rung)(*qa, self.shard,
+                                               jnp.asarray(idx),
+                                               jnp.asarray(valid), ops)
+        else:
+            out = self.prune_fn(B, rung)(*qa, self.shard, jnp.asarray(idx),
+                                         jnp.asarray(valid), *tab_args,
+                                         *prep_args, ops)
         s, g, r, m = (np.asarray(o) for o in jax.block_until_ready(out))
         # stage-2 gids are already index-space; −inf rows (pruned / empty)
         # get id −1 so they can never alias a real column
+        g = np.where(np.isfinite(s), g, -1).astype(np.int32)
+        return s, g, r, m
+
+    def _dispatch_topm_sourced(self, qa, nq: int, B: int, prep_args, req,
+                               ops):
+        """``prune='topm'`` through a non-scan candidate source: per-row
+        top-M survivor selection on the source's hit counts (host), then
+        the table-free pruned plan — the fused single-dispatch plan is a
+        full scan by construction, which is exactly what the inverted
+        source exists to avoid. Falls back to the full scan when the
+        survivor union outgrows the rung ladder."""
+        hits_np = self.source().hit_counts(qa, B)[:nq]
+        surv = PL.select_survivors(hits_np, prune="topm",
+                                   min_sample=req.min_sample,
+                                   prune_m=self.shape.prune_m)
+        ndev = int(self.mesh.devices.size)
+        rung = PL.prune_rung(max(len(surv), self.k_max),
+                             self.shape.prune_base, self.C, ndev)
+        if rung is None:
+            out = self.scan_fn(B)(*qa, self.shard, *prep_args, ops)
+            s, g, r, m = (np.asarray(o)
+                          for o in jax.block_until_ready(out))
+            g = np.where(np.isfinite(s), g, -1).astype(np.int32)
+            return s, g, r, m
+        idx = np.zeros((rung,), np.int32)
+        idx[:len(surv)] = surv
+        valid = np.arange(rung) < len(surv)
+        out = self.prune_plain_fn(B, rung)(*qa, self.shard,
+                                           jnp.asarray(idx),
+                                           jnp.asarray(valid), ops)
+        s, g, r, m = (np.asarray(o) for o in jax.block_until_ready(out))
         g = np.where(np.isfinite(s), g, -1).astype(np.int32)
         return s, g, r, m
 
@@ -575,10 +705,11 @@ class _SegmentExec:
 
     def stage1_hits(self, sketches: CorrelationSketch) -> np.ndarray:
         """Exact per-candidate sketch-intersection sizes ``[NQ, C]`` for a
-        batch of query sketches — the raw probe plan, bucketed like
-        `query_batch` but with no scoring stage. An already-warmed
-        emit-tables probe is reused (its extra outputs are dropped) instead
-        of compiling a lean twin."""
+        batch of query sketches — the configured candidate source
+        (`ShapePolicy.candidates`), bucketed like `query_batch` but with no
+        scoring stage. The scan source reuses an already-warmed emit-tables
+        probe (its extra outputs are dropped) instead of compiling a lean
+        twin; the inverted source dispatches its postings probe."""
         qa = query_arrays(sketches)
         nq = int(qa[0].shape[0])
         if nq == 0:
@@ -593,11 +724,7 @@ class _SegmentExec:
                 part = tuple(jnp.concatenate(
                     [a, jnp.broadcast_to(a[-1:], (B - (e - s),) + a.shape[1:])])
                     for a in part)
-            emit = self._use_prep and self._key("probe", B, (True,)) in self.cache
-            out = self.probe_fn(B, emit_tables=emit)(
-                *part, self.shard, *self._prep_args(B))
-            hits = out[0] if isinstance(out, tuple) else out
-            rows.append(np.asarray(jax.block_until_ready(hits))[:e - s])
+            rows.append(self.source().hit_counts(part, B)[:e - s])
             s = e
         return np.concatenate(rows, axis=0)
 
@@ -763,10 +890,11 @@ class Server:
         return self._entries[self._order[0]].exec
 
     def _make_entry(self, sid: int, version: int, base: int, used: int,
-                    host_shard) -> _SegEntry:
+                    host_shard, postings=None) -> _SegEntry:
         shard = place_shard(host_shard, self.mesh)
         ex = _SegmentExec(self.mesh, shard, self.shape, buckets=self.buckets,
-                          batch_rows=self._batch_rows, cache=self.cache)
+                          batch_rows=self._batch_rows, cache=self.cache,
+                          postings=postings)
         ex._bucket_cost = dict(self._cap_costs.get(ex.C, {}))
         return _SegEntry(sid=sid, version=version, base=base,
                          used=used, capacity=ex.C, exec=ex)
@@ -783,12 +911,18 @@ class Server:
         blocked on device transfers."""
         if self._live is None or self._live.version == self._seen_version:
             return
+        inv = self.shape.candidates == "inverted"
         with self._live._lock:
             ver = self._live.version
             snaps = []
             for seg in self._live._segs:
                 old = self._entries.get(seg.sid)
                 fresh = old is None or old.version != seg.version
+                if fresh and inv:
+                    # materialise the segment's postings under the lock so
+                    # the snapshot carries the incrementally maintained
+                    # layout (write/tombstone keep it in sync from then on)
+                    seg.postings()
                 snaps.append((seg.sid, seg.version, seg.used,
                               list(seg.names[:seg.used]),
                               seg.host_snapshot() if fresh else None))
@@ -802,8 +936,9 @@ class Server:
                 old.base = base
                 entries[sid] = old
             else:
-                entries[sid] = self._make_entry(sid, version, base, used,
-                                                snap.to_index_shard())
+                entries[sid] = self._make_entry(
+                    sid, version, base, used, snap.to_index_shard(),
+                    postings=snap.postings() if inv else None)
             order.append(sid)
             names.extend(seg_names)
             base += used
@@ -853,7 +988,11 @@ class Server:
                 if cap + (-cap) % ndev in warmed:
                     continue
                 empty = LC.Segment.empty(-1, cap, self.n, self._live.agg)
-                entry = self._make_entry(-1, 0, 0, 0, empty.to_index_shard())
+                entry = self._make_entry(
+                    -1, 0, 0, 0, empty.to_index_shard(),
+                    postings=(empty.postings()
+                              if self.shape.candidates == "inverted"
+                              else None))
                 entry.exec.warmup(cost_reps=cost_reps, modes=modes,
                                   joinability=joinability,
                                   cost_mode=cost_mode,

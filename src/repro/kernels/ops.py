@@ -17,6 +17,7 @@ import jax.numpy as jnp
 from repro.kernels import containment as _ct
 from repro.kernels import flash_attention as _fa
 from repro.kernels import hash_build as _hb
+from repro.kernels import postings as _pm
 from repro.kernels import rank_transform as _rt
 from repro.kernels import ref as _ref
 from repro.kernels import sketch_join as _sj
@@ -72,7 +73,7 @@ def containment_hits(q_kh, q_mask, c_kh, c_mask,
     """Stage-1 joinability intersect (DESIGN.md §5): exact per-candidate
     key-intersection counts, no value traffic. Pallas on TPU, eq-matrix
     reference on XLA (the engine's sortmerge stage-1 path bypasses this
-    wrapper — see `repro.engine.query.make_stage1_fn`)."""
+    wrapper — see `repro.engine.plans.make_probe_fn`)."""
     if cfg.use_pallas:
         return _ct.containment_hits(q_kh, q_mask.astype(jnp.float32),
                                     c_kh, c_mask.astype(jnp.float32),
@@ -90,6 +91,16 @@ def containment_hits_batched(q_kh, q_mask, c_kh, c_mask,
                 a, b.astype(jnp.float32), c_kh, c_mask.astype(jnp.float32),
                 interpret=cfg.interpret))(q_kh, q_mask)
     return _ref.containment_hits_batched(q_kh, q_mask, c_kh, c_mask)
+
+
+def postings_merge(cand, cfg: KernelConfig = KernelConfig()):
+    """Dedup-count of gathered postings windows (DESIGN.md §7): merge each
+    row of candidate column ids into (cols, counts) with every live id in
+    exactly one slot. Slot order is backend-defined (set-equal outputs —
+    see `repro.kernels.ref.postings_merge`); consumers scatter by id."""
+    if cfg.use_pallas:
+        return _pm.postings_merge(cand, interpret=cfg.interpret)
+    return _ref.postings_merge(cand)
 
 
 def rank_transform(x, mask, cfg: KernelConfig = KernelConfig()):

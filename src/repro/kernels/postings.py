@@ -1,0 +1,98 @@
+"""Pallas TPU kernel: postings-window merge for inverted stage-1.
+
+The inverted candidate source (DESIGN.md §7) turns each query sketch into a
+``[n_q, W]`` gather of postings entries — one fixed-width window per query
+key — and flattens the matched column ids into ``cand: i32[B, L]`` rows
+(L = n_q · W, −1 in non-matching slots). This kernel reduces each row to
+per-column hit counts without a sort: the branch-free O(L²) pairwise
+formulation the VPU likes (the same shape trick as `rank_transform.py`)
+
+    count_i  = #{j : cand_j == cand_i}          (the exact hit count)
+    first_i  = #{j < i : cand_j == cand_i} == 0 (dedup: keep one slot per id)
+
+emitting ``(cols, counts)`` with every live id in exactly one slot (its
+first occurrence — the reference oracle compacts instead; the contract is
+set-equality, see `repro.kernels.ref.postings_merge`). L is
+corpus-size-independent, so this is the only O(L²) stage in a pipeline
+whose cost no longer grows with the number of indexed columns.
+
+Grid: ``(B // block_b, L // block_n)`` — query rows outer, comparison
+blocks inner, accumulating into the same [block_b, L] output blocks (the
+reduction-grid revisiting pattern of `containment.py`); the before-count
+accumulates in the i32 ``cols`` output, which the last j-block finalises
+into ids in place.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(ci_ref, cj_ref, cols_ref, cnt_ref):
+    jblk = pl.program_id(1)
+    ci = ci_ref[...]                       # [Bb, L]  i32 — full rows
+    cj = cj_ref[...]                       # [Bb, Bn] i32 — j-block, same rows
+    L = ci.shape[1]
+    Bn = cj.shape[1]
+    jglob = jblk * Bn + jax.lax.broadcasted_iota(jnp.int32, (1, 1, Bn), 2)
+    iglob = jax.lax.broadcasted_iota(jnp.int32, (1, L, 1), 1)
+
+    eq = (cj[:, None, :] == ci[:, :, None]) & (ci[:, :, None] >= 0)
+    cnt_blk = jnp.sum(eq.astype(jnp.float32), axis=-1)            # [Bb, L]
+    before_blk = jnp.sum((eq & (jglob < iglob)).astype(jnp.int32), axis=-1)
+
+    @pl.when(jblk == 0)
+    def _init():
+        cols_ref[...] = jnp.zeros(cols_ref.shape, cols_ref.dtype)
+        cnt_ref[...] = jnp.zeros(cnt_ref.shape, cnt_ref.dtype)
+
+    # distinct (i, j) pairs land in exactly one j-block — plain accumulation
+    cols_ref[...] += before_blk            # before-count, finalised below
+    cnt_ref[...] += cnt_blk
+
+    @pl.when(jblk == pl.num_programs(1) - 1)
+    def _finalize():
+        first = (cols_ref[...] == 0) & (ci >= 0)
+        cnt_ref[...] = jnp.where(first, cnt_ref[...], 0.0)
+        cols_ref[...] = jnp.where(first, ci, -1)
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "block_n", "interpret"))
+def postings_merge(cand, *, block_b: int = 8, block_n: int = 0,
+                   interpret: bool = False):
+    """See :func:`repro.kernels.ref.postings_merge` for semantics."""
+    B, L = cand.shape
+    while block_b > 1 and B % block_b:
+        block_b //= 2
+    if block_n <= 0:
+        block_n = L
+    # VMEM budget: the [Bb, L, Bn] pairwise tensor is the biggest resident —
+    # shrink the row block first, then the comparison block, to stay ≤ ~4 MiB
+    while block_b > 1 and block_b * L * block_n * 4 > 4 * 1024 * 1024:
+        block_b //= 2
+    while block_n > 128 and L * block_n * 4 > 4 * 1024 * 1024:
+        block_n //= 2
+    assert B % block_b == 0 and L % block_n == 0, (B, L, block_b, block_n)
+
+    grid = (B // block_b, L // block_n)
+    cols, counts = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, L), lambda b, j: (b, 0)),
+            pl.BlockSpec((block_b, block_n), lambda b, j: (b, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_b, L), lambda b, j: (b, 0)),
+            pl.BlockSpec((block_b, L), lambda b, j: (b, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, L), jnp.int32),
+            jax.ShapeDtypeStruct((B, L), jnp.float32),
+        ],
+        interpret=interpret,
+    )(cand, cand)
+    return cols, counts

@@ -12,8 +12,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import hashing
-
-PAD_KEY = np.uint32(0xFFFFFFFF)
+from repro.core.sketch import PAD_KEY  # noqa: F401  (canonical sentinel)
 
 
 # ----------------------------------------------------------------------------
@@ -55,7 +54,7 @@ def sketch_join_moments_batched(q_kh, q_val, q_mask, c_kh, c_val, c_mask):
     Implemented as a vmap of the single-query oracle so each batch row's
     floating-point schedule — and therefore its result, bitwise — matches a
     standalone call. This is the semantic ground truth for the batched
-    engine path (`repro.engine.query.make_query_fn(..., batch=B)`).
+    engine path (`repro.engine.plans.make_scan_fn(..., batch=B)`).
     """
     return jax.vmap(
         lambda a, b, c: sketch_join_moments(a, b, c, c_kh, c_val, c_mask))(
@@ -138,6 +137,44 @@ def hoeffding_from_moments(moments, c_low, c_high, alpha=0.05):
     big = jnp.float32(3.4e38)
     ok = m >= 2
     return jnp.where(ok, lo, -big), jnp.where(ok, hi, big)
+
+
+# ----------------------------------------------------------------------------
+# postings_merge: dedup-count of gathered postings windows (stage-1 inverted)
+# ----------------------------------------------------------------------------
+
+def postings_merge(cand):
+    """Merge the candidate ids gathered from inverted-index postings windows
+    (DESIGN.md §7) into per-column hit counts.
+
+      cand: i32[B, L] — one row per query: the column id of every matched
+      (query key, postings entry) pair, −1 for non-matching window slots.
+
+    Returns ``(cols i32[B, L], counts f32[B, L])``: per row, every distinct
+    live column id appears in **exactly one** slot with its exact
+    multiplicity — which equals the key-set intersection size, because each
+    (key, column) pair occurs at most once in the postings and query keys
+    are distinct within a sketch — and all remaining slots are (−1, 0).
+
+    Slot *order* is backend-defined: this reference emits ids ascending and
+    compacted to the front; the Pallas kernel leaves each id at its first
+    occurrence. Consumers scatter by id (`repro.engine.candidates`), so the
+    contract is set-equality of (id, count) pairs.
+    """
+    big = jnp.int32(np.iinfo(np.int32).max)
+
+    def _row(c):
+        s = jnp.sort(jnp.where(c < 0, big, c))
+        first = jnp.concatenate(
+            [jnp.ones((1,), bool), s[1:] != s[:-1]]) & (s != big)
+        cnt = (jnp.searchsorted(s, s, side="right")
+               - jnp.searchsorted(s, s, side="left")).astype(jnp.float32)
+        out_c = jnp.where(first, s, -1)
+        out_n = jnp.where(first, cnt, 0.0)
+        order = jnp.argsort(~first, stable=True)  # firsts (id-ascending) front
+        return out_c[order], out_n[order]
+
+    return jax.vmap(_row)(cand)
 
 
 # ----------------------------------------------------------------------------

@@ -1,0 +1,348 @@
+"""Pluggable candidate generation (DESIGN.md §7): the `CandidateSource`
+layer, the QCR-style inverted key index and its exactness contract.
+
+The load-bearing assertions:
+
+  * `ScanSource` is the pre-refactor stage-1 path **bit-for-bit**: its hit
+    counts equal the probe program dispatched directly;
+  * `InvertedSource` returns *identical* hit counts to the scan on random
+    corpora — across chunkings, capacity rungs and query batches (each
+    stored (key, column) pair posts exactly once, query keys are distinct
+    within a sketch, so the postings-window merge is an exact count);
+  * therefore the PR 4 ``prune='safe'`` superset/ulp contracts hold
+    verbatim with the inverted source active;
+  * the postings layout survives the lifecycle: incremental maintenance
+    under append/delete is *fold-identical* to a fresh rebuild, deleted
+    columns drop out immediately, and a post-warmup mutation sweep compiles
+    nothing (capacity ladder × window ladder);
+  * the PAD sentinel has exactly one definition (`hashing.SENTINEL_HASH`) —
+    enforced by a lint-style grep over the source tree.
+"""
+import dataclasses
+import pathlib
+import re
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from conftest import given, settings, st  # hypothesis or deterministic fallback
+
+from repro.core import hashing
+from repro.core.sketch import PAD_KEY
+from repro.data.pipeline import Table
+from repro.engine import candidates as CD
+from repro.engine import index as IX
+from repro.engine import lifecycle as LC
+from repro.engine import plans as PL
+from repro.engine import serve as SV
+from repro.kernels import ops as K
+from repro.kernels import ref
+from repro.kernels.ops import KernelConfig
+
+from test_two_stage import _corpus, _queries, _superset_with_equal_scores
+
+N_SKETCH = 32
+#: one compile cache for the whole module (same discipline as test_plans)
+CACHE = SV.CompileCache()
+
+
+def _mesh():
+    return jax.make_mesh((1,), ("shard",))
+
+
+def _servers(rng, *, n_tables=12, pad_to=None, buckets=(4,), **shape_kw):
+    tables = _corpus(rng, n_tables=n_tables)
+    idx = IX.build_index(tables, n=N_SKETCH, pad_to=pad_to or n_tables)
+    mesh = _mesh()
+    mk = lambda cand: SV.Server(
+        mesh, idx, PL.ShapePolicy(k_max=5, prune_base=4,
+                                  candidates=cand, **shape_kw),
+        buckets=buckets, cache=CACHE)
+    return idx, mk("scan"), mk("inverted")
+
+
+def _sketches(rng, nq=4):
+    queries = _queries(rng, nq=nq)
+    return SV.build_query_sketches([k for k, _ in queries],
+                                   [v for _, v in queries], n=N_SKETCH)
+
+
+# ---------------------------------------------------------------------------
+# postings layout
+# ---------------------------------------------------------------------------
+
+def _pairs(p: IX.Postings):
+    """The postings' content as a set of (key, col) pairs — the layout
+    contract is *set* equality (within-run order is not part of it)."""
+    return set(zip(p.keys[:p.used].tolist(), p.cols[:p.used].tolist()))
+
+
+def test_build_postings_layout(rng):
+    C, n = 6, 16
+    kh = rng.integers(0, 50, size=(C, n)).astype(np.uint32)
+    mask = rng.random((C, n)) < 0.7
+    p = IX.build_postings(kh, mask, capacity=8)
+    assert p.E == 8 * n and p.used == int(mask.sum())
+    keys = p.keys[:p.used]
+    assert np.all(keys[1:] >= keys[:-1])            # key-sorted
+    assert np.all(p.keys[p.used:] == PAD_KEY)       # PAD tail
+    assert np.all(p.cols[p.used:] == -1)
+    want = {(int(kh[c, j]), c) for c in range(C) for j in range(n)
+            if mask[c, j]}
+    assert _pairs(p) == want
+    # max_run covers the longest equal-key run
+    runs = np.diff(np.flatnonzero(np.r_[True, keys[1:] != keys[:-1], True]))
+    assert p.max_run() == (int(runs.max()) if runs.size else 0)
+
+
+def test_postings_incremental_equals_fresh(rng):
+    """Fold identity at the layout level: a random interleaving of
+    insert_col/remove_col lands on the same (key, col) set as a fresh
+    build over the final state."""
+    C, n = 10, 16
+    kh = np.full((C, n), PAD_KEY, np.uint32)
+    mask = np.zeros((C, n), bool)
+    p = IX.build_postings(kh, mask, capacity=C)
+    for step in range(40):
+        c = int(rng.integers(0, C))
+        if rng.random() < 0.3 and mask[c].any():
+            kh[c] = PAD_KEY
+            mask[c] = False
+            p.remove_col(c)
+        else:                      # insert or upsert
+            kh[c] = rng.integers(0, 30, size=n).astype(np.uint32)
+            mask[c] = rng.random(n) < 0.8
+            kh[c][~mask[c]] = PAD_KEY
+            p.insert_col(c, kh[c], mask[c])
+        fresh = IX.build_postings(kh, mask, capacity=C)
+        assert _pairs(p) == _pairs(fresh) and p.used == fresh.used
+
+
+def test_window_rung_ladder():
+    assert CD.window_rung(0) == CD.WINDOW_BASE
+    assert CD.window_rung(8) == 8
+    assert CD.window_rung(9) == 16
+    assert CD.window_rung(100) == 128
+
+
+# ---------------------------------------------------------------------------
+# postings-merge kernel
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,L", [(1, 64), (4, 256), (7, 192)])
+def test_postings_merge_ref_vs_interpret(rng, B, L):
+    """Both backends produce the same *set* of (col, count) pairs per row —
+    slot order is backend-defined — and match a brute-force host count."""
+    cand = rng.integers(0, 12, size=(B, L)).astype(np.int32)
+    cand[rng.random((B, L)) < 0.5] = -1
+    outs = {
+        "ref": ref.postings_merge(jnp.asarray(cand)),
+        "interp": K.postings_merge(jnp.asarray(cand),
+                                   KernelConfig(backend="interpret")),
+    }
+    for name, (cols, cnt) in outs.items():
+        cols, cnt = np.asarray(cols), np.asarray(cnt)
+        for i in range(B):
+            live = cand[i][cand[i] >= 0]
+            want = {(int(v), float(c)) for v, c in
+                    zip(*np.unique(live, return_counts=True))}
+            got_ids = cols[i][cols[i] >= 0]
+            assert len(got_ids) == len(set(got_ids.tolist())), name
+            got = {(int(v), float(c)) for v, c in
+                   zip(got_ids, cnt[i][cols[i] >= 0])}
+            assert got == want, (name, i)
+        # dense scatter agrees regardless of slot order
+        np.testing.assert_array_equal(
+            CD.dense_hit_counts(cols, cnt, 12),
+            CD.dense_hit_counts(*[np.asarray(o) for o in outs["ref"]], 12))
+
+
+# ---------------------------------------------------------------------------
+# source equivalence
+# ---------------------------------------------------------------------------
+
+def test_scan_source_bit_identical_to_probe_program(rng):
+    """`ScanSource` is an extraction, not a reimplementation: its counts
+    are byte-for-byte the probe program's output."""
+    idx, srv, _ = _servers(rng)
+    sks = _sketches(rng, nq=4)
+    hits = srv.stage1_hits(sks)
+    ex = srv._entries[srv._order[0]].exec
+    qa = IX.query_arrays(sks)
+    out = ex.probe_fn(4)(*qa, ex.shard, *ex._prep_args(4))
+    want = np.asarray(out[0] if isinstance(out, tuple) else out)
+    np.testing.assert_array_equal(hits, want[:, :hits.shape[1]])
+    assert isinstance(ex.source(), CD.CandidateSource)
+    assert ex.source().kind == "scan"
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 2**28), pad_to=st.sampled_from([12, 16, 32]),
+       chunked=st.booleans())
+def test_inverted_hits_equal_scan_hits(seed, pad_to, chunked):
+    """THE exactness contract: identical hit counts from both sources, for
+    random corpora across capacity rungs and scan chunkings."""
+    rng = np.random.default_rng(seed)
+    idx, s_scan, s_inv = _servers(
+        rng, pad_to=pad_to, score_chunk=5 if chunked else 512)
+    sks = _sketches(rng, nq=4)
+    np.testing.assert_array_equal(s_scan.stage1_hits(sks),
+                                  s_inv.stage1_hits(sks))
+
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 2**28),
+       scorer=st.sampled_from(["s1", "s2", "s4"]))
+def test_safe_prune_contract_with_inverted_source(seed, scorer):
+    """The PR 4 safe-prune superset/ulp contract, re-run with the inverted
+    source feeding survivor selection."""
+    rng = np.random.default_rng(seed)
+    idx, s_scan, s_inv = _servers(rng)
+    sks = _sketches(rng, nq=4)
+    req = PL.Request(k=5, scorer=scorer)
+    full = s_scan.query_batch(sks, request=dataclasses.replace(
+        req, prune="off"))
+    safe = s_inv.query_batch(sks, request=dataclasses.replace(
+        req, prune="safe"))
+    _superset_with_equal_scores(full, safe)
+
+
+def test_topm_with_inverted_covers_eligible(rng):
+    """topm through the inverted source with prune_m ≥ C scores exactly the
+    full scan's finite results (mirrors the fused-plan sanity anchor)."""
+    idx, s_scan, _ = _servers(rng)
+    mesh = _mesh()
+    s_topm = SV.Server(mesh, idx,
+                       PL.ShapePolicy(k_max=5, candidates="inverted",
+                                      prune_m=idx.shard.num_columns),
+                       buckets=(4,), cache=CACHE)
+    sks = _sketches(rng, nq=4)
+    full = s_scan.query_batch(sks, request=PL.Request(k=5, prune="off"))
+    topm = s_topm.query_batch(sks, request=PL.Request(k=5, prune="topm"))
+    _superset_with_equal_scores(full, topm)
+
+
+def test_unknown_candidate_source_rejected(rng):
+    idx, srv, _ = _servers(rng)
+    with pytest.raises(ValueError, match="unknown candidate source"):
+        srv._entries[srv._order[0]].exec.source("btree")
+
+
+# ---------------------------------------------------------------------------
+# lifecycle × candidates
+# ---------------------------------------------------------------------------
+
+def _live_setup(rng, delta_cap=8):
+    tables = _corpus(rng, n_tables=5)
+    live = LC.LiveIndex(n=N_SKETCH, delta_cap=delta_cap)
+    live.append(tables)
+    srv = SV.Server(_mesh(), live,
+                    PL.ShapePolicy(k_max=4, prune_base=2,
+                                   candidates="inverted"),
+                    buckets=(4,), cache=SV.CompileCache())
+    return live, srv
+
+
+def test_live_fold_identity_and_delete_visibility(rng):
+    """Incrementally maintained postings equal a fresh rebuild after every
+    mutation, and tombstoned columns leave the candidate sets at once."""
+    live, srv = _live_setup(rng)
+    sks = _sketches(rng, nq=3)
+    srv.refresh()                       # materialises per-segment postings
+    for step in range(3):
+        m = int(rng.integers(64, 400))
+        live.append([Table(
+            keys=rng.choice(2000, size=m, replace=False).astype(np.uint32),
+            values=rng.standard_normal(m).astype(np.float32),
+            name=f"x{step}")])
+        victim = live.segments()[0].tables[step]
+        live.delete(victim)
+        srv.refresh()
+        for seg in live.segments():
+            if seg._postings is None:   # never served → nothing to check
+                continue
+            fresh = IX.build_postings(seg.kh, seg.mask,
+                                      capacity=seg.capacity)
+            assert _pairs(seg._postings) == _pairs(fresh)
+        hits = srv.stage1_hits(sks, refresh=False)
+        dead = [i for i, nm in enumerate(srv.names)
+                if nm.startswith(victim)]
+        assert not hits[:, dead].any(), "tombstoned column still surfaces"
+    # compacted base rebuilds postings fold-identically: hit counts equal a
+    # scan server over the same live index
+    live.compact()
+    srv.refresh()
+    s_scan = SV.Server(_mesh(), live,
+                       PL.ShapePolicy(k_max=4, prune_base=2),
+                       buckets=(4,), cache=SV.CompileCache())
+    np.testing.assert_array_equal(srv.stage1_hits(sks),
+                                  s_scan.stage1_hits(sks))
+
+
+def test_live_mutation_sweep_zero_compiles(rng):
+    """Post-warmup, a mutation sweep (append / delete / compact, staying on
+    the warmed capacity rungs) through the inverted source compiles
+    nothing: postings shapes ride the capacity ladder, windows the window
+    ladder."""
+    live, srv = _live_setup(rng)
+    srv.warmup(modes=("off", "safe", "topm"), include_ladder=True)
+    sks = _sketches(rng, nq=3)
+    misses = srv.cache.misses
+    for step in range(2):
+        m = int(rng.integers(64, 400))
+        live.append([Table(
+            keys=rng.choice(2000, size=m, replace=False).astype(np.uint32),
+            values=rng.standard_normal(m).astype(np.float32),
+            name=f"x{step}")])
+        live.delete(f"t{step}")
+        for prune in ("off", "safe", "topm"):
+            srv.query_batch(sks, request=PL.Request(k=4, prune=prune))
+        srv.search_joinable_sketches(sks, k=4)
+    live.compact()                      # lands back on a warmed rung
+    srv.query_batch(sks, request=PL.Request(k=4, prune="safe"))
+    assert srv.cache.misses == misses, "mutations must not trigger compiles"
+
+
+def test_snapshot_postings_are_isolated(rng):
+    """`host_snapshot` deep-copies the postings: mutating the live segment
+    afterwards must not leak into a snapshot a server is still reading."""
+    live, srv = _live_setup(rng)
+    seg = live.segments()[0]
+    seg.postings()
+    snap = seg.host_snapshot()
+    before = _pairs(snap._postings)
+    live.delete(seg.tables[0])
+    assert _pairs(snap._postings) == before
+
+
+# ---------------------------------------------------------------------------
+# satellite: one sentinel definition
+# ---------------------------------------------------------------------------
+
+#: files allowed to spell the sentinel value: the canonical definition and
+#: masks that are numerically 0xFFFFFFFF but semantically unrelated
+_SENTINEL_ALLOWED = {
+    "src/repro/core/hashing.py",     # canonical SENTINEL_HASH + u64 lane mask
+    "src/repro/train/checkpoint.py",  # crc32 masks
+}
+
+
+def test_pad_sentinel_single_sourced():
+    """Lint: `0xFFFFFFFF` is written once (`hashing.SENTINEL_HASH`); every
+    other layer imports `PAD_KEY`/`PAD_FIB` derived from it."""
+    root = pathlib.Path(__file__).resolve().parent.parent
+    pat = re.compile(r"0x[Ff]{8}\b")
+    offenders = []
+    for path in sorted((root / "src").rglob("*.py")):
+        rel = str(path.relative_to(root))
+        if rel in _SENTINEL_ALLOWED:
+            continue
+        for ln, line in enumerate(path.read_text().splitlines(), 1):
+            if pat.search(line):
+                offenders.append(f"{rel}:{ln}: {line.strip()}")
+    assert not offenders, (
+        "PAD sentinel literals outside the canonical definition "
+        "(import repro.core.sketch.PAD_KEY instead):\n" + "\n".join(offenders))
+    from repro.core.sketch import PAD_FIB
+    assert PAD_KEY == hashing.SENTINEL_HASH == PAD_FIB == 0xFFFFFFFF

@@ -8,8 +8,18 @@ import pytest
 from repro.core import build_sketch
 from repro.data.pipeline import Table, sbn_pair
 from repro.engine import index as IX
+from repro.engine import plans as PL
 from repro.engine import query as Q
 from repro.engine import serve as SV
+
+
+def _scan_fn(mesh, C, n, qcfg, batch=None):
+    """Full-scan program with the config's request operands bound — the
+    plans-layer replacement for the deprecated `Q.make_query_fn`."""
+    shape, req = PL.split_config(qcfg)
+    ops = jnp.asarray(PL.request_operands(req))
+    fn = PL.make_scan_fn(mesh, C, n, shape, batch=batch)
+    return lambda *args: fn(*args, ops)
 
 
 @pytest.fixture(scope="module")
@@ -40,8 +50,8 @@ def _stacked(qsks):
 def test_batched_matches_sequential(corpus, B, intersect):
     mesh, shard, _, qsks = corpus
     qcfg = Q.QueryConfig(k=5, scorer="s4", intersect=intersect, score_chunk=4)
-    seqfn = Q.make_query_fn(mesh, 10, 64, qcfg)
-    bfn = Q.make_query_fn(mesh, 10, 64, qcfg, batch=B)
+    seqfn = _scan_fn(mesh, 10, 64, qcfg)
+    bfn = _scan_fn(mesh, 10, 64, qcfg, batch=B)
     for s in range(0, len(qsks), B):
         batch = qsks[s:s + B]
         if len(batch) < B:
@@ -60,8 +70,8 @@ def test_s4_normalisation_independent_per_query(corpus):
     CI-length min/max normalisation is per row, not pooled over the batch."""
     mesh, shard, _, qsks = corpus
     qcfg = Q.QueryConfig(k=5, scorer="s4")
-    bfn = Q.make_query_fn(mesh, 10, 64, qcfg, batch=2)
-    alone = Q.make_query_fn(mesh, 10, 64, qcfg)(*IX.query_arrays(qsks[0]), shard)
+    bfn = _scan_fn(mesh, 10, 64, qcfg, batch=2)
+    alone = _scan_fn(mesh, 10, 64, qcfg)(*IX.query_arrays(qsks[0]), shard)
     for partner in (1, 2, 3):
         out = bfn(*_stacked([qsks[0], qsks[partner]]), shard)
         for got, want in zip(out, alone):
@@ -74,7 +84,7 @@ def test_bucket_padding_returns_real_queries(corpus):
     srv = SV.QueryServer(mesh, shard, qcfg, buckets=(1, 2, 8))
     out = srv.query_columns([t.keys for t in qts[:3]],
                             [t.values for t in qts[:3]])
-    seqfn = Q.make_query_fn(mesh, 10, 64, qcfg)
+    seqfn = _scan_fn(mesh, 10, 64, qcfg)
     assert all(o.shape == (3, 5) for o in out)
     # 3 queries with buckets (1,2,8) → one padded dispatch at B=8
     assert srv.dispatch_log[-1][0] == 8 and srv.dispatch_log[-1][1] == 3

@@ -301,6 +301,7 @@ def test_qcfg_for_shrinks_score_chunk():
 def test_planned_serving_matches_sequential(rng):
     """End-to-end: whatever plan the server picks, results must equal the
     sequential single-query engine row for row."""
+    from repro.engine import plans as PL
     from repro.engine import query as Q
     from repro.engine import serve as SV
     groups = group_corpus(rng, 3, n_cols=2, n_max=1500)
@@ -313,7 +314,10 @@ def test_planned_serving_matches_sequential(rng):
     qts = [Table(keys=g.keys, values=g.values[0]) for g in groups]
     out = srv.query_columns([t.keys for t in qts], [t.values for t in qts])
     assert all(o.shape == (3, 4) for o in out)
-    seqfn = Q.make_query_fn(mesh, shard.num_columns, 64, qcfg)
+    shape, req = PL.split_config(qcfg)
+    ops = jnp.asarray(PL.request_operands(req))
+    sfn = PL.make_scan_fn(mesh, shard.num_columns, 64, shape)
+    seqfn = lambda *args: sfn(*args, ops)
     sks = SV.build_query_sketches([t.keys for t in qts],
                                   [t.values for t in qts], n=64)
     for i in range(3):

@@ -13,6 +13,7 @@ from repro.core import build_sketch
 from repro.core.sketch import Agg
 from repro.data.pipeline import Table, joined_truth, sbn_pair, skewed_pair
 from repro.engine import index as IX
+from repro.engine import plans as PL
 from repro.engine import query as Q
 
 
@@ -105,8 +106,10 @@ def test_batched_query_serving(rng):
     idx = IX.build_index(tables, n=128, pad_to=16)
     mesh = jax.make_mesh((1,), ("shard",))
     shard = IX.shard_for_mesh(idx, mesh)
-    qcfg = Q.QueryConfig(k=4)
-    qfn = Q.make_query_fn(mesh, shard.num_columns, 128, qcfg)
+    shape, req = PL.split_config(Q.QueryConfig(k=4))
+    ops = jnp.asarray(PL.request_operands(req))
+    sfn = PL.make_scan_fn(mesh, shard.num_columns, 128, shape)
+    qfn = lambda *args: sfn(*args, ops)
     for _ in range(3):
         qsk = build_sketch(jnp.asarray(qt.keys), jnp.asarray(qt.values), n=128)
         s, g, r, m = qfn(*IX.query_arrays(qsk), shard)

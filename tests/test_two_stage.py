@@ -28,6 +28,7 @@ from repro.core.bounds import containment_ci, hoeffding_eligibility_floor
 from repro.core.join import sketch_join
 from repro.data.pipeline import Table
 from repro.engine import index as IX
+from repro.engine import plans as PL
 from repro.engine import query as Q
 from repro.engine import serve as SV
 from repro.kernels import ref
@@ -135,7 +136,8 @@ def test_stage1_fn_matches_oracle_and_single(rng):
         shard.key_hash, shard.mask))
     np.testing.assert_array_equal(hits, want)
     # the single-query program row-matches the batched one
-    fn1 = Q.make_stage1_fn(mesh, shard.num_columns, N_SKETCH, qcfg)
+    shape, _ = PL.split_config(qcfg)
+    fn1 = PL.make_probe_fn(mesh, shard.num_columns, N_SKETCH, shape)
     for i in range(hits.shape[0]):
         qa = IX.query_arrays(jax.tree.map(lambda a, i=i: a[i], sks))
         np.testing.assert_array_equal(np.asarray(fn1(*qa, shard)), hits[i])
@@ -257,9 +259,11 @@ def test_prune_off_bit_identical_to_batched_engine(rng):
                                   [v for _, v in queries], n=N_SKETCH)
     out = srv.query_batch(sks)
     prep = IX.precompute_prep(idx, mesh, shard, qcfg)
-    bfn = Q.make_query_fn(mesh, shard.num_columns, N_SKETCH, qcfg, batch=4,
+    shape, req = PL.split_config(qcfg)
+    ops = jnp.asarray(PL.request_operands(req))
+    bfn = PL.make_scan_fn(mesh, shard.num_columns, N_SKETCH, shape, batch=4,
                           with_prep=True)
-    want = bfn(*IX.query_arrays(sks), shard, prep)
+    want = bfn(*IX.query_arrays(sks), shard, prep, ops)
     for got, ref_ in zip(out, want):
         np.testing.assert_array_equal(np.asarray(got), np.asarray(ref_))
 
