@@ -156,13 +156,19 @@ def run(n_tables: int = 512, n_queries: int = 40, n_sketch: int = 256,
 
 def run_sweep(n_tables: int = 128, n_queries: int = 16, n_sketch: int = 128,
               n_rows: int = 4000, seed: int = 5, repeats: int = 3,
-              batch: int = 8, artifact: str | None = ARTIFACT):
+              batch: int = 8, artifact: str | None = ARTIFACT,
+              ratio_gate: float | None = None):
     """Scorer-sweep mode (DESIGN.md §6): one warmed `Server`, every fast
     scorer × estimator × prune mode as per-request semantics.
 
     Records the compile count at warmup and across the sweep — the sweep
     **must** compile nothing (asserted; the CI `--smoke` run is the
-    compile-count regression gate) — plus per-combo dispatch p50.
+    compile-count regression gate) — plus per-combo dispatch p50 and the
+    per-estimator p50 ratio vs pearson (median over matching scorer ×
+    prune combos), tracking the spearman-tax trajectory in the artifact.
+    ``ratio_gate`` additionally asserts the spearman:pearson ratio stays
+    under the given bound (the `--smoke` CI gate uses 2.5×: smoke headroom
+    over the ≤2× full-bench target of the fused rank pipeline).
     """
     rng = np.random.default_rng(seed)
     tables, queries = _corpus(rng, n_tables, n_queries, n_rows)
@@ -197,11 +203,25 @@ def run_sweep(n_tables: int = 128, n_queries: int = 16, n_sketch: int = 128,
     assert compiles_sweep == 0, (
         f"scorer sweep triggered {compiles_sweep} compiles — the "
         "plan/executor compile-count contract is broken")
+    # per-estimator latency ratio vs pearson under identical scorer/prune
+    ratios = {}
+    for est in PL.ESTIMATORS:
+        if est == "pearson":
+            continue
+        per = [combos[f"{s}/{est}/{p}"]["p50"]
+               / max(combos[f"{s}/pearson/{p}"]["p50"], 1e-9)
+               for s in PL.FAST_SCORERS for p in PL.PRUNE_MODES]
+        ratios[est] = float(np.median(per))
+    if ratio_gate is not None:
+        assert ratios["spearman"] <= ratio_gate, (
+            f"spearman:pearson p50 ratio {ratios['spearman']:.2f}× exceeds "
+            f"the {ratio_gate}× gate — the fused rank pipeline regressed")
     sweep = dict(n_tables=n_tables, queries=len(queries),
                  batch=batch, warmup_s=warmup_s,
                  programs=len(srv.cache),
                  compiles_warmup=compiles_warmup,
                  compiles_sweep=compiles_sweep,
+                 estimator_p50_ratio_vs_pearson=ratios,
                  combos=combos)
     _merge_artifact(artifact, {"scorer_sweep": sweep})
 
@@ -209,6 +229,8 @@ def run_sweep(n_tables: int = 128, n_queries: int = 16, n_sketch: int = 128,
                 compiles_warmup=compiles_warmup,
                 compiles_sweep=compiles_sweep,
                 warmup_s=warmup_s)
+    for est, v in ratios.items():
+        flat[f"ratio_{est}"] = v
     for name, rec in combos.items():
         flat[f"{name.replace('/', '_')}_p50"] = rec["p50"]
     return flat
@@ -219,18 +241,21 @@ def main():
     ap = argparse.ArgumentParser(
         description="§5.5 query latency + plan/executor scorer-sweep gate")
     ap.add_argument("--smoke", action="store_true",
-                    help="small corpus, sweep-only: the CI compile-count "
-                         "regression gate (no artifact rewrite)")
+                    help="small corpus, sweep-only: the CI compile-count + "
+                         "spearman-ratio regression gates (no artifact "
+                         "rewrite)")
     ap.add_argument("--sweep-only", action="store_true",
                     help="run only the scorer sweep at full size")
     args = ap.parse_args()
     if args.smoke:
         r = run_sweep(n_tables=32, n_queries=4, n_sketch=32, n_rows=1000,
-                      repeats=1, artifact=None)
+                      repeats=1, artifact=None, ratio_gate=2.5)
         print("scorer_sweep_smoke," + ",".join(
             f"{k}={v:.4g}" if isinstance(v, float) else f"{k}={v}"
             for k, v in r.items()))
         print("compile-count gate: OK (0 compiles across the request sweep)")
+        print("spearman ratio gate: OK "
+              f"({r['ratio_spearman']:.2f}x <= 2.5x vs pearson)")
         return
     if not args.sweep_only:
         r = run()

@@ -2,11 +2,16 @@
 scoring functions vs joinability (jc, ĵc) and random baselines.
 
 Setup mirrors §5.4: many query columns, each with a candidate pool whose
-after-join correlations are known; rankers see only sketches.
+after-join correlations are known; rankers see only sketches. Full-size
+runs emit ``BENCH_ranking.json`` — the golden quality trend: IR metrics on
+a fixed seed, so ranking regressions show up as a diff of the committed
+artifact rather than only in CI assertions.
 """
 from __future__ import annotations
 
 import collections
+import json
+import os
 
 import numpy as np
 import jax
@@ -19,6 +24,8 @@ from repro.core.join import sketch_join
 from repro.core.ranking import candidate_stats
 from repro.data.pipeline import Table
 from benchmarks.common import average_precision, ndcg_at_k
+
+ARTIFACT = "BENCH_ranking.json"
 
 
 def _make_query_pool(rng, n_cands=40, n_rows=3000):
@@ -44,7 +51,8 @@ def _make_query_pool(rng, n_cands=40, n_rows=3000):
     return Table(keys=kk, values=x), cands, np.array(true_r), np.array(true_jc)
 
 
-def run(n_queries: int = 12, n_cands: int = 40, n_sketch: int = 128, seed: int = 2):
+def run(n_queries: int = 12, n_cands: int = 40, n_sketch: int = 128,
+        seed: int = 2, artifact: str | None = None):
     rng = np.random.default_rng(seed)
     metrics = collections.defaultdict(list)
     for q in range(n_queries):
@@ -78,11 +86,20 @@ def run(n_queries: int = 12, n_cands: int = 40, n_sketch: int = 128, seed: int =
     out = []
     for (name, met), vals in sorted(metrics.items()):
         out.append(dict(ranker=name, metric=met, score=float(np.mean(vals))))
+    if artifact:
+        rankers = collections.defaultdict(dict)
+        for rec in out:
+            rankers[rec["ranker"]][rec["metric"]] = rec["score"]
+        with open(artifact, "w") as f:
+            json.dump(dict(n_queries=n_queries, n_cands=n_cands,
+                           n_sketch=n_sketch, seed=seed,
+                           rankers=dict(rankers)), f, indent=2)
     return out
 
 
 def main():
-    recs = run()
+    recs = run(artifact=ARTIFACT)
+    print(f"wrote {os.path.abspath(ARTIFACT)}")
     base = {r["metric"]: r["score"] for r in recs if r["ranker"] == "jc"}
     for r in recs:
         rel = (r["score"] / base[r["metric"]] - 1) * 100 if base.get(r["metric"]) else 0.0

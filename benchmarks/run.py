@@ -8,9 +8,12 @@ Prints ``name,key=value,...`` CSV lines. Sizes are scaled for a single-CPU
 container; drop --fast for larger corpora. A full-size run (no --fast)
 refreshes **every** committed BENCH_*.json artifact in one go:
 
-    PYTHONPATH=src python -m benchmarks.run --only latency,ingest,lifecycle,prune,scaling
+    PYTHONPATH=src python -m benchmarks.run --only ranking,latency,ingest,lifecycle,prune,scaling
 
-Artifact schemas and regeneration instructions live in benchmarks/README.md.
+The remaining suites (accuracy, rmse, runtime, roofline) are intentionally
+manual — CSV-only paper-figure reproductions with no committed artifact
+(see benchmarks/README.md). Artifact schemas and regeneration instructions
+live in benchmarks/README.md.
 """
 from __future__ import annotations
 
@@ -48,7 +51,8 @@ def main() -> None:
             estimators=("pearson", "spearman") if fast else
                        ("pearson", "spearman", "rin", "qn", "pm1")),
         "ranking": lambda: bench_ranking.run(
-            n_queries=4 if fast else 12, n_cands=24 if fast else 40),
+            n_queries=4 if fast else 12, n_cands=24 if fast else 40,
+            artifact=None if fast else bench_ranking.ARTIFACT),
         "runtime": lambda: bench_runtime.run(
             n_pairs=10 if fast else 25, n_rows=20000 if fast else 60000),
         "latency": lambda: bench_query_latency.run(

@@ -67,7 +67,7 @@ _JPAD = jnp.uint32(PAD_KEY)
 #: (s3 = bootstrap stays a host-side path, `repro.core.scoring.score`), the
 #: §5.3 estimators with an in-program implementation, and the prune plans
 FAST_SCORERS = ("s1", "s2", "s4")
-ESTIMATORS = ("pearson", "spearman")
+ESTIMATORS = ("pearson", "spearman", "rin", "qn")
 PRUNE_MODES = ("off", "safe", "topm")
 
 _SCORER_INDEX = {s: i for i, s in enumerate(FAST_SCORERS)}
@@ -123,7 +123,7 @@ class Request:
     program as traced operands (`request_operands`).
     """
     k: int = 10
-    estimator: str = "pearson"      # pearson | spearman
+    estimator: str = "pearson"      # pearson | spearman | rin | qn
     scorer: str = "s4"              # s1 | s2 | s4  (s3 = bootstrap: host path)
     prune: str = "off"              # off | safe | topm
     alpha: float = 0.05
@@ -136,11 +136,12 @@ def split_config(qcfg) -> "tuple[ShapePolicy, Request]":
     ``k`` — a program built from the split serves any request with k ≤ that.
 
     Preserves the historical leniency of the pre-split scoring tail: any
-    scorer outside {s1, s2} scored as s4, and any estimator other than
-    spearman fell back to pearson — configs that the old servers silently
-    served keep being served (a directly-constructed `Request` is still
-    validated strictly by `request_operands`). Unknown prune modes raise
-    here, as the old server constructors did.
+    scorer outside {s1, s2} scored as s4, and any estimator outside the
+    four in-program ones (pearson/spearman/rin/qn) falls back to pearson —
+    configs that the old servers silently served keep being served (a
+    directly-constructed `Request` is still validated strictly by
+    `request_operands`). Unknown prune modes raise here, as the old server
+    constructors did.
     """
     shape = ShapePolicy(k_max=qcfg.k, score_chunk=qcfg.score_chunk,
                         intersect=qcfg.intersect, kernels=qcfg.kernels,
@@ -187,13 +188,6 @@ def _unpack_ops(ops):
 # ----------------------------------------------------------------------------
 # probe stage: intersect primitives (shared by every plan)
 # ----------------------------------------------------------------------------
-
-def _moments_from(a, b, w):
-    m = jnp.sum(w, -1)
-    return jnp.stack([m, jnp.sum(a * w, -1), jnp.sum(b * w, -1),
-                      jnp.sum(a * a * w, -1), jnp.sum(b * b * w, -1),
-                      jnp.sum(a * b * w, -1)], -1)
-
 
 def _sortmerge_moments(q_kh, q_val, q_mask, kh, vals, mask):
     """Eq-matrix-free intersect (§Perf E2): binary-search each candidate's
@@ -323,47 +317,20 @@ def _sortmerge_moments_batched(q_kh, q_val, q_mask, kh, vals, mask, prep=None):
     return mom, a, b, w
 
 
-#: temp budget of one rank-transform block (bytes): the XLA reference
-#: materialises an O(rows · n²) comparison tensor, so rows are streamed in
-#: blocks. Without this, a program that merely *contains* a spearman branch
-#: (every traced plan does) reserves an O(B·C·n²) temp arena — ~550 MB at
-#: B=8, C=256, n=256 — and pays the arena touch on every dispatch even for
-#: pearson requests (measured ~4 ms fixed on the reference container).
-_RANK_BLOCK_BYTES = 8 << 20
-
-
-def _rank_rows(x, w, kernels: KernelConfig):
-    """rank_transform over the last axis for arbitrary leading dims,
-    streamed in row blocks so the O(rows·n²) comparison temp stays bounded
-    (each row's transform is independent, so blocking is value-exact)."""
-    shape = x.shape
-    n = shape[-1]
-    xr = x.reshape(-1, n)
-    wr = w.reshape(-1, n)
-    R = xr.shape[0]
-    block = max(1, _RANK_BLOCK_BYTES // max(4 * n * n, 1))
-    if R <= block:
-        return K.rank_transform(xr, wr, kernels).reshape(shape)
-    pad = (-R) % block
-    if pad:
-        xr = jnp.pad(xr, ((0, pad), (0, 0)))
-        wr = jnp.pad(wr, ((0, pad), (0, 0)))
-    nb = (R + pad) // block
-    r = jax.lax.map(
-        lambda ab: K.rank_transform(ab[0], ab[1], kernels),
-        (xr.reshape(nb, block, n), wr.reshape(nb, block, n)))
-    return r.reshape(-1, n)[:R].reshape(shape)
-
-
-def _est_select(est, pearson_fn, spearman_fn):
-    """Estimator stage selector. ``est`` is either a static string (legacy
-    specialised programs, e.g. `repro.engine.query.score_shard`) or a traced
-    scalar from the request operand vector — then the branch is a
-    `lax.cond`, so a per-request estimator flip re-uses the compiled
-    program and only ever executes the branch it asks for."""
+def _est_select(est, pearson_fn, spearman_fn, rin_fn, qn_fn):
+    """Estimator stage selector over the four in-program estimators
+    (`ESTIMATORS` order). ``est`` is either a static string (legacy
+    specialised programs, e.g. `repro.engine.query.score_shard` — unknown
+    strings keep the historical pearson fallback) or a traced scalar from
+    the request operand vector — then the branch is a `lax.switch`, so a
+    per-request estimator flip re-uses the compiled program and only ever
+    executes the branch it asks for."""
+    fns = (pearson_fn, spearman_fn, rin_fn, qn_fn)
     if isinstance(est, str):
-        return spearman_fn() if est == "spearman" else pearson_fn()
-    return jax.lax.cond(est > 0.5, spearman_fn, pearson_fn)
+        table = dict(zip(ESTIMATORS, fns))
+        return table.get(est, pearson_fn)()
+    idx = jnp.clip(jnp.round(est), 0, len(fns) - 1).astype(jnp.int32)
+    return jax.lax.switch(idx, fns)
 
 
 def _score_block(q_kh, q_val, q_mask, kh, vals, mask, shape: ShapePolicy,
@@ -382,42 +349,53 @@ def _score_block(q_kh, q_val, q_mask, kh, vals, mask, shape: ShapePolicy,
         else:
             intersect = lambda: _sortmerge_moments(q_kh, q_val, q_mask, kh,
                                                    vals, mask)
-        # The raw moments are needed for m and the §4.3 CI under *either*
+        # The raw moments are needed for m and the §4.3 CI under *every*
         # estimator, so the intersect runs in the main computation (fully
         # fused and parallel; the aligned tensors a/b/w are dead code here
-        # and fold away). The traced-cond branches are then deliberately
+        # and fold away). The traced-switch branches are then deliberately
         # tiny for pearson — XLA:CPU executes a conditional's called
         # computations without the main program's fusion/parallelism, so a
         # heavy branch would cost ~2.5× on the hot scan (measured). The
-        # spearman branch *recomputes* its aligned tensors from the same
+        # rank/qn branches *recompute* their aligned tensors from the same
         # inputs inside the branch: capturing a/b/w instead would force the
         # main program to materialise them for pearson requests too, and
-        # the recompute is noise next to spearman's O(C·n²) rank
-        # transforms. Statically-specialised callers pay nothing either
-        # way: XLA CSEs the two identical intersects of an inline spearman.
+        # the recompute is noise next to the O(C·n²) fused rank-moments /
+        # Qn work. Statically-specialised callers pay nothing either way:
+        # XLA CSEs the identical intersects of an inline rank estimator.
         mom = intersect()[0]
 
-        def _spearman_r():
+        def _ranked_r(kind):
+            def _r():
+                _, a, b, w = intersect()
+                return K.pearson_from_moments(
+                    K.rank_moments(a, b, w, kind, shape.kernels))
+            return _r
+
+        def _qn_r():
             _, a, b, w = intersect()
-            ra = _rank_rows(a, w, shape.kernels)
-            rb = _rank_rows(b, w, shape.kernels)
-            return K.pearson_from_moments(_moments_from(ra, rb, w))
+            return K.qn_correlation(a, b, w, shape.kernels)
 
         r = _est_select(est, lambda: K.pearson_from_moments(mom),
-                        _spearman_r)
+                        _ranked_r("spearman"), _ranked_r("rin"), _qn_r)
         return mom, r
     join = (K.sketch_join_moments_batched if batched else K.sketch_join_moments)
     mom, aligned, hit = join(q_kh, q_val, q_mask, kh, vals, mask,
                              shape.kernels)
 
-    def _spearman_kernel():
+    def _ranked_kernel(kind):
+        def _r():
+            qv = jnp.broadcast_to(q_val[..., None, :] * hit, aligned.shape)
+            return K.pearson_from_moments(
+                K.rank_moments(qv, aligned, hit, kind, shape.kernels))
+        return _r
+
+    def _qn_kernel():
         qv = jnp.broadcast_to(q_val[..., None, :] * hit, aligned.shape)
-        ra = _rank_rows(qv, hit, shape.kernels)
-        rb = _rank_rows(aligned, hit, shape.kernels)
-        return K.pearson_from_moments(_moments_from(ra, rb, hit))
+        return K.qn_correlation(qv, aligned, hit, shape.kernels)
 
     r = _est_select(est, lambda: K.pearson_from_moments(mom),
-                    _spearman_kernel)
+                    _ranked_kernel("spearman"), _ranked_kernel("rin"),
+                    _qn_kernel)
     return mom, r
 
 
@@ -908,12 +886,13 @@ def _gathered_stats(a, w, values_g, cmin_g, cmax_g, q_cmin, q_cmax,
     mom = jnp.stack([w.sum(-1), a.sum(-1), b.sum(-1), (a * a).sum(-1),
                      (b * b).sum(-1), (a * b).sum(-1)], -1)
 
-    def _spearman():
-        ra = _rank_rows(a, w, shape.kernels)
-        rb = _rank_rows(b, w, shape.kernels)
-        return K.pearson_from_moments(_moments_from(ra, rb, w))
+    def _ranked(kind):
+        return lambda: K.pearson_from_moments(
+            K.rank_moments(a, b, w, kind, shape.kernels))
 
-    r = _est_select(est, lambda: K.pearson_from_moments(mom), _spearman)
+    r = _est_select(est, lambda: K.pearson_from_moments(mom),
+                    _ranked("spearman"), _ranked("rin"),
+                    lambda: K.qn_correlation(a, b, w, shape.kernels))
     m = mom[..., 0]
     c_lo = jnp.minimum(q_cmin[..., None], cmin_g)
     c_hi = jnp.maximum(q_cmax[..., None], cmax_g)

@@ -55,7 +55,7 @@ class QueryConfig:
     (`ShapePolicy`, `Request`) pair; prefer those for new code.
     """
     k: int = 10
-    estimator: str = "pearson"      # pearson | spearman
+    estimator: str = "pearson"      # pearson | spearman | rin | qn
     scorer: str = "s4"              # s1 | s2 | s4  (s3 = bootstrap: host path)
     alpha: float = 0.05
     min_sample: int = 3

@@ -109,6 +109,37 @@ def rank_transform(x, mask, cfg: KernelConfig = KernelConfig()):
     return _ref.rank_transform(x, mask.astype(jnp.float32))
 
 
+def rank_moments(a, b, mask, kind: str = "spearman",
+                 cfg: KernelConfig = KernelConfig()):
+    """Fused rank transform + moment reduction: a, b, mask f32[..., n] →
+    f32[..., 6] sufficient statistics for `pearson_from_moments`
+    (``kind="rin"`` rankit-transforms the ranks in the epilogue). The hot
+    path of the spearman/rin estimators — the [.., n] rank arrays never
+    materialise outside the kernel (DESIGN.md §8)."""
+    if cfg.use_pallas:
+        lead, n = a.shape[:-1], a.shape[-1]
+        flat = lambda x: x.reshape(-1, n)
+        out = _rt.rank_moments(flat(a), flat(b),
+                               flat(mask.astype(jnp.float32)),
+                               kind=kind, interpret=cfg.interpret)
+        return out.reshape(*lead, 6)
+    return _ref.rank_moments(a, b, mask, kind=kind)
+
+
+def qn_correlation(a, b, mask, cfg: KernelConfig = KernelConfig()):
+    """Qn robust correlation per row: a, b, mask f32[..., n] → f32[...].
+    Pallas bisects the pairwise-difference bit space in VMEM; the XLA path
+    sorts once and bisects with searchsorted counts (`ref.qn_correlation`)."""
+    if cfg.use_pallas:
+        lead, n = a.shape[:-1], a.shape[-1]
+        flat = lambda x: x.reshape(-1, n)
+        out = _rt.qn_correlation(flat(a), flat(b),
+                                 flat(mask.astype(jnp.float32)),
+                                 interpret=cfg.interpret)
+        return out.reshape(lead)
+    return _ref.qn_correlation(a, b, mask)
+
+
 def hash_build(keys, cfg: KernelConfig = KernelConfig()):
     if cfg.use_pallas:
         return _hb.hash_build(keys, interpret=cfg.interpret)

@@ -112,11 +112,18 @@ def test_request_operands_validate_vocabulary():
 
 def test_split_config_keeps_legacy_leniency(rng):
     """The pre-refactor scoring tail served any scorer outside {s1, s2} as
-    s4 and any estimator other than spearman as pearson; configs relying on
+    s4 and any estimator it didn't implement as pearson; configs relying on
     that keep being served through the split (and through the deprecated
-    servers), while unknown prune modes still raise at construction."""
-    shape, req = PL.split_config(Q.QueryConfig(scorer="s3", estimator="rin"))
+    servers), while unknown prune modes still raise at construction. Note
+    ``rin``/``qn`` are in-program estimators now, so only genuinely unknown
+    names (e.g. kendall) take the pearson fallback."""
+    shape, req = PL.split_config(Q.QueryConfig(scorer="s3",
+                                               estimator="kendall"))
     assert (req.scorer, req.estimator) == ("s4", "pearson")
+    _, req_rin = PL.split_config(Q.QueryConfig(estimator="rin"))
+    assert req_rin.estimator == "rin"   # promoted, no longer a fallback
+    _, req_qn = PL.split_config(Q.QueryConfig(estimator="qn"))
+    assert req_qn.estimator == "qn"
     with pytest.raises(ValueError):
         PL.split_config(Q.QueryConfig(prune="sometimes"))
     # end to end: a legacy server with a lenient config serves (as s4)
@@ -240,15 +247,15 @@ def _static_scan_fn(mesh, shape, req):
     return jax.jit(fn)
 
 
-@pytest.mark.parametrize("estimator", ["pearson", "spearman"])
+@pytest.mark.parametrize("estimator", ["pearson", "spearman", "rin", "qn"])
 @pytest.mark.parametrize("scorer", ["s1", "s2", "s4"])
 def test_scan_plan_bit_identical_to_static_scan(rng, scorer, estimator):
     """The one-compiled-program scan (traced estimator/scorer/α/floor) must
     be byte-for-byte the statically specialised compiled scan — the PR 1
     batched engine semantics — for every fast scorer under pearson, the
-    default estimator (traced selectors are `lax.cond`/bitwise `where`, so
-    the chosen branch's floats are untouched). The spearman branch is a
-    separate called computation whose rank-moment reductions may fuse
+    default estimator (traced selectors are `lax.switch`/bitwise `where`,
+    so the chosen branch's floats are untouched). The rank/qn branches are
+    separate called computations whose fused reductions may fuse
     differently → ulp-equal, the same contract the pruned paths carry."""
     qcfg = Q.QueryConfig(k=5, scorer=scorer, estimator=estimator,
                          score_chunk=5)     # non-divisible → padded scan
@@ -296,7 +303,7 @@ def _superset_with_equal_scores(full, pruned, tol=2e-5):
             np.testing.assert_allclose(s1[i][j[0]], sc, rtol=tol, atol=tol)
 
 
-@pytest.mark.parametrize("estimator", ["pearson", "spearman"])
+@pytest.mark.parametrize("estimator", ["pearson", "spearman", "rin", "qn"])
 @pytest.mark.parametrize("scorer", ["s1", "s2", "s4"])
 def test_safe_and_topm_requests_match_full_scan(rng, scorer, estimator):
     """Per-request prune modes on one warmed server: 'safe' and 'topm'
@@ -329,6 +336,125 @@ def test_safe_and_topm_on_generic_backend(rng, backend_shape):
     topm = srv.query_batch(sks, request=PL.Request(k=5, prune="topm"))
     _superset_with_equal_scores(full, safe)
     _superset_with_equal_scores(full, topm)
+
+
+def _f64_estimator(name, a, b, wb):
+    """Float64 host reference of the §5.3 rank estimators over one aligned
+    (query, candidate) pair — deliberately independent of the jnp code."""
+    import scipy.special
+    a = np.asarray(a, np.float64)
+    b = np.asarray(b, np.float64)
+    m = int(wb.sum())
+
+    def ranks(x):
+        xv = x[wb]
+        r = np.zeros_like(x)
+        for i in np.nonzero(wb)[0]:
+            r[i] = (xv < x[i]).sum() + ((xv == x[i]).sum() + 1) / 2.0
+        return r
+
+    def pear(u, v):
+        if m < 2:
+            return 0.0
+        u, v = u[wb], v[wb]
+        mu, mv = u.mean(), v.mean()
+        cov = (u * v).mean() - mu * mv
+        du = max((u * u).mean() - mu * mu, 0.0)
+        dv = max((v * v).mean() - mv * mv, 0.0)
+        den = np.sqrt(du) * np.sqrt(dv)
+        return cov / den if den > 1e-12 else 0.0
+
+    if name == "spearman":
+        return pear(ranks(a), ranks(b))
+    if name == "rin":
+        msafe = max(m, 1)
+        ta = scipy.special.ndtri(np.clip((ranks(a) - 0.5) / msafe,
+                                         1e-6, 1 - 1e-6))
+        tb = scipy.special.ndtri(np.clip((ranks(b) - 0.5) / msafe,
+                                         1e-6, 1 - 1e-6))
+        return pear(np.where(wb, ta, 0.0), np.where(wb, tb, 0.0))
+    assert name == "qn"
+
+    def qn_scale(x):
+        xv = x[wb]
+        d = np.abs(xv[:, None] - xv[None, :])[np.triu_indices(m, k=1)]
+        h = m // 2 + 1
+        kq = max(h * (h - 1) // 2, 1)
+        if kq > d.size:
+            return 0.0
+        return 2.21914 * np.sort(d)[kq - 1]
+
+    sa, sb = qn_scale(a), qn_scale(b)
+    if sa <= 1e-12 or sb <= 1e-12:
+        return 0.0
+    az, bz = a / sa, b / sb
+    s2 = 1.0 / np.sqrt(2.0)
+    qu, qv = qn_scale((az + bz) * s2), qn_scale((az - bz) * s2)
+    den = qu * qu + qv * qv
+    r = (qu * qu - qv * qv) / den if den > 1e-12 else 0.0
+    return float(np.clip(r, -1.0, 1.0))
+
+
+@pytest.mark.parametrize("estimator", ["spearman", "rin", "qn"])
+def test_rank_estimators_match_f64_references_across_plans(rng, estimator):
+    """Property test for the fused rank pipeline (DESIGN.md §8): plan-level
+    spearman/rin/qn scores — through every scorer × prune mode on one
+    warmed server — agree with independent float64 host references within
+    ulp-scale tolerance. The reference realigns each (query, candidate)
+    sketch pair by key on the host and scores it with numpy/scipy f64
+    implementations of the §5.3 estimators, then pushes (r, m, ci) through
+    the same §4.4 scoring tail."""
+    from repro.kernels import ref as KREF
+    shape = PL.ShapePolicy(k_max=5, prune_base=4, prune_m=12)
+    mesh, idx, srv = _setup(rng, shape)
+    sks = _sketches(rng, nq=3)
+    qa = IX.query_arrays(sks)
+    shard = srv._exec.shard
+    B, C, n = qa[0].shape[0], shard.key_hash.shape[0], N_SKETCH
+
+    r64 = np.zeros((B, C))
+    mom = np.zeros((B, C, 6), np.float32)
+    for qi in range(B):
+        q_kh = np.asarray(qa[0][qi])
+        q_val = np.asarray(qa[1][qi])
+        q_mask = np.asarray(qa[2][qi]) > 0
+        for ci in range(C):
+            lut = {k: v for k, v, mk in zip(np.asarray(shard.key_hash[ci]),
+                                            np.asarray(shard.values[ci]),
+                                            np.asarray(shard.mask[ci]))
+                   if mk > 0}
+            a = np.zeros(n, np.float32)
+            b = np.zeros(n, np.float32)
+            wb = np.zeros(n, bool)
+            for s in range(n):
+                if q_mask[s] and q_kh[s] in lut:
+                    a[s], b[s], wb[s] = q_val[s], lut[q_kh[s]], True
+            r64[qi, ci] = _f64_estimator(estimator, a, b, wb)
+            w = wb.astype(np.float32)
+            mom[qi, ci] = [w.sum(), (a * w).sum(), (b * w).sum(),
+                           (a * a * w).sum(), (b * b * w).sum(),
+                           (a * b * w).sum()]
+    c_lo = np.minimum(np.asarray(qa[3])[:, None], np.asarray(shard.col_min))
+    c_hi = np.maximum(np.asarray(qa[4])[:, None], np.asarray(shard.col_max))
+    lo, hi = KREF.hoeffding_from_moments(jnp.asarray(mom), c_lo, c_hi)
+    ci_len = jnp.asarray(hi) - jnp.asarray(lo)
+    m = jnp.asarray(mom[..., 0])
+
+    tol = 5e-5 if estimator == "qn" else 2e-5
+    for scorer in PL.FAST_SCORERS:
+        want = np.asarray(PL.score_stats(
+            jnp.asarray(r64.astype(np.float32)), m, ci_len, scorer, 3.0))
+        for prune in PL.PRUNE_MODES:
+            out = srv.query_batch(sks, request=PL.Request(
+                k=5, estimator=estimator, scorer=scorer, prune=prune))
+            scores, gids = np.asarray(out[0]), np.asarray(out[1])
+            for qi in range(B):
+                fin = np.isfinite(scores[qi])
+                for sc, gid in zip(scores[qi][fin], gids[qi][fin]):
+                    np.testing.assert_allclose(
+                        sc, want[qi, gid], rtol=tol, atol=tol,
+                        err_msg=f"{estimator}/{scorer}/{prune} q{qi} "
+                                f"col{gid}")
 
 
 def test_request_k_is_a_slice_of_kmax(rng):

@@ -1,0 +1,152 @@
+"""The fused rank→moments kernel and the Qn kernel vs their oracles.
+
+Satellite coverage for the fused rank pipeline (DESIGN.md §8): the
+interpret-mode Pallas `rank_moments` must reproduce the unfused reference
+(`ref.rank_transform` ranks reduced to moments in f64) on adversarial
+tie/mask patterns, the Qn bisection kernel must match the sort-based
+`core.estimators.qn_correlation`, and the `_fit_blocks` VMEM budget must
+account for *both* block dims (the pre-fix loop only shrank ``block_r``,
+so explicit ``block_n`` callers could exceed the budget with block_r
+already at 1).
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+import scipy.special
+
+from repro.core import estimators as E
+from repro.kernels import ops, ref
+from repro.kernels import rank_transform as RT
+from repro.kernels.ops import KernelConfig
+
+INTERP = KernelConfig("interpret")
+
+
+def _adversarial(rng, R=9, n=32):
+    """Rows covering the degenerate shapes that break naive rank code."""
+    a = rng.normal(size=(R, n)).astype(np.float32)
+    b = (rng.normal(size=(R, n)) + 0.4 * a).astype(np.float32)
+    mask = (rng.random((R, n)) < 0.75).astype(np.float32)
+    a[0], b[0] = 1.0, -2.0               # all ties on both sides
+    mask[1] = 0.0                        # all-masked row (m = 0)
+    mask[2] = 0.0
+    mask[2, n // 2] = 1.0                # single survivor (m = 1)
+    a[3, : n // 2] = 0.5                 # heavy tie block
+    b[4] = b[4, 0]                       # ties on one side only
+    mask[5] = 1.0                        # fully dense row
+    return a, b, mask
+
+
+def _moments_f64(ra, rb, w):
+    """The six sufficient statistics accumulated in float64."""
+    ra, rb, w = (np.asarray(x, np.float64) for x in (ra, rb, w))
+    return np.stack([w.sum(-1), (ra * w).sum(-1), (rb * w).sum(-1),
+                     (ra * ra * w).sum(-1), (rb * rb * w).sum(-1),
+                     (ra * rb * w).sum(-1)], -1)
+
+
+def test_fit_blocks_accounts_for_both_dims():
+    budget = 4 * 1024 * 1024
+    # rows shrink first; at the default there is nothing to do
+    assert RT._fit_blocks(8, 128, 128, budget) == (8, 128)
+    # big n: rows hit 1, and the column dim must now shrink too — the
+    # pre-fix loop returned (1, 4096) here, a 64 MB resident block
+    br, bn = RT._fit_blocks(8, 4096, 4096, budget)
+    assert br * 4096 * bn * 4 <= budget
+    assert 4096 % bn == 0
+    # explicit block_n stays divisor-aligned even for non-power-of-two n
+    br, bn = RT._fit_blocks(1, 96, 96, 96 * 96 * 4 // 2)
+    assert 96 % bn == 0 and 1 * 96 * bn * 4 <= 96 * 96 * 4 // 2
+    # budget larger than the tensor: untouched
+    assert RT._fit_blocks(4, 16, 16, budget) == (4, 16)
+
+
+@pytest.mark.parametrize("R,n,block_n", [(9, 32, 0), (16, 64, 16), (6, 128, 0)])
+def test_rank_moments_matches_unfused_f64_reference(rng, R, n, block_n):
+    """Interpret-mode fused kernel == ref ranks + f64 moment accumulation
+    on adversarial tie/mask patterns (all-ties, all-masked, single
+    survivor). block_n < n exercises the reduction-grid revisiting path
+    with the VMEM scratch accumulators."""
+    a, b, mask = _adversarial(rng, R=R, n=n)
+    aj, bj, mj = (jnp.asarray(x) for x in (a, b, mask))
+    got = np.asarray(RT.rank_moments(aj, bj, mj, block_n=block_n,
+                                     interpret=True))
+    ra = np.asarray(ref.rank_transform(aj, mj))
+    rb = np.asarray(ref.rank_transform(bj, mj))
+    want = _moments_f64(ra, rb, mask)
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+    # and the XLA production path agrees with the same oracle
+    got_ref = np.asarray(ref.rank_moments(aj, bj, mj))
+    np.testing.assert_allclose(got_ref, want, rtol=1e-6, atol=1e-6)
+
+
+def test_rank_moments_rin_epilogue(rng):
+    """kind='rin' applies the rankit transform in-register; the result must
+    match an f64 rankit applied to the reference ranks."""
+    a, b, mask = _adversarial(rng)
+    aj, bj, mj = (jnp.asarray(x) for x in (a, b, mask))
+    got = np.asarray(RT.rank_moments(aj, bj, mj, kind="rin", interpret=True))
+    ra = np.asarray(ref.rank_transform(aj, mj), np.float64)
+    rb = np.asarray(ref.rank_transform(bj, mj), np.float64)
+    w = np.asarray(mask, np.float64)
+    msafe = np.maximum(w.sum(-1, keepdims=True), 1.0)
+    ta = np.where(w > 0, scipy.special.ndtri(
+        np.clip((ra - 0.5) / msafe, 1e-6, 1 - 1e-6)), 0.0)
+    tb = np.where(w > 0, scipy.special.ndtri(
+        np.clip((rb - 0.5) / msafe, 1e-6, 1 - 1e-6)), 0.0)
+    want = _moments_f64(ta, tb, w)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+    got_ref = np.asarray(ref.rank_moments(aj, bj, mj, kind="rin"))
+    np.testing.assert_allclose(got_ref, want, rtol=2e-5, atol=2e-5)
+
+
+def test_rank_moments_feeds_pearson_to_spearman(rng):
+    """pearson_from_moments over the fused moments == the host spearman/rin
+    estimators — the end-to-end contract `plans._score_block` relies on."""
+    a, b, mask = _adversarial(rng)
+    aj, bj = jnp.asarray(a), jnp.asarray(b)
+    mj = jnp.asarray(mask)
+    mb = jnp.asarray(mask > 0)
+    r_sp = np.asarray(ref.pearson_from_moments(
+        RT.rank_moments(aj, bj, mj, interpret=True)))
+    np.testing.assert_allclose(r_sp, np.asarray(E.spearman(aj, bj, mb)),
+                               rtol=2e-5, atol=2e-5)
+    r_rin = np.asarray(ref.pearson_from_moments(
+        RT.rank_moments(aj, bj, mj, kind="rin", interpret=True)))
+    np.testing.assert_allclose(r_rin, np.asarray(E.rin(aj, bj, mb)),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("R,n", [(9, 32), (6, 64)])
+def test_qn_kernel_matches_estimators(rng, R, n):
+    """The bit-space bisection kernel == the sort-based host Qn, including
+    the degenerate rows (zero valid pairs → scale 0 → r 0)."""
+    a, b, mask = _adversarial(rng, R=R, n=n)
+    aj, bj = jnp.asarray(a), jnp.asarray(b)
+    got = np.asarray(RT.qn_correlation(aj, bj, jnp.asarray(mask),
+                                       interpret=True))
+    want = np.asarray(E.qn_correlation(aj, bj, jnp.asarray(mask > 0)))
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+    # XLA searchsorted-bisection path: same values up to probe rounding
+    got_ref = np.asarray(ref.qn_correlation(aj, bj, jnp.asarray(mask)))
+    np.testing.assert_allclose(got_ref, want, rtol=5e-5, atol=5e-5)
+
+
+def test_ops_dispatch_and_leading_dims(rng):
+    """The ops-layer dispatchers route both backends through the same
+    semantics, for flat and batched leading dims."""
+    a, b, mask = _adversarial(rng, R=12, n=32)
+    a3 = jnp.asarray(a.reshape(3, 4, 32))
+    b3 = jnp.asarray(b.reshape(3, 4, 32))
+    m3 = jnp.asarray(mask.reshape(3, 4, 32))
+    for kind in ("spearman", "rin"):
+        got_i = np.asarray(ops.rank_moments(a3, b3, m3, kind, INTERP))
+        got_x = np.asarray(ops.rank_moments(a3, b3, m3, kind))
+        assert got_i.shape == got_x.shape == (3, 4, 6)
+        np.testing.assert_allclose(got_i, got_x, rtol=2e-5, atol=2e-5)
+    q_i = np.asarray(ops.qn_correlation(a3, b3, m3, INTERP))
+    q_x = np.asarray(ops.qn_correlation(a3, b3, m3))
+    assert q_i.shape == q_x.shape == (3, 4)
+    np.testing.assert_allclose(q_i, q_x, rtol=5e-5, atol=5e-5)
+    with pytest.raises(ValueError):
+        ref.rank_moments(a3, b3, m3, kind="kendall")
