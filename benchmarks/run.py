@@ -1,6 +1,6 @@
 """Benchmark harness: one entry per paper table/figure + the engineering
-suites (ingest / latency / lifecycle / prune / scaling) + the roofline
-report.
+suites (ingest / latency / lifecycle / prune / scaling / serving) + the
+roofline report.
 
     PYTHONPATH=src python -m benchmarks.run [--fast] [--only <suite,...>]
 
@@ -8,7 +8,7 @@ Prints ``name,key=value,...`` CSV lines. Sizes are scaled for a single-CPU
 container; drop --fast for larger corpora. A full-size run (no --fast)
 refreshes **every** committed BENCH_*.json artifact in one go:
 
-    PYTHONPATH=src python -m benchmarks.run --only ranking,latency,ingest,lifecycle,prune,scaling
+    PYTHONPATH=src python -m benchmarks.run --only ranking,latency,ingest,lifecycle,prune,scaling,serving
 
 The remaining suites (accuracy, rmse, runtime, roofline) are intentionally
 manual — CSV-only paper-figure reproductions with no committed artifact
@@ -34,13 +34,13 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: accuracy,rmse,ranking,"
                          "runtime,latency,ingest,lifecycle,prune,scaling,"
-                         "roofline")
+                         "serving,roofline")
     args = ap.parse_args()
 
     from benchmarks import (bench_accuracy, bench_ingest, bench_lifecycle,
                             bench_prune, bench_query_latency, bench_ranking,
                             bench_rmse, bench_roofline, bench_runtime,
-                            bench_scaling)
+                            bench_scaling, bench_serving)
 
     fast = args.fast
     suites = {
@@ -79,12 +79,19 @@ def main() -> None:
             n_sketch=32 if fast else 64, batch=4 if fast else 8,
             repeats=3 if fast else 5,
             artifact=None if fast else bench_scaling.ARTIFACT),
+        "serving": lambda: bench_serving.run(
+            n_tables=64 if fast else 256, n_queries=24 if fast else 64,
+            n_sketch=64 if fast else 128, n_rows=1500 if fast else 4000,
+            horizon_s=2.5 if fast else 8.0,
+            offered=(1.0, 3.0) if fast else (0.5, 1.0, 3.0),
+            buckets=(1, 8, 16) if fast else (1, 8, 32),
+            artifact=None if fast else bench_serving.ARTIFACT),
     }
     names = {"accuracy": "fig3_accuracy", "rmse": "fig4_rmse",
              "ranking": "table1_ranking", "runtime": "table2_runtime",
              "latency": "sec5p5_query_latency", "ingest": "ingest",
              "lifecycle": "lifecycle", "prune": "prune",
-             "scaling": "scaling"}
+             "scaling": "scaling", "serving": "serving"}
     only = set(args.only.split(",")) if args.only else None
 
     for key, fn in suites.items():

@@ -180,6 +180,21 @@ def request_operands(req: Request) -> np.ndarray:
                       np.float32)
 
 
+def coalesce_key(req: Request) -> tuple:
+    """Request-compatibility key for admission-queue coalescing
+    (`repro.engine.scheduler`): two requests whose keys are equal can ride
+    **one** dispatch — they share every traced operand
+    (`request_operands`: estimator, scorer, α, eligibility floor) and the
+    prune-mode plan selection. ``k`` is deliberately absent: it is a
+    host-side slice of the program's static ``k_max``, so a coalesced
+    dispatch runs at the group's max k and each member slices its own k
+    back out. Validates the request (same errors as `request_operands`),
+    so a bad request fails at submit time, not inside a worker."""
+    request_operands(req)
+    return (req.estimator, req.scorer, req.prune, float(req.alpha),
+            int(req.min_sample))
+
+
 def _unpack_ops(ops):
     """ops f32[4] → (est, scorer, alpha, floor) traced scalars."""
     return ops[0], ops[1], ops[2], ops[3]

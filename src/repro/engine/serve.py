@@ -42,6 +42,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import threading
 import time
 import warnings
 from collections import deque
@@ -130,19 +131,29 @@ class CompileCache:
     *and* across per-request semantic sweeps. One cache can back many
     segment executors (and many `Server`s), so segments with equal shapes
     share programs.
+
+    Thread-safe: ``get`` holds a lock across the lookup *and* the build, so
+    two concurrent callers racing on a cold key build exactly one program
+    and ``misses`` stays an exact compile count (the naive check-then-act
+    would double-build and overcount, making the zero-compile CI gates
+    flaky under the async scheduler's worker pool). Builds are program
+    *construction* (`jax.jit` wrapping — cheap); the XLA compile itself
+    happens lazily at first dispatch, outside the lock.
     """
 
     def __init__(self):
         self._programs: Dict[tuple, object] = {}
+        self._lock = threading.RLock()
         self.misses = 0
 
     def get(self, key: tuple, build):
         """Look up ``key``, building (and counting a miss) on first use."""
-        fn = self._programs.get(key)
-        if fn is None:
-            self.misses += 1
-            fn = build()
-            self._programs[key] = fn
+        with self._lock:
+            fn = self._programs.get(key)
+            if fn is None:
+                self.misses += 1
+                fn = build()
+                self._programs[key] = fn
         return fn
 
     def __len__(self) -> int:
@@ -252,9 +263,15 @@ class _SegmentExec:
         self._minima_dc: Optional[np.ndarray] = None
         #: measured seconds per dispatch for each bucket (filled by warmup)
         self._bucket_cost: Dict[int, float] = {}
+        #: guards the lazily built shared resources (_preps, _sources,
+        #: _minima) — concurrent dispatches must not double-build a prep or
+        #: a postings layout
+        self._res_lock = threading.RLock()
         #: per-dispatch telemetry: (bucket B, real queries, seconds) — a
         #: bounded window so a long-lived server doesn't leak; totals for
-        #: qps are kept separately and never reset
+        #: qps are kept separately and never reset. Guarded by ``_tel_lock``:
+        #: racy ``+=`` under concurrent callers silently loses updates.
+        self._tel_lock = threading.Lock()
         self.dispatch_log: Deque[Tuple[int, int, float]] = deque(maxlen=4096)
         self._total_queries = 0
         self._total_dispatches = 0
@@ -288,16 +305,19 @@ class _SegmentExec:
         if not self._use_prep:
             return None
         sh = self.shape_for(B) if B is not None else self.shape
-        prep = self._preps.get(sh.score_chunk)
-        if prep is None:
-            if self.index is not None:
-                prep = precompute_prep(self.index, self.mesh, self.shard, sh)
-            else:
-                fn = self.cache.get(
-                    ("prep", self.C, self.n, sh.score_chunk),
-                    lambda: PL.make_prep_fn(self.mesh, self.C, self.n, sh))
-                prep = jax.block_until_ready(fn(self.shard))
-            self._preps[sh.score_chunk] = prep
+        with self._res_lock:
+            prep = self._preps.get(sh.score_chunk)
+            if prep is None:
+                if self.index is not None:
+                    prep = precompute_prep(self.index, self.mesh, self.shard,
+                                           sh)
+                else:
+                    fn = self.cache.get(
+                        ("prep", self.C, self.n, sh.score_chunk),
+                        lambda: PL.make_prep_fn(self.mesh, self.C, self.n,
+                                                sh))
+                    prep = jax.block_until_ready(fn(self.shard))
+                self._preps[sh.score_chunk] = prep
         return prep
 
     def _prep_args(self, B: Optional[int] = None):
@@ -357,23 +377,24 @@ class _SegmentExec:
         the shard unless the live-index refresh supplied incrementally
         maintained ones."""
         kind = kind if kind is not None else self.shape.candidates
-        src = self._sources.get(kind)
-        if src is None:
-            if kind == "scan":
-                src = CD.ScanSource(self)
-            elif kind == "inverted":
-                if self._postings_host is None:
-                    self._postings_host = build_postings(
-                        np.asarray(self.shard.key_hash),
-                        np.asarray(self.shard.mask))
-                src = CD.InvertedSource(self._postings_host, C=self.C,
-                                        n=self.n, cache=self.cache,
-                                        kernels=self.shape.kernels)
-            else:
-                raise ValueError(
-                    f"unknown candidate source {kind!r}: use one of "
-                    f"{CD.CANDIDATE_SOURCES}")
-            self._sources[kind] = src
+        with self._res_lock:
+            src = self._sources.get(kind)
+            if src is None:
+                if kind == "scan":
+                    src = CD.ScanSource(self)
+                elif kind == "inverted":
+                    if self._postings_host is None:
+                        self._postings_host = build_postings(
+                            np.asarray(self.shard.key_hash),
+                            np.asarray(self.shard.mask))
+                    src = CD.InvertedSource(self._postings_host, C=self.C,
+                                            n=self.n, cache=self.cache,
+                                            kernels=self.shape.kernels)
+                else:
+                    raise ValueError(
+                        f"unknown candidate source {kind!r}: use one of "
+                        f"{CD.CANDIDATE_SOURCES}")
+                self._sources[kind] = src
         return src
 
     def topm_fn(self, B: int):
@@ -566,10 +587,11 @@ class _SegmentExec:
             out = self.scan_fn(B)(*qa, self.shard, *prep_args, ops)
             jax.block_until_ready(out)
         dt = time.perf_counter() - t0
-        self.dispatch_log.append((B, nq, dt))
-        self._total_queries += nq
-        self._total_dispatches += 1
-        self._total_s += dt
+        with self._tel_lock:
+            self.dispatch_log.append((B, nq, dt))
+            self._total_queries += nq
+            self._total_dispatches += 1
+            self._total_s += dt
         return tuple(o[:nq] for o in out)
 
     def _dispatch_safe(self, qa, nq: int, B: int, prep_args, req, ops):
@@ -697,11 +719,12 @@ class _SegmentExec:
         """Lazily computed per-candidate KMV key-minima layout of the
         resident shard (`repro.engine.index.key_minima`), plus the
         index-constant D̂_C estimates (cached — not recomputed per query)."""
-        if self._minima is None:
-            self._minima = key_minima(self.shard)
-            self._minima_dc = CT.distinct_from_minima(
-                self._minima.count, self._minima.tau, self.n)
-        return self._minima
+        with self._res_lock:
+            if self._minima is None:
+                self._minima = key_minima(self.shard)
+                self._minima_dc = CT.distinct_from_minima(
+                    self._minima.count, self._minima.tau, self.n)
+            return self._minima
 
     def stage1_hits(self, sketches: CorrelationSketch) -> np.ndarray:
         """Exact per-candidate sketch-intersection sizes ``[NQ, C]`` for a
@@ -773,24 +796,35 @@ class _SegmentExec:
     # -- telemetry -----------------------------------------------------------
     def throughput(self) -> dict:
         """Latency/throughput numbers: lifetime totals for queries/qps,
-        percentiles over the bounded recent-dispatch window."""
-        if not self._total_queries:
+        percentiles over the bounded recent-dispatch window. The totals and
+        the log window are read under the telemetry lock, so concurrent
+        dispatches can't tear the percentiles."""
+        with self._tel_lock:
+            queries = self._total_queries
+            dispatches = self._total_dispatches
+            total_s = self._total_s
+            log = list(self.dispatch_log)
+        if not queries:
             return dict(queries=0, dispatches=0, total_s=0.0, qps=0.0,
                         dispatch_p50_ms=0.0, dispatch_p90_ms=0.0,
                         dispatch_p99_ms=0.0, per_query_ms=0.0)
-        lat_ms = np.array([t * 1e3 for _, _, t in self.dispatch_log])
+        lat_ms = np.array([t * 1e3 for _, _, t in log])
         return dict(
-            queries=self._total_queries, dispatches=self._total_dispatches,
-            total_s=self._total_s,
-            qps=self._total_queries / max(self._total_s, 1e-12),
+            queries=queries, dispatches=dispatches,
+            total_s=total_s,
+            qps=queries / max(total_s, 1e-12),
             dispatch_p50_ms=float(np.percentile(lat_ms, 50)),
             dispatch_p90_ms=float(np.percentile(lat_ms, 90)),
             dispatch_p99_ms=float(np.percentile(lat_ms, 99)),
-            per_query_ms=1e3 * self._total_s / max(self._total_queries, 1))
+            per_query_ms=1e3 * total_s / max(queries, 1))
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(frozen=True)
 class _SegEntry:
+    """One segment of a published segment-map snapshot. Frozen: `refresh()`
+    never mutates a live entry in place (a concurrent dispatch may be
+    reading it) — a segment whose global-id ``base`` moved is republished
+    as a *new* entry sharing the old executor."""
     sid: int
     version: int
     base: int            # global-id offset (cumulative used slots)
@@ -852,7 +886,23 @@ class Server:
         self._entries: Dict[int, _SegEntry] = {}
         self._order: List[int] = []
         self.names: List[str] = []
+        #: the published segment-map snapshot — an immutable tuple of frozen
+        #: `_SegEntry`s in dispatch order. Dispatch paths read it **once**
+        #: per call and never touch `_entries`/`_order` directly, so a
+        #: concurrent `refresh()` (which builds a full replacement and swaps
+        #: the reference) can never tear a scan mid-iteration, and every
+        #: result is consistent with exactly one index version (global-id
+        #: bases included).
+        self._view: Tuple[_SegEntry, ...] = ()
         self._seen_version = -1
+        #: serialises refresh() (snapshot + republish); dispatches never
+        #: take it — they read the already-published view
+        self._refresh_lock = threading.RLock()
+        #: guards the logical request counters below
+        self._stats_lock = threading.Lock()
+        #: the attached `repro.engine.scheduler.AsyncScheduler` (if any) —
+        #: its queue-depth / deadline-miss counters join `throughput()`
+        self._scheduler = None
         #: measured bucket costs survive segment turnover per capacity class
         self._cap_costs: Dict[int, Dict[int, float]] = {}
         #: logical request telemetry (a query counts once, however many
@@ -881,6 +931,7 @@ class Server:
                                          capacity=ex.C, exec=ex)
             self._order = [0]
             self.names = list(index.names) if index is not None else []
+            self._view = (self._entries[0],)
 
     # -- segment sync --------------------------------------------------------
     @property
@@ -904,51 +955,70 @@ class Server:
         removed ones, rebuild the global-id catalog. A no-op for static
         sources, and free when nothing moved (lock-free version fast-path —
         in particular, queries don't stall on the index lock while a
-        compaction is folding). The lock is held only to snapshot consistent
-        host-side views of the changed segments (a concurrent append could
-        otherwise produce a torn read); device placement and executor
-        construction happen after it is released, so writers are never
-        blocked on device transfers."""
+        compaction is folding). The index lock is held only to snapshot
+        consistent host-side views of the changed segments (a concurrent
+        append could otherwise produce a torn read); device placement and
+        executor construction happen after it is released, so writers are
+        never blocked on device transfers.
+
+        Concurrency: refreshes serialise on ``_refresh_lock``; dispatches
+        never take it. The replacement segment map is built on the side —
+        retained entries whose global-id ``base`` moved are *republished*
+        (frozen entries sharing the old executor), never mutated — and the
+        new `_view` tuple is swapped in as one reference assignment, so a
+        concurrent `query_batch` sees either the old snapshot or the new
+        one, complete with matching bases, and never a mixture."""
         if self._live is None or self._live.version == self._seen_version:
             return
-        inv = self.shape.candidates == "inverted"
-        with self._live._lock:
-            ver = self._live.version
-            snaps = []
-            for seg in self._live._segs:
-                old = self._entries.get(seg.sid)
-                fresh = old is None or old.version != seg.version
-                if fresh and inv:
-                    # materialise the segment's postings under the lock so
-                    # the snapshot carries the incrementally maintained
-                    # layout (write/tombstone keep it in sync from then on)
-                    seg.postings()
-                snaps.append((seg.sid, seg.version, seg.used,
-                              list(seg.names[:seg.used]),
-                              seg.host_snapshot() if fresh else None))
-        entries: Dict[int, _SegEntry] = {}
-        order: List[int] = []
-        names: List[str] = []
-        base = 0
-        for sid, version, used, seg_names, snap in snaps:
-            if snap is None:
-                old = self._entries[sid]
-                old.base = base
-                entries[sid] = old
-            else:
-                entries[sid] = self._make_entry(
-                    sid, version, base, used, snap.to_index_shard(),
-                    postings=snap.postings() if inv else None)
-            order.append(sid)
-            names.extend(seg_names)
-            base += used
-        for sid, old in self._entries.items():
-            if entries.get(sid) is not old:   # dropped or rebuilt
-                self._retired["dispatches"] += old.exec._total_dispatches
-        self._entries = entries
-        self._order = order
-        self.names = names
-        self._seen_version = ver
+        with self._refresh_lock:
+            if self._live.version == self._seen_version:
+                return  # another thread refreshed while we waited
+            inv = self.shape.candidates == "inverted"
+            with self._live._lock:
+                ver = self._live.version
+                snaps = []
+                for seg in self._live._segs:
+                    old = self._entries.get(seg.sid)
+                    fresh = old is None or old.version != seg.version
+                    if fresh and inv:
+                        # materialise the segment's postings under the lock
+                        # so the snapshot carries the incrementally
+                        # maintained layout (write/tombstone keep it in
+                        # sync from then on)
+                        seg.postings()
+                    snaps.append((seg.sid, seg.version, seg.used,
+                                  list(seg.names[:seg.used]),
+                                  seg.host_snapshot() if fresh else None))
+            entries: Dict[int, _SegEntry] = {}
+            order: List[int] = []
+            names: List[str] = []
+            base = 0
+            for sid, version, used, seg_names, snap in snaps:
+                if snap is None:
+                    old = self._entries[sid]
+                    entries[sid] = (old if old.base == base else
+                                    dataclasses.replace(old, base=base))
+                else:
+                    entries[sid] = self._make_entry(
+                        sid, version, base, used, snap.to_index_shard(),
+                        postings=snap.postings() if inv else None)
+                order.append(sid)
+                names.extend(seg_names)
+                base += used
+            # retired-executor accounting: an exec is retired when no new
+            # entry references it (entry identity can change on a pure
+            # base shift while the exec — and its telemetry — lives on)
+            kept = {id(e.exec) for e in entries.values()}
+            gone = sum(old.exec._total_dispatches
+                       for old in self._entries.values()
+                       if id(old.exec) not in kept)
+            with self._stats_lock:
+                self._retired["dispatches"] += gone
+            self._entries = entries
+            self._order = order
+            self.names = names
+            self._view = tuple(entries[sid] for sid in order)
+            self._seen_version = ver
 
     # -- warmup --------------------------------------------------------------
     def warmup(self, cost_reps: int = 2, include_ladder: bool = True,
@@ -971,8 +1041,7 @@ class Server:
         cost_mode = self.request.prune if self.request.prune in modes \
             else modes[0]
         warmed = set()
-        for sid in self._order:
-            e = self._entries[sid]
+        for e in self._view:
             e.exec.warmup(cost_reps=cost_reps, modes=modes,
                           joinability=joinability, cost_mode=cost_mode,
                           request=self.request)
@@ -1006,9 +1075,10 @@ class Server:
         `warmup()` timings). For a static source this is the single
         executor's plan; for a live source it is the first segment's —
         every segment plans independently at dispatch time."""
-        if not self._order:
+        view = self._view
+        if not view:
             return []
-        return self._entries[self._order[0]].exec.plan_batches(nq)
+        return view[0].exec.plan_batches(nq)
 
     def query_batch(self, sketches: CorrelationSketch, *,
                     request: Optional[PL.Request] = None,
@@ -1032,6 +1102,10 @@ class Server:
         if refresh:
             self.refresh()
         t_start = time.perf_counter()
+        # one atomic read of the published segment map: every per-segment
+        # dispatch below (and the global-id bases) comes from this single
+        # snapshot, however many refreshes land concurrently
+        view = self._view
         k = int(req.k)
         nq = int(jax.tree.leaves(sketches)[0].shape[0])
         empty = (np.full((nq, k), -np.inf, np.float32),
@@ -1040,16 +1114,16 @@ class Server:
         if nq == 0:
             return tuple(a[:0] for a in empty)
         parts = []
-        for sid in self._order:
-            e = self._entries[sid]
+        for e in view:
             if e.used == 0:
                 continue
             s, g, r, m = e.exec.query_batch(sketches, req)
             parts.append((np.asarray(s), np.asarray(g) + e.base,
                           np.asarray(r), np.asarray(m)))
         if not parts:
-            self._q_total += nq
-            self._q_seconds += time.perf_counter() - t_start
+            with self._stats_lock:
+                self._q_total += nq
+                self._q_seconds += time.perf_counter() - t_start
             return empty
         s = np.concatenate([p[0] for p in parts], axis=1)
         g = np.concatenate([p[1] for p in parts], axis=1)
@@ -1065,8 +1139,9 @@ class Server:
         out[1][:, :kk] = np.where(np.isfinite(s), g, -1)
         out[2][:, :kk] = np.where(np.isfinite(s), r, 0.0)
         out[3][:, :kk] = np.where(np.isfinite(s), m, 0.0)
-        self._q_total += nq
-        self._q_seconds += time.perf_counter() - t_start
+        with self._stats_lock:
+            self._q_total += nq
+            self._q_seconds += time.perf_counter() - t_start
         return out
 
     def query_columns(self, keys_list, values_list, *, chunk: int = 8192,
@@ -1085,8 +1160,8 @@ class Server:
         axis is exactly the global id space of `self.names`."""
         if refresh:
             self.refresh()
-        parts = [self._entries[sid].exec.stage1_hits(sketches)[:, :
-                 self._entries[sid].used] for sid in self._order]
+        view = self._view
+        parts = [e.exec.stage1_hits(sketches)[:, :e.used] for e in view]
         return (np.concatenate(parts, axis=1) if parts
                 else np.zeros((0, 0), np.float32))
 
@@ -1116,8 +1191,7 @@ class Server:
         empty = {f: np.zeros((nq, k), np.float32) for f in fields}
         empty["ids"] = np.full((nq, k), -1, np.int32)
         parts = []
-        for sid in self._order:
-            e = self._entries[sid]
+        for e in self._view:
             if e.used == 0:
                 continue
             res = e.exec.search_joinable_sketches(sketches, k=k,
@@ -1163,17 +1237,29 @@ class Server:
         count *logical* requests (one per query, however many segments it
         fanned out to) and ``dispatches`` the underlying per-segment plan
         dispatches; static sources report the single executor's
-        dispatch-level numbers (including latency percentiles)."""
+        dispatch-level numbers (including latency percentiles). When an
+        `repro.engine.scheduler.AsyncScheduler` is attached, its admission
+        telemetry (``queue_depth``, ``deadline_misses``, ...) joins the
+        dict."""
         if self._live is None:
-            return self._exec.throughput()
-        execs = [self._entries[sid].exec for sid in self._order]
-        return dict(queries=self._q_total,
-                    dispatches=self._retired["dispatches"]
-                    + sum(x._total_dispatches for x in execs),
-                    total_s=self._q_seconds,
-                    qps=self._q_total / max(self._q_seconds, 1e-12),
-                    compiles=self.cache.misses,
-                    segments=len(self._order))
+            out = self._exec.throughput()
+        else:
+            view = self._view
+            with self._stats_lock:
+                q_total = self._q_total
+                q_seconds = self._q_seconds
+                retired = self._retired["dispatches"]
+            out = dict(queries=q_total,
+                       dispatches=retired
+                       + sum(e.exec._total_dispatches for e in view),
+                       total_s=q_seconds,
+                       qps=q_total / max(q_seconds, 1e-12),
+                       compiles=self.cache.misses,
+                       segments=len(view))
+        sched = self._scheduler
+        if sched is not None:
+            out.update(sched.queue_stats())
+        return out
 
 
 # ----------------------------------------------------------------------------

@@ -178,6 +178,81 @@ def postings_merge(cand):
 
 
 # ----------------------------------------------------------------------------
+# sorted-row primitives: bitonic network sort + batched binary search
+# ----------------------------------------------------------------------------
+#
+# XLA:CPU's generic `sort` is comparator-call based and measures ~500 ns per
+# element on this container — it is the reason the full-width qn path sat at
+# ~170× pearson (PR 7's recorded honest miss). For the power-of-two row
+# widths the engine uses, a bitonic sorting network built from reshapes +
+# min/max/select (no gathers, no comparator calls) sorts the same [R, n]
+# block ~12× faster and bit-identically. Batched binary search over the
+# sorted rows (log₂ unrolled take_along_axis steps) then replaces the
+# vmapped `jnp.searchsorted`, which lowers to a scalar scan per row.
+
+def _bitonic_sort_rows(x):
+    """Ascending sort along the last axis. Requires the last dim to be a
+    power of two (callers pad with +inf); ties land in network order, which
+    is irrelevant for the value-only consumers here. NaNs are not totally
+    ordered by min/max and are already UB for every estimator upstream."""
+    n = x.shape[-1]
+    assert n & (n - 1) == 0, f"bitonic width must be a power of two: {n}"
+    lead = x.shape[:-1]
+    k = 2
+    while k <= n:
+        j = k // 2
+        while j >= 1:
+            y = x.reshape(lead + (n // (2 * j), 2, j))
+            lo, hi = y[..., 0, :], y[..., 1, :]
+            a, b = jnp.minimum(lo, hi), jnp.maximum(lo, hi)
+            asc = jnp.stack([a, b], axis=-2).reshape(lead + (n,))
+            if k < n:
+                # blocks with the k-bit set merge descending this round
+                dsc = jnp.stack([b, a], axis=-2).reshape(lead + (n,))
+                m2 = asc.reshape(lead + (n // (2 * k), 2, k))
+                f2 = dsc.reshape(lead + (n // (2 * k), 2, k))
+                x = jnp.stack([m2[..., 0, :], f2[..., 1, :]],
+                              axis=-2).reshape(lead + (n,))
+            else:
+                x = asc
+            j //= 2
+        k *= 2
+    return x
+
+
+def _pad_pow2_rows(x, fill):
+    """Pad the last axis up to the next power of two with ``fill``."""
+    n = x.shape[-1]
+    p = 1
+    while p < n:
+        p *= 2
+    if p == n:
+        return x
+    return jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, p - n)],
+                   constant_values=fill)
+
+
+def _searchsorted_rows(xs, probe, side: str):
+    """Row-wise searchsorted: xs [..., n] sorted ascending, probe [..., m]
+    → insertion positions i32[..., m]. An unrolled batched binary search
+    (``ceil(log2(n+1))`` take_along_axis steps with an lo<hi guard — n is a
+    legal insertion point), matching `jnp.searchsorted` exactly while
+    vectorising across rows on CPU."""
+    n = xs.shape[-1]
+    steps = max(1, int(np.ceil(np.log2(n + 1))))
+    lo = jnp.zeros(probe.shape, jnp.int32)
+    hi = jnp.full(probe.shape, n, jnp.int32)
+    for _ in range(steps):
+        mid = (lo + hi) // 2
+        v = jnp.take_along_axis(xs, jnp.minimum(mid, n - 1), axis=-1)
+        go = (v <= probe) if side == "right" else (v < probe)
+        live = lo < hi
+        lo = jnp.where(go & live, mid + 1, lo)
+        hi = jnp.where(~go & live, mid, hi)
+    return lo
+
+
+# ----------------------------------------------------------------------------
 # rank_transform: batched average ranks (ties → mean rank), masked
 # ----------------------------------------------------------------------------
 
@@ -200,6 +275,27 @@ def rank_transform(x, mask):
 
 _RANK_CHUNK_BYTES = 4 << 20  # resident [rows, n, n] compare-tensor budget
 
+#: sketch width from which the sorted-rank twin beats the fused pairwise
+#: compare on XLA:CPU — the O(n²) compare tensor crosses the O(n log²n)
+#: network sort between n=128 (wash) and n=256 (~2×); both paths produce
+#: bit-identical moments, so the switch is invisible to results
+_RANK_SORTED_MIN_N = 192
+
+
+def _ranks_sorted(x, w):
+    """Masked average ranks via sort + binary search — the sort-based twin
+    of the pairwise-compare rank: bitonic-sort each row (invalid → +inf
+    sentinels at the tail), then ``rank = (left + right + 1) / 2`` from the
+    two insertion positions of each value. Counts are exact integers and
+    midranks exact halves (both ≤ n ≪ 2²³), so the rank values — and any
+    moment sums over them — are **bit-identical** to the pairwise path for
+    finite data."""
+    xv = jnp.where(w > 0, x, jnp.inf)
+    xs = _bitonic_sort_rows(_pad_pow2_rows(xv, jnp.inf))
+    left = _searchsorted_rows(xs, xv, "left").astype(jnp.float32)
+    right = _searchsorted_rows(xs, xv, "right").astype(jnp.float32)
+    return (left + right + 1.0) * 0.5 * w
+
 
 def rank_moments(a, b, mask, *, kind: str = "spearman"):
     """Fused masked rank transform + moment reduction per row.
@@ -209,12 +305,16 @@ def rank_moments(a, b, mask, *, kind: str = "spearman"):
     rankit-transforms the ranks first) — ready for `pearson_from_moments`.
 
     Ground truth for the Pallas ``rank_moments`` kernel, and the XLA
-    production path on CPU. The compare + count + moment reduction is a
-    single ``where``/``sum`` expression (XLA:CPU fuses it; an einsum here
-    would materialise the [rows, n, n] indicator and run ~10× slower), and
-    rows stream through `lax.map` in chunks sized so the fused compare
-    tensor stays a few MB — on a single core this is the measured optimum,
-    and no [R, n] rank array or O(R·n²) arena ever materialises.
+    production path on CPU. Two bit-identical rank implementations serve
+    different widths: below `_RANK_SORTED_MIN_N` the compare + count +
+    moment reduction is a single ``where``/``sum`` expression (XLA:CPU
+    fuses it; an einsum here would materialise the [rows, n, n] indicator
+    and run ~10× slower) with rows streamed through `lax.map` in chunks
+    sized so the fused compare tensor stays a few MB — the measured
+    single-core optimum at small n. From `_RANK_SORTED_MIN_N` up, the
+    O(n²) compare loses to the sorted twin (`_ranks_sorted`: bitonic
+    network + batched binary search), which takes over the full row block
+    with no chunking (its intermediates are O(R·n)).
     """
     if kind not in ("spearman", "rin"):
         raise ValueError(f"unknown rank_moments kind: {kind!r}")
@@ -225,16 +325,7 @@ def rank_moments(a, b, mask, *, kind: str = "spearman"):
     b2 = b.reshape(R, n)
     w2 = mask.astype(jnp.float32).reshape(R, n)
 
-    def _chunk(args):
-        ac, bc, wc = args                               # [c, n]
-        m = jnp.sum(wc, axis=-1)                        # [c]
-
-        def ranks(x):
-            lt = jnp.where(x[:, None, :] < x[:, :, None], wc[:, None, :], 0.0)
-            eq = jnp.where(x[:, None, :] == x[:, :, None], wc[:, None, :], 0.0)
-            return (jnp.sum(lt + 0.5 * eq, axis=-1) + 0.5) * wc
-
-        ra, rb = ranks(ac), ranks(bc)
+    def _moments(m, ra, rb, wc):
         if kind == "rin":
             msafe = jnp.maximum(m, 1.0)[:, None]
             qa = jnp.clip((ra - 0.5) / msafe, 1e-6, 1.0 - 1e-6)
@@ -244,6 +335,22 @@ def rank_moments(a, b, mask, *, kind: str = "spearman"):
         return jnp.stack(
             [m, jnp.sum(ra, -1), jnp.sum(rb, -1), jnp.sum(ra * ra, -1),
              jnp.sum(rb * rb, -1), jnp.sum(ra * rb, -1)], axis=-1)
+
+    if n >= _RANK_SORTED_MIN_N:
+        out = _moments(jnp.sum(w2, axis=-1), _ranks_sorted(a2, w2),
+                       _ranks_sorted(b2, w2), w2)
+        return out.reshape(*lead, 6)
+
+    def _chunk(args):
+        ac, bc, wc = args                               # [c, n]
+        m = jnp.sum(wc, axis=-1)                        # [c]
+
+        def ranks(x):
+            lt = jnp.where(x[:, None, :] < x[:, :, None], wc[:, None, :], 0.0)
+            eq = jnp.where(x[:, None, :] == x[:, :, None], wc[:, None, :], 0.0)
+            return (jnp.sum(lt + 0.5 * eq, axis=-1) + 0.5) * wc
+
+        return _moments(m, ranks(ac), ranks(bc), wc)
 
     block = max(1, _RANK_CHUNK_BYTES // (4 * n * n))
     if R <= block:
@@ -267,20 +374,25 @@ _MAX_FINITE_BITS = np.int32(np.float32(np.finfo(np.float32).max).view(np.int32))
 def _qn_scale_rows(x, w):
     """Per-row Qn scale: 2.21914 · kq-th smallest valid pairwise |diff|.
 
-    Sort-once + bit-space bisection: each row is sorted (invalid → +inf),
-    then the order statistic is found by bisecting the int32 bit patterns of
-    non-negative f32 (monotone in value) — each of the 31 probes counts
-    pairs with ``x_j ≤ x_i + t`` via a vmapped `searchsorted`, so the whole
-    thing is O(n log n + 31·n log n) per row instead of an O(n² log n²)
-    pairwise sort. The probe compares ``x_j ≤ x_i + t`` rather than
-    ``x_j − x_i ≤ t`` (one rounding), so results can differ from the
-    pairwise oracle in the last ulp."""
+    Sort-once + bit-space bisection: each row is sorted (invalid → +inf;
+    bitonic network — XLA:CPU's comparator sort is several times slower),
+    then the order statistic is found by bisecting the int32 bit patterns
+    of non-negative f32 (monotone in value) — each of the 31 probes counts
+    pairs with ``x_j ≤ x_i + t`` via a vmapped `jnp.searchsorted` (inside
+    the bisection loop XLA fuses it better than the unrolled
+    `_searchsorted_rows` gather chain, measured ~20% faster end-to-end),
+    so the whole thing is O(n log n + 31·n log n) per row instead of an
+    O(n² log n²) pairwise sort. The probe compares ``x_j ≤ x_i + t``
+    rather than ``x_j − x_i ≤ t`` (one rounding), so results can differ
+    from the pairwise oracle in the last ulp."""
     R, n = x.shape
-    xs = jnp.sort(jnp.where(w > 0, x, jnp.inf), axis=-1)
+    xs = _bitonic_sort_rows(_pad_pow2_rows(jnp.where(w > 0, x, jnp.inf),
+                                           jnp.inf))
+    np2 = xs.shape[-1]
     m = jnp.sum(w, axis=-1)
     h = jnp.floor(m * 0.5) + 1.0
     kq = jnp.maximum(h * (h - 1.0) * 0.5, 1.0)
-    idx = jnp.arange(n, dtype=jnp.float32)[None, :]
+    idx = jnp.arange(np2, dtype=jnp.float32)[None, :]
     ivalid = idx < m[:, None]
 
     def count(t):

@@ -150,3 +150,66 @@ def test_ops_dispatch_and_leading_dims(rng):
     np.testing.assert_allclose(q_i, q_x, rtol=5e-5, atol=5e-5)
     with pytest.raises(ValueError):
         ref.rank_moments(a3, b3, m3, kind="kendall")
+
+
+# ---------------------------------------------------------------------------
+# full-width XLA fast paths (DESIGN.md §8: bitonic sort + batched search)
+# ---------------------------------------------------------------------------
+
+def test_sorted_row_primitives_match_references(rng):
+    """`_bitonic_sort_rows` == `jnp.sort` bit-for-bit (with +inf padding
+    lanes) and `_searchsorted_rows` == row-vmapped `jnp.searchsorted` on
+    tie-heavy probes, both sides — the primitives every full-width path
+    leans on."""
+    x = np.round(rng.normal(size=(32, 128)) * 8).astype(np.float32) / 8
+    x[3] = np.inf                        # all-padding row survives the net
+    xs_ref = np.sort(x, axis=-1)
+    np.testing.assert_array_equal(
+        np.asarray(ref._bitonic_sort_rows(jnp.asarray(x))), xs_ref)
+    # non-power-of-two widths go through the +inf pad
+    y = x[:, :100]
+    padded = np.asarray(ref._bitonic_sort_rows(
+        ref._pad_pow2_rows(jnp.asarray(y), jnp.inf)))
+    np.testing.assert_array_equal(padded[:, :100], np.sort(y, axis=-1))
+    assert padded.shape[-1] == 128 and np.all(np.isinf(padded[:, 100:]))
+    probe = np.round(rng.normal(size=(32, 128)) * 8).astype(np.float32) / 8
+    xs = jnp.asarray(xs_ref)
+    for side in ("left", "right"):
+        got = np.asarray(ref._searchsorted_rows(xs, jnp.asarray(probe), side))
+        want = np.stack([np.searchsorted(xs_ref[i], probe[i], side=side)
+                         for i in range(32)])
+        np.testing.assert_array_equal(got, want)
+
+
+def test_rank_sorted_path_bit_identical_to_pairwise(rng):
+    """At n ≥ `_RANK_SORTED_MIN_N` ranks come from sort + two binary
+    searches; the midrank ``(left + right + 1)/2`` must equal the pairwise
+    ``Σ lt + ½·Σ eq + ½`` formula **bit-for-bit** (exact integers and
+    halves in f32), so the threshold is invisible to every caller."""
+    n = ref._RANK_SORTED_MIN_N + 64      # 256: pow2, above threshold
+    a, b, mask = _adversarial(rng, R=16, n=n)
+    aj, mj = jnp.asarray(a), jnp.asarray(mask)
+    got = np.asarray(ref._ranks_sorted(aj, mj))
+    lt = np.where(a[:, None, :] < a[:, :, None], mask[:, None, :], 0.0)
+    eq = np.where(a[:, None, :] == a[:, :, None], mask[:, None, :], 0.0)
+    want = (np.sum(lt + 0.5 * eq, axis=-1) + 0.5) * mask
+    np.testing.assert_array_equal(got, want.astype(np.float32))
+    # and the fused rank_moments above threshold still matches the f64
+    # oracle (spearman + rin epilogues)
+    bj = jnp.asarray(b)
+    ra = np.asarray(ref.rank_transform(aj, mj))
+    rb = np.asarray(ref.rank_transform(bj, mj))
+    np.testing.assert_allclose(
+        np.asarray(ref.rank_moments(aj, bj, mj)),
+        _moments_f64(ra, rb, mask), rtol=1e-6, atol=1e-6)
+
+
+def test_qn_full_width_matches_oracle_above_threshold(rng):
+    """The bitonic-sorted Qn bisection at full width (n = 256, non-pow2
+    n = 200) still matches the host estimator on adversarial rows."""
+    for n in (200, 256):
+        a, b, mask = _adversarial(rng, R=9, n=n)
+        aj, bj = jnp.asarray(a), jnp.asarray(b)
+        got = np.asarray(ref.qn_correlation(aj, bj, jnp.asarray(mask)))
+        want = np.asarray(E.qn_correlation(aj, bj, jnp.asarray(mask > 0)))
+        np.testing.assert_allclose(got, want, rtol=5e-5, atol=5e-5)

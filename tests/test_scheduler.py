@@ -1,0 +1,292 @@
+"""Async SLO-aware scheduler + serving-layer race fixes (DESIGN.md §9).
+
+The load-bearing assertions:
+
+  * results served through the scheduler are **bit-identical** to calling
+    `Server.query_batch` directly — per ticket, whatever coalescing the
+    admission loop chose (engine batching is bit-identical to sequential
+    for ``prune='off'``, so a merged dispatch is just a bigger batch);
+  * coalescing is real and observable: queries that arrive while the
+    worker is busy ship as one dispatch group, `stats()` counts groups
+    and widths exactly, and ``max_queue`` back-pressure raises in the
+    submitting caller;
+  * invalid requests fail at `submit()` (in the caller), worker-side
+    failures propagate to every waiter's `result()`;
+  * `CompileCache.get` is race-free: N threads hammering one cold key
+    build once and ``misses`` stays an exact compile counter;
+  * the threaded stress test: query threads race append/delete/compact
+    + `refresh()` through the scheduler — no exceptions, zero compiles
+    (the mutations stay on warmed ladder rungs), and every result is
+    bit-identical to a single-threaded replay oracle at *some* index
+    version the query's submit→complete window overlapped.
+"""
+import threading
+import time
+
+import numpy as np
+import jax
+import pytest
+
+from repro.data.pipeline import Table
+from repro.engine import index as IX
+from repro.engine import lifecycle as LC
+from repro.engine import plans as PL
+from repro.engine import serve as SV
+from repro.engine.scheduler import AsyncScheduler
+
+from test_two_stage import _corpus, _queries
+
+N_SKETCH = 32
+
+
+def _mesh():
+    return jax.make_mesh((1,), ("shard",))
+
+
+def _static_server(rng, n_tables=8, buckets=(1, 2, 4)):
+    tables = _corpus(rng, n_tables=n_tables)
+    idx = IX.build_index(tables, n=N_SKETCH, pad_to=n_tables)
+    srv = SV.Server(_mesh(), idx, PL.ShapePolicy(k_max=4, prune_base=2),
+                    request=PL.Request(k=4), buckets=buckets,
+                    cache=SV.CompileCache())
+    srv.warmup(modes=("off",))
+    return srv
+
+
+def _qsks(rng, nq):
+    qs = _queries(rng, nq=nq)
+    sks = SV.build_query_sketches([k for k, _ in qs], [v for _, v in qs],
+                                  n=N_SKETCH)
+    return jax.tree.map(np.asarray, sks)   # host-side: submit slices stay np
+
+
+def _slice(sks, i):
+    return jax.tree.map(lambda a: a[i:i + 1], sks)
+
+
+def _as_np(out):
+    return tuple(np.asarray(a) for a in out)
+
+
+def test_scheduler_bit_identical_to_direct(rng):
+    """Per-ticket results == the direct batched call, element for element,
+    regardless of how the admission loop grouped the submissions."""
+    srv = _static_server(rng)
+    sks = _qsks(rng, 6)
+    direct = _as_np(srv.query_batch(sks))
+    with AsyncScheduler(srv, workers=1) as sched:
+        tickets = [sched.submit(_slice(sks, i)) for i in range(6)]
+        for i, t in enumerate(tickets):
+            got = t.result(timeout=120.0)
+            for g, d in zip(got, direct):
+                np.testing.assert_array_equal(g, d[i:i + 1, :4])
+        st = sched.stats()
+    assert st["submitted"] == st["completed"] == 6
+    assert st["errors"] == 0 and st["queue_depth"] == 0
+    # admission telemetry rides Server.throughput()
+    tp = srv.throughput()
+    assert tp["queue_depth"] == 0 and tp["deadline_misses"] == 0
+
+
+def test_coalescing_counters_and_backpressure(rng, monkeypatch):
+    """While the single worker is parked inside a dispatch, later arrivals
+    pile into the queue and flush as one group; `max_queue` rejects the
+    overflow in the submitting caller."""
+    srv = _static_server(rng, buckets=(1, 2, 4))
+    sks = _qsks(rng, 6)
+    gate, entered = threading.Event(), threading.Event()
+    orig = srv.query_batch
+    widths = []
+
+    def slow(s, **kw):
+        widths.append(int(jax.tree.leaves(s)[0].shape[0]))
+        if len(widths) == 1:
+            entered.set()
+            assert gate.wait(30.0)
+        return orig(s, **kw)
+
+    monkeypatch.setattr(srv, "query_batch", slow)
+    sched = AsyncScheduler(srv, workers=1, max_queue=4)
+    try:
+        head = sched.submit(_slice(sks, 0))
+        assert entered.wait(30.0)
+        rest = [sched.submit(_slice(sks, i)) for i in range(1, 5)]
+        with pytest.raises(RuntimeError, match="queue full"):
+            sched.submit(_slice(sks, 5))
+        gate.set()
+        for t in [head] + rest:
+            t.result(timeout=120.0)
+        st = sched.stats()
+        # head alone, then the four queued queries as one coalesced group
+        # (max_coalesce defaults to max(buckets) = 4)
+        assert widths == [1, 4]
+        assert st["batches"] == 2 and st["avg_coalesce"] == 2.5
+        assert st["flush_full"] + st["flush_drain"] == 2
+    finally:
+        gate.set()
+        sched.close()
+    with pytest.raises(RuntimeError, match="closed"):
+        sched.submit(_slice(sks, 0))
+
+
+def test_submit_validation_and_error_propagation(rng, monkeypatch):
+    """Bad requests raise in the caller; worker-side exceptions re-raise
+    from every affected ticket's `result()` and count as errors."""
+    srv = _static_server(rng)
+    sks = _qsks(rng, 1)
+    with AsyncScheduler(srv, workers=1) as sched:
+        with pytest.raises(ValueError, match="k_max"):
+            sched.submit(_slice(sks, 0), request=PL.Request(k=9))
+        with pytest.raises((ValueError, KeyError, AssertionError)):
+            sched.submit(_slice(sks, 0),
+                         request=PL.Request(k=2, estimator="nope"))
+        monkeypatch.setattr(
+            srv, "query_batch",
+            lambda *a, **k: (_ for _ in ()).throw(RuntimeError("kaboom")))
+        t = sched.submit(_slice(sks, 0))
+        with pytest.raises(RuntimeError, match="kaboom"):
+            t.result(timeout=30.0)
+        assert sched.stats()["errors"] == 1
+
+
+def test_compile_cache_single_miss_under_contention():
+    """N threads racing one cold key: exactly one build, exact counter —
+    the check-then-act race `CompileCache.get` used to have."""
+    cache = SV.CompileCache()
+    builds = []
+
+    def build():
+        time.sleep(0.05)                 # widen the old race window
+        builds.append(object())
+        return builds[-1]
+
+    got, errs = [], []
+
+    def hit():
+        try:
+            got.append(cache.get(("cold",), build))
+        except BaseException as e:       # pragma: no cover - fail loudly
+            errs.append(e)
+
+    threads = [threading.Thread(target=hit) for _ in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errs
+    assert cache.misses == 1 and len(builds) == 1
+    assert all(g is builds[0] for g in got)
+
+
+# ---------------------------------------------------------------------------
+# the stress test: queries race mutations through the scheduler
+# ---------------------------------------------------------------------------
+
+def _seed_tables(rng, n=5):
+    return _corpus(rng, n_tables=n)
+
+
+def _mutation_script(rng, steps=4):
+    """A deterministic append/delete/compact schedule (generated once,
+    replayed twice: live under load, then single-threaded for the
+    oracle)."""
+    script = []
+    for step in range(steps):
+        m = int(rng.integers(64, 400))
+        t = Table(keys=rng.choice(2000, size=m, replace=False).astype(
+                      np.uint32),
+                  values=rng.standard_normal(m).astype(np.float32),
+                  name=f"x{step}")
+        script.append(("append", [t]))
+        script.append(("delete", f"t{step}"))
+    script.append(("compact", None))
+    return script
+
+
+def _apply(live, op):
+    kind, arg = op
+    if kind == "append":
+        live.append(arg)
+    elif kind == "delete":
+        live.delete(arg)
+    else:
+        live.compact()
+
+
+def _live_server(rng, tables):
+    live = LC.LiveIndex(n=N_SKETCH, delta_cap=8)
+    live.append(tables)
+    srv = SV.Server(_mesh(), live,
+                    PL.ShapePolicy(k_max=4, prune_base=2),
+                    request=PL.Request(k=4),
+                    buckets=(1, 2, 4), cache=SV.CompileCache())
+    srv.refresh()
+    srv.warmup(modes=("off",), include_ladder=True)
+    return live, srv
+
+
+def test_stress_queries_race_mutations(rng):
+    """Query threads hammer the scheduler while a mutator appends, deletes
+    and compacts (with `refresh()` republishing the snapshot under them).
+    No exceptions, zero compiles, and every result equals the
+    single-threaded oracle at some version inside the query's
+    submit→complete window — snapshot isolation, end to end."""
+    seed = int(rng.integers(1 << 30))
+    rng_live = np.random.default_rng(seed)
+    tables = _seed_tables(rng_live)
+    script = _mutation_script(rng_live)
+    live, srv = _live_server(rng_live, tables)
+    sks = _qsks(np.random.default_rng(seed + 1), 1)
+    srv.query_batch(sks)                 # warm this query's path
+    misses0 = srv.cache.misses
+
+    results, errors = [], []
+    stop = threading.Event()
+
+    def qloop(sched):
+        while not stop.is_set():
+            v0 = live.version
+            try:
+                res = sched.query(sks, timeout=120.0)
+            except BaseException as e:   # pragma: no cover - fail loudly
+                errors.append(e)
+                return
+            results.append((v0, live.version, res))
+
+    with AsyncScheduler(srv, workers=2) as sched:
+        threads = [threading.Thread(target=qloop, args=(sched,))
+                   for _ in range(3)]
+        for t in threads:
+            t.start()
+        for op in script:
+            _apply(live, op)
+            srv.refresh()
+            time.sleep(0.05)
+        stop.set()
+        for t in threads:
+            t.join(timeout=180.0)
+    assert not errors
+    assert results, "query threads never completed a request"
+    assert srv.cache.misses == misses0, \
+        "concurrent mutations must not trigger compiles (warmed ladder)"
+
+    # single-threaded replay: expected results at every index version
+    rng_replay = np.random.default_rng(seed)
+    tables2 = _seed_tables(rng_replay)
+    script2 = _mutation_script(rng_replay)
+    live2, srv2 = _live_server(rng_replay, tables2)
+    expected = {live2.version: _as_np(srv2.query_batch(sks))}
+    for op in script2:
+        _apply(live2, op)
+        expected[live2.version] = _as_np(srv2.query_batch(sks))
+    assert live2.version == live.version
+
+    def matches(res, want):
+        return all(np.array_equal(g, w[:, :4]) for g, w in zip(res, want))
+
+    for v0, v1, res in results:
+        window = [v for v in range(v0, v1 + 1) if v in expected]
+        assert window, f"no oracle state for version window [{v0}, {v1}]"
+        assert any(matches(res, expected[v]) for v in window), (
+            f"result matches no index version in the query's window "
+            f"[{v0}, {v1}]")
