@@ -27,7 +27,16 @@ flat) plus scheduler-goodput ≥ sequential-goodput at every rate at or
 above capacity. ``--smoke`` shrinks the corpus/horizon for CI and keeps
 both gates.
 
-Emits ``BENCH_serving.json``.
+``--mesh`` adds the sharded-serving section (DESIGN.md §10): the same
+open-loop replay against a `Server` whose index is column-sharded over 8
+devices, gated on (a) bit-identical results vs the single-device server
+(shared `CompileCache`, uneven C), (b) zero steady-state compiles, and
+(c) scheduler goodput beating sequential dispatch above capacity. When
+the process only sees one device it re-execs itself under
+``XLA_FLAGS=--xla_force_host_platform_device_count=8``.
+
+Emits ``BENCH_serving.json`` (the ``"sharded"`` key holds the mesh
+section; either entrypoint preserves the other's section on rewrite).
 """
 from __future__ import annotations
 
@@ -205,8 +214,7 @@ def run(n_tables: int = 256, n_queries: int = 64, n_sketch: int = 128,
                compiles_steady_state=compiles_steady,
                runs=runs)
     if artifact:
-        with open(artifact, "w") as f:
-            json.dump(out, f, indent=2)
+        _merge_artifact(artifact, out)
         print(f"wrote {artifact}")
 
     # flat record for the benchmarks/run.py CSV printer
@@ -221,18 +229,204 @@ def run(n_tables: int = 256, n_queries: int = 64, n_sketch: int = 128,
     return flat
 
 
+def _merge_artifact(artifact: str, section: dict):
+    """Rewrite ``artifact`` with ``section``'s keys while preserving any
+    keys the other entrypoint owns (`run` owns the top level, `run_mesh`
+    owns ``"sharded"``) — the two refresh independently."""
+    try:
+        with open(artifact) as f:
+            prev = json.load(f)
+    except (OSError, ValueError):
+        prev = {}
+    prev.update(section)
+    with open(artifact, "w") as f:
+        json.dump(prev, f, indent=2)
+
+
+def _respawn_mesh(smoke: bool, artifact: str | None):
+    """Re-exec ``--mesh`` under 8 forced host devices (the flag must be set
+    before jax initialises, so a fresh interpreter is required)."""
+    import os
+    import subprocess
+    import sys
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    path = [os.path.join(root, "src")]
+    if os.environ.get("PYTHONPATH"):
+        path.append(os.environ["PYTHONPATH"])
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=8",
+               PYTHONPATH=os.pathsep.join(path))
+    cmd = [sys.executable, "-m", "benchmarks.bench_serving", "--mesh",
+           "--artifact", artifact or ""]
+    if smoke:
+        cmd.append("--smoke")
+    out = subprocess.run(cmd, cwd=root, capture_output=True, text=True,
+                         timeout=3600, env=env)
+    sys.stdout.write(out.stdout)
+    if out.returncode != 0:
+        sys.stderr.write(out.stderr[-4000:])
+        raise RuntimeError("sharded serving bench failed under 8 devices")
+    for line in out.stdout.splitlines():
+        if line.startswith("SHARDED-FLAT "):
+            return json.loads(line[len("SHARDED-FLAT "):])
+    raise RuntimeError("no SHARDED-FLAT record in mesh subprocess output")
+
+
+def run_mesh(n_tables: int = 131, n_queries: int = 32, n_sketch: int = 128,
+             n_rows: int = 2000, seed: int = 11, horizon_s: float = 4.0,
+             slo_ms: float = 400.0, offered: tuple = (1.0, 3.0),
+             buckets: tuple = (1, 8), workers: int = 2,
+             parity_queries: int = 16,
+             artifact: str | None = ARTIFACT, smoke: bool = False):
+    """The sharded section: replay the open-loop bench against an 8-way
+    column-sharded server, after gating bit-identity against the
+    single-device server (DESIGN.md §10). ``n_tables`` is deliberately not
+    divisible by 8 — `place_shard`'s masked pad columns are on the path."""
+    if jax.device_count() < 8:
+        return _respawn_mesh(smoke, artifact)
+
+    rng = np.random.default_rng(seed)
+    tables, queries = _corpus(rng, n_tables, n_queries, n_rows)
+    idx = IX.build_index(tables, n=n_sketch)      # uneven C: pads per mesh
+    shape = PL.ShapePolicy(k_max=10)
+    req = PL.Request(k=10, scorer="s4")
+    cache = SV.CompileCache()                     # shared: keys must not collide
+    ndev = jax.device_count()
+    mesh1 = jax.make_mesh((1,), ("shard",), devices=jax.devices()[:1])
+    mesh8 = jax.make_mesh((ndev,), ("shard",))
+    srv1 = SV.Server(mesh1, idx, shape, request=req, buckets=buckets,
+                     cache=cache)
+    srv8 = SV.Server(mesh8, idx, shape, request=req, buckets=buckets,
+                     cache=cache)
+    srv1.warmup(modes=("off",))
+    srv8.warmup(modes=("off",))
+    pool = _single_query_pool(queries, n_sketch)
+    _warm_scheduler_path(srv8, pool, slo_ms)
+    compiles0 = cache.misses
+
+    # -- parity gate: sharded == single-host, bit for bit --------------------
+    mismatches = 0
+    for sk in pool[:parity_queries]:
+        o1 = srv1.query_batch(sk)
+        o8 = srv8.query_batch(sk)
+        for a, b in zip(o1, o8):
+            if not np.array_equal(np.asarray(a), np.asarray(b)):
+                mismatches += 1
+    assert mismatches == 0, (
+        f"{mismatches} sharded-vs-single-host mismatches — the cross-shard "
+        "combine must be bit-identical (DESIGN.md §10)")
+    print(f"sharded parity: {parity_queries} queries bit-identical "
+          f"(D={ndev} vs D=1)")
+
+    svc = []
+    for sk in pool[: min(16, len(pool))]:
+        t0 = time.perf_counter()
+        jax.block_until_ready(srv8.query_batch(sk))
+        svc.append(time.perf_counter() - t0)
+    service_s = float(np.median(svc))
+    capacity_qps = 1.0 / service_s
+    print(f"sharded single-dispatch service: {service_s * 1e3:.1f} ms "
+          f"-> sequential capacity ~{capacity_qps:.1f} qps")
+
+    runs = []
+    for mult in offered:
+        rate = mult * capacity_qps
+        n_arr = max(int(rate * horizon_s), 8)
+        gaps = rng.exponential(1.0 / rate, size=n_arr)
+        for mode in ("sequential", "scheduler"):
+            kw = (dict(workers=1, max_coalesce=1) if mode == "sequential"
+                  else dict(workers=workers, max_coalesce=None))
+            lats, on_time, wall, stats = _replay(srv8, pool, gaps,
+                                                 slo_ms=slo_ms, **kw)
+            row = dict(mode=mode, offered_x=float(mult),
+                       offered_qps=float(rate), n_queries=n_arr,
+                       p50_ms=float(np.percentile(lats, 50) * 1e3),
+                       p99_ms=float(np.percentile(lats, 99) * 1e3),
+                       on_time=on_time,
+                       goodput_qps=on_time / wall,
+                       throughput_qps=len(lats) / wall,
+                       wall_s=float(wall),
+                       avg_coalesce=float(stats["avg_coalesce"]),
+                       batches=int(stats["batches"]),
+                       deadline_misses=int(stats["deadline_misses"]))
+            runs.append(row)
+            print(f"  {mult:>4.1f}x {mode:>10s}: p50 {row['p50_ms']:8.1f} ms"
+                  f"  p99 {row['p99_ms']:8.1f} ms  goodput "
+                  f"{row['goodput_qps']:6.1f}/{rate:.1f} qps  "
+                  f"coalesce x{row['avg_coalesce']:.1f}")
+    compiles_steady = cache.misses - compiles0
+
+    # -- gates (also enforced by the CI smoke) -------------------------------
+    assert compiles_steady == 0, (
+        f"sharded steady-state serving triggered {compiles_steady} compiles "
+        "— mesh re-placement must ride the warmed plan cache")
+    for mult in offered:
+        pair = {r["mode"]: r for r in runs if r["offered_x"] == float(mult)}
+        seq, sch = pair["sequential"], pair["scheduler"]
+        if mult > 1.0:
+            assert sch["goodput_qps"] > seq["goodput_qps"], (
+                f"at {mult}x offered load the sharded scheduler's goodput "
+                f"({sch['goodput_qps']:.1f} qps) must beat sequential "
+                f"dispatch ({seq['goodput_qps']:.1f} qps)")
+        elif mult == 1.0:
+            assert sch["goodput_qps"] > 0.5 * seq["goodput_qps"], (
+                f"at 1.0x offered load the sharded scheduler's goodput "
+                f"({sch['goodput_qps']:.1f} qps) collapsed vs sequential "
+                f"dispatch ({seq['goodput_qps']:.1f} qps)")
+    print("sharded serving gates: OK (bit-identical parity; 0 compiles; "
+          "scheduler goodput beats sequential above capacity)")
+
+    sharded = dict(config=dict(n_tables=n_tables, n_queries=n_queries,
+                               n_sketch=n_sketch, n_rows=n_rows,
+                               horizon_s=horizon_s, slo_ms=slo_ms,
+                               buckets=list(buckets), workers=workers,
+                               seed=seed, smoke=bool(smoke), ndev=ndev),
+                   parity=dict(queries=parity_queries, bitwise_equal=True),
+                   service_ms=service_s * 1e3,
+                   sequential_capacity_qps=capacity_qps,
+                   compiles_steady_state=compiles_steady,
+                   runs=runs)
+    if artifact:
+        _merge_artifact(artifact, {"sharded": sharded})
+        print(f"wrote {artifact} (sharded section)")
+
+    flat = dict(sharded_ndev=ndev,
+                sharded_parity_queries=parity_queries,
+                sharded_service_ms=sharded["service_ms"],
+                sharded_capacity_qps=capacity_qps,
+                sharded_compiles_steady_state=compiles_steady)
+    for r in runs:
+        tag = f"sharded_{r['mode'][:3]}_{r['offered_x']:g}x"
+        flat[f"{tag}_goodput_qps"] = r["goodput_qps"]
+        flat[f"{tag}_p99_ms"] = r["p99_ms"]
+    print("SHARDED-FLAT " + json.dumps(flat))
+    return flat
+
+
 def main(argv=None):
     import argparse
     p = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     p.add_argument("--smoke", action="store_true",
                    help="small corpus + short horizon (CI gate)")
+    p.add_argument("--mesh", action="store_true",
+                   help="sharded-serving section: 8-device column-sharded "
+                        "server (re-execs with forced host devices if "
+                        "needed)")
     p.add_argument("--artifact", default=ARTIFACT)
     a = p.parse_args(argv)
+    artifact = a.artifact or None
+    if a.mesh:
+        if a.smoke:
+            return run_mesh(n_tables=61, n_queries=16, n_sketch=64,
+                            n_rows=1500, horizon_s=2.0, offered=(1.0, 3.0),
+                            buckets=(1, 8), parity_queries=8,
+                            artifact=None, smoke=True)
+        return run_mesh(artifact=artifact)
     if a.smoke:
         return run(n_tables=64, n_queries=24, n_sketch=64, n_rows=1500,
                    horizon_s=2.5, offered=(1.0, 3.0), buckets=(1, 8, 16),
                    artifact=None, smoke=True)
-    return run(artifact=a.artifact)
+    return run(artifact=artifact)
 
 
 if __name__ == "__main__":

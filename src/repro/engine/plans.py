@@ -111,6 +111,20 @@ class ShapePolicy:
     #: Affects the stage-1-consuming paths (prune='safe'/'topm',
     #: `stage1_hits`, `search_joinable`); prune='off' is scan by definition
     candidates: str = "scan"
+    #: number of mesh devices the plans are built for — a first-class axis
+    #: of every compile-cache key, so servers on different-size meshes never
+    #: share (or collide on) compiled programs. 0 = unresolved: filled in
+    #: from the concrete mesh by `resolve_shape` (the `Server` does this);
+    #: a nonzero value is validated against the mesh at plan-build time
+    mesh_shards: int = 0
+    #: cross-shard rank combine (DESIGN.md §10): "gather" = in-program
+    #: all-gather + final top-k (replicated ``[.., k_max]`` outputs — the
+    #: historical single-host stage), "host" = each device emits only its
+    #: local top-k and the ``[D, k_max]`` merge runs on the host
+    #: (`combine_local_topk`); both implement the same total order (score
+    #: descending, global id ascending). "auto" resolves to "host" on
+    #: multi-device meshes and "gather" on single-device meshes
+    combine: str = "auto"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -128,6 +142,47 @@ class Request:
     prune: str = "off"              # off | safe | topm
     alpha: float = 0.05
     min_sample: int = 3
+
+
+_COMBINE_MODES = ("auto", "gather", "host")
+
+
+def resolve_shape(shape: ShapePolicy, mesh) -> ShapePolicy:
+    """Resolve the mesh-dependent fields of a `ShapePolicy` against a
+    concrete mesh: ``mesh_shards`` is pinned to the device count (validated
+    if already set) and ``combine='auto'`` becomes "host" on multi-device
+    meshes, "gather" on single-device ones. Executors resolve their policy
+    on construction so the resolved values participate in every cache key.
+    """
+    ndev = int(mesh.devices.size)
+    if shape.combine not in _COMBINE_MODES:
+        raise ValueError(f"unknown combine mode {shape.combine!r}: "
+                         f"use one of {_COMBINE_MODES}")
+    if shape.mesh_shards not in (0, ndev):
+        raise ValueError(
+            f"ShapePolicy.mesh_shards={shape.mesh_shards} does not match "
+            f"the {ndev}-device mesh it is being resolved against")
+    combine = shape.combine
+    if combine == "auto":
+        combine = "host" if ndev > 1 else "gather"
+    if (shape.mesh_shards, shape.combine) == (ndev, combine):
+        return shape
+    return dataclasses.replace(shape, mesh_shards=ndev, combine=combine)
+
+
+def _plan_combine(shape: ShapePolicy, ndev: int) -> bool:
+    """Validate a plan builder's shape policy against the mesh it is being
+    built for and return whether the plan uses the host-side rank combine.
+    An unresolved ``combine='auto'`` builds the in-program gather combine —
+    the historical behaviour every pre-mesh caller gets."""
+    if shape.combine not in _COMBINE_MODES:
+        raise ValueError(f"unknown combine mode {shape.combine!r}: "
+                         f"use one of {_COMBINE_MODES}")
+    if shape.mesh_shards not in (0, ndev):
+        raise ValueError(
+            f"ShapePolicy.mesh_shards={shape.mesh_shards} does not match "
+            f"the {ndev}-device mesh this plan is being built for")
+    return shape.combine == "host"
 
 
 def split_config(qcfg) -> "tuple[ShapePolicy, Request]":
@@ -546,6 +601,43 @@ def _topk_gathered(s, r, m, gids, k, axes):
     return fs, take(all_g), take(all_r), take(all_m)
 
 
+def _topk_local(s, r, m, gids, k):
+    """Rank stage, ``combine='host'`` variant: each device emits only its
+    local top-k (scores, global ids, r, m) — sharded ``[.., k]`` outputs
+    that concatenate to ``[.., D·k]`` on the host, where
+    `combine_local_topk` finishes the merge. Nothing crosses shards in
+    program (the s4 pmin/pmax normalisation aside)."""
+    kk = min(k, s.shape[-1])
+    top_s, top_i = jax.lax.top_k(s, kk)
+    top_g = jnp.take_along_axis(jnp.broadcast_to(gids, s.shape), top_i,
+                                axis=-1)
+    take = lambda x: jnp.take_along_axis(x, top_i, axis=-1)
+    return top_s, top_g, take(r), take(m)
+
+
+def combine_local_topk(s, g, r, m, k: int):
+    """Host-side cross-shard rank combine for ``combine='host'`` plans:
+    merge the concatenated per-device local top-k rows ``[.., D·kk]`` into
+    the global top-k under the deterministic total order *score descending,
+    global id ascending* — the same order the in-program gather combine and
+    the `Server`'s cross-segment merge implement, so the result is
+    bit-identical to the single-host rank stage."""
+    s, g = np.asarray(s), np.asarray(g)
+    pick = np.lexsort((g, -s), axis=-1)[..., :k]
+    take = lambda x: np.take_along_axis(np.asarray(x), pick, axis=-1)
+    return take(s), take(g), take(r), take(m)
+
+
+def _rank_out_specs(axes, batched: bool, host_combine: bool):
+    """out_specs of the four rank-stage outputs: replicated for the gather
+    combine, sharded along the (per-device) top-k axis for the host
+    combine."""
+    if not host_combine:
+        return (P(), P(), P(), P())
+    spec = P(None, axes) if batched else P(axes)
+    return (spec,) * 4
+
+
 def _linear_device_index(axes, sizes):
     """Row-major linear device id over possibly-multiple mesh axes; the
     per-axis ``sizes`` are static (from the mesh), so this works on every
@@ -633,6 +725,7 @@ def make_scan_fn(mesh, C_total: int, n: int, shape: ShapePolicy,
     assert C_total % ndev == 0
     assert not (with_prep and batch is None), "prep applies to the batched path"
     k = shape.k_max
+    host_combine = _plan_combine(shape, ndev)
 
     def local(q_kh, q_val, q_mask, q_cmin, q_cmax, shard: IndexShard, *rest):
         if batch is not None:  # the advertised static batch size is binding
@@ -648,6 +741,8 @@ def make_scan_fn(mesh, C_total: int, n: int, shape: ShapePolicy,
         lin = _linear_device_index(axes, sizes)
         gids = (jnp.arange(Cl, dtype=jnp.int32)
                 + lin.astype(jnp.int32) * Cl)
+        if host_combine:
+            return _topk_local(s, r, m, gids, k)
         return _topk_gathered(s, r, m, gids, k, axes)
 
     in_specs = _QUERY_SPECS + (_shard_specs(axes),)
@@ -655,8 +750,9 @@ def make_scan_fn(mesh, C_total: int, n: int, shape: ShapePolicy,
         in_specs += (_prep_specs(axes),)
     in_specs += (P(),)   # the replicated request-operand vector
     fn = shard_map(local, mesh=mesh, in_specs=in_specs,
-                   out_specs=(P(), P(), P(), P()),
-                   check_rep=False)  # outputs are replicated by construction
+                   out_specs=_rank_out_specs(axes, batch is not None,
+                                             host_combine),
+                   check_rep=False)  # gather outputs replicated, host sharded
     return jax.jit(fn)
 
 
@@ -944,6 +1040,7 @@ def make_pruned_fn(mesh, C_total: int, n: int, shape: ShapePolicy, M: int,
     assert shape.k_max <= M, (shape.k_max, M)
     assert not (with_prep and batch is None), "prep applies to the batched path"
     k = shape.k_max
+    host_combine = _plan_combine(shape, ndev)
     chunk, _, nb = _chunk_layout(C_local, shape.score_chunk)
     T = chunk * n + 1
 
@@ -1026,6 +1123,8 @@ def make_pruned_fn(mesh, C_total: int, n: int, shape: ShapePolicy, M: int,
             r, m, ci_len = _shard_stats(q_kh, q_val, q_mask, q_cmin, q_cmax,
                                         sub, shape, est, alpha, prep=None)
         s = score_stats(r, m, ci_len, scorer, floor, axis_names=axes)
+        if host_combine:
+            return _topk_local(s, r, m, surv.astype(jnp.int32), k)
         return _topk_gathered(s, r, m, surv.astype(jnp.int32), k, axes)
 
     in_specs = _QUERY_SPECS + (_shard_specs(axes), P(), P())
@@ -1033,8 +1132,9 @@ def make_pruned_fn(mesh, C_total: int, n: int, shape: ShapePolicy, M: int,
         in_specs += (P(axes), P(axes), _prep_specs(axes))
     in_specs += (P(),)
     fn = shard_map(local, mesh=mesh, in_specs=in_specs,
-                   out_specs=(P(), P(), P(), P()),
-                   check_rep=False)  # outputs are replicated by construction
+                   out_specs=_rank_out_specs(axes, batch is not None,
+                                             host_combine),
+                   check_rep=False)  # gather outputs replicated, host sharded
     return jax.jit(fn)
 
 
@@ -1060,6 +1160,7 @@ def make_topm_fn(mesh, C_total: int, n: int, shape: ShapePolicy, batch: int,
     assert C_total % ndev == 0
     C_local = C_total // ndev
     k = shape.k_max
+    host_combine = _plan_combine(shape, ndev)
     M = max(min(int(shape.prune_m), C_local), min(k, C_local))
     chunk, _, nb = _chunk_layout(C_local, shape.score_chunk)
     T = chunk * n + 1
@@ -1124,6 +1225,8 @@ def make_topm_fn(mesh, C_total: int, n: int, shape: ShapePolicy, batch: int,
             ci_len = hi - lo
         s = score_stats(r, m, ci_len, scorer, floor, axis_names=axes)
         gids = ids.astype(jnp.int32) + lin.astype(jnp.int32) * C_local
+        if host_combine:
+            return _topk_local(s, r, m, gids, k)
         return _topk_gathered(s, r, m, gids, k, axes)
 
     in_specs = _QUERY_SPECS + (_shard_specs(axes),)
@@ -1131,7 +1234,7 @@ def make_topm_fn(mesh, C_total: int, n: int, shape: ShapePolicy, batch: int,
         in_specs += (_prep_specs(axes),)
     in_specs += (P(),)
     fn = shard_map(local, mesh=mesh, in_specs=in_specs,
-                   out_specs=(P(), P(), P(), P()),
+                   out_specs=_rank_out_specs(axes, True, host_combine),
                    check_rep=False)
     return jax.jit(fn)
 

@@ -40,6 +40,7 @@ before returning.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import functools
 import threading
@@ -209,6 +210,15 @@ class JoinabilityResult:
 #: metrics `search_joinable` can rank by (fields of JoinabilityEstimates)
 JOIN_METRICS = ("containment", "jaccard", "join_size", "hits")
 
+#: Process-wide launch lock for multi-partition (sharded) programs.
+#: Concurrent launches of SPMD executables from different host threads can
+#: interleave their per-device collective rendezvous — each program holds
+#: some device queues while its collectives wait on the rest — and
+#: deadlock. One host feeds one mesh, so launches are serialized; serving
+#: throughput comes from coalescing into wider buckets, not from
+#: concurrent program launches (DESIGN.md §10).
+_MESH_DISPATCH_LOCK = threading.RLock()
+
 
 class _SegmentExec:
     """Plan executor for one resident (shard, `ShapePolicy`) pair — the
@@ -239,12 +249,22 @@ class _SegmentExec:
         self.batch_rows = int(batch_rows or 8 * shape.score_chunk)
         self.C = shard.num_columns
         self.n = shard.sketch_size
+        # pin the mesh-dependent shape fields (shard count, rank combine) so
+        # the concrete values participate in every compile-cache key —
+        # executors on different-size meshes never share programs
+        shape = PL.resolve_shape(shape, mesh)
         # clamp the static rank width to the candidate count: a segment
         # smaller than k_max still serves (the facade pads rows back out)
         if shape.k_max > self.C:
             shape = dataclasses.replace(shape, k_max=self.C)
         self.shape = shape
         self.k_max = shape.k_max
+        #: host-side cross-shard rank combine (DESIGN.md §10): plans emit
+        #: per-device local top-ks and every dispatch finishes with
+        #: `plans.combine_local_topk`
+        self._host_combine = shape.combine == "host"
+        #: sharded dispatches serialize through `_MESH_DISPATCH_LOCK`
+        self._serialize = shape.mesh_shards > 1
         self.index = index
         self.cache = cache if cache is not None else CompileCache()
         #: PreppedShards keyed by effective score_chunk; a legacy ``prep``
@@ -295,7 +315,8 @@ class _SegmentExec:
         compile-relevant shape policy — and **nothing request-shaped**."""
         sh = self.shape_for(B)
         return (kind, B, self.C, self.n, sh.score_chunk, sh.intersect,
-                sh.kernels, sh.k_max) + tuple(extra)
+                sh.kernels, sh.k_max, sh.mesh_shards,
+                sh.combine) + tuple(extra)
 
     # -- compiled plans ------------------------------------------------------
     def prep(self, B: Optional[int] = None):
@@ -313,7 +334,8 @@ class _SegmentExec:
                                            sh)
                 else:
                     fn = self.cache.get(
-                        ("prep", self.C, self.n, sh.score_chunk),
+                        ("prep", self.C, self.n, sh.score_chunk,
+                         sh.mesh_shards),
                         lambda: PL.make_prep_fn(self.mesh, self.C, self.n,
                                                 sh))
                     prep = jax.block_until_ready(fn(self.shard))
@@ -558,11 +580,32 @@ class _SegmentExec:
         return list(_plan_cover(nq, self.buckets, costs))
 
     # -- dispatch ------------------------------------------------------------
+    def _finish_ranked(self, out):
+        """Block on a rank-stage output and, under the host combine, merge
+        the concatenated per-device local top-ks ``[.., D·kk]`` into the
+        global ``[.., k_max]`` (`plans.combine_local_topk`) — the only
+        cross-shard step of a host-combine dispatch."""
+        out = jax.block_until_ready(out)
+        if self._host_combine:
+            return PL.combine_local_topk(*out, self.k_max)
+        return tuple(np.asarray(o) for o in out)
+
+    def _launch_lock(self):
+        """`_MESH_DISPATCH_LOCK` on a sharded mesh, a no-op otherwise."""
+        return (_MESH_DISPATCH_LOCK if self._serialize
+                else contextlib.nullcontext())
+
     def _dispatch(self, qa, nq: int, req: PL.Request, ops,
                   B: Optional[int] = None):
         """Run one ≤bucket slice under ``req``'s semantics: pad to the
         bucket, dispatch the plan its prune mode selects, slice back.
-        Telemetry counts a two-stage plan as one dispatch."""
+        Telemetry counts a two-stage plan as one dispatch. Sharded
+        dispatches hold the process-wide launch lock end to end."""
+        with self._launch_lock():
+            return self._dispatch_inner(qa, nq, req, ops, B)
+
+    def _dispatch_inner(self, qa, nq: int, req: PL.Request, ops,
+                        B: Optional[int] = None):
         B = self.bucket_for(nq) if B is None else B
         pad = B - nq
         if pad:
@@ -577,8 +620,7 @@ class _SegmentExec:
                                                   ops)
             else:
                 out = self.topm_fn(B)(*qa, self.shard, *prep_args, ops)
-                s, g, r, m = (np.asarray(o)
-                              for o in jax.block_until_ready(out))
+                s, g, r, m = self._finish_ranked(out)
                 g = np.where(np.isfinite(s), g, -1).astype(np.int32)
                 out = (s, g, r, m)
         elif req.prune == "safe":
@@ -586,6 +628,8 @@ class _SegmentExec:
         else:
             out = self.scan_fn(B)(*qa, self.shard, *prep_args, ops)
             jax.block_until_ready(out)
+            if self._host_combine:
+                out = PL.combine_local_topk(*out, self.k_max)
         dt = time.perf_counter() - t0
         with self._tel_lock:
             self.dispatch_log.append((B, nq, dt))
@@ -633,8 +677,7 @@ class _SegmentExec:
                              self.shape.prune_base, self.C, ndev)
         if rung is None:
             out = self.scan_fn(B)(*qa, self.shard, *prep_args, ops)
-            s, g, r, m = (np.asarray(o)
-                          for o in jax.block_until_ready(out))
+            s, g, r, m = self._finish_ranked(out)
             # same id convention as the pruned dispatch below: −inf → −1
             g = np.where(np.isfinite(s), g, -1).astype(np.int32)
             return s, g, r, m
@@ -649,7 +692,7 @@ class _SegmentExec:
             out = self.prune_fn(B, rung)(*qa, self.shard, jnp.asarray(idx),
                                          jnp.asarray(valid), *tab_args,
                                          *prep_args, ops)
-        s, g, r, m = (np.asarray(o) for o in jax.block_until_ready(out))
+        s, g, r, m = self._finish_ranked(out)
         # stage-2 gids are already index-space; −inf rows (pruned / empty)
         # get id −1 so they can never alias a real column
         g = np.where(np.isfinite(s), g, -1).astype(np.int32)
@@ -672,8 +715,7 @@ class _SegmentExec:
                              self.shape.prune_base, self.C, ndev)
         if rung is None:
             out = self.scan_fn(B)(*qa, self.shard, *prep_args, ops)
-            s, g, r, m = (np.asarray(o)
-                          for o in jax.block_until_ready(out))
+            s, g, r, m = self._finish_ranked(out)
             g = np.where(np.isfinite(s), g, -1).astype(np.int32)
             return s, g, r, m
         idx = np.zeros((rung,), np.int32)
@@ -682,7 +724,7 @@ class _SegmentExec:
         out = self.prune_plain_fn(B, rung)(*qa, self.shard,
                                            jnp.asarray(idx),
                                            jnp.asarray(valid), ops)
-        s, g, r, m = (np.asarray(o) for o in jax.block_until_ready(out))
+        s, g, r, m = self._finish_ranked(out)
         g = np.where(np.isfinite(s), g, -1).astype(np.int32)
         return s, g, r, m
 
@@ -747,7 +789,9 @@ class _SegmentExec:
                 part = tuple(jnp.concatenate(
                     [a, jnp.broadcast_to(a[-1:], (B - (e - s),) + a.shape[1:])])
                     for a in part)
-            rows.append(self.source().hit_counts(part, B)[:e - s])
+            with self._launch_lock():
+                hc = self.source().hit_counts(part, B)
+            rows.append(hc[:e - s])
             s = e
         return np.concatenate(rows, axis=0)
 
@@ -874,6 +918,10 @@ class Server:
             shape = PL.ShapePolicy()
         else:
             shape = policy
+        # resolve the mesh-dependent fields up front: `self.shape` then
+        # reports the concrete shard count / rank combine the segment
+        # executors will serve with (DESIGN.md §10)
+        shape = PL.resolve_shape(shape, mesh)
         self.shape = shape
         self.request = request if request is not None else PL.Request()
         if self.request.prune not in PL.PRUNE_MODES:  # constructor-time, as

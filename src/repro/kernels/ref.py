@@ -7,6 +7,8 @@ functional without Pallas.
 """
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -297,6 +299,59 @@ def _ranks_sorted(x, w):
     return (left + right + 1.0) * 0.5 * w
 
 
+def _ndtri64(q: np.ndarray) -> np.ndarray:
+    """Float64 inverse normal CDF on the host (scipy when present, else
+    Acklam's rational approximation — |rel err| < 1.15e-9, which rounds to
+    the correct float32 everywhere we use it)."""
+    try:
+        from scipy.special import ndtri
+        return ndtri(q)
+    except ImportError:
+        pass
+    a = (-3.969683028665376e+01, 2.209460984245205e+02,
+         -2.759285104469687e+02, 1.383577518672690e+02,
+         -3.066479806614716e+01, 2.506628277459239e+00)
+    b = (-5.447609879822406e+01, 1.615858368580409e+02,
+         -1.556989798598866e+02, 6.680131188771972e+01,
+         -1.328068155288572e+01)
+    c = (-7.784894002430293e-03, -3.223964580411365e-01,
+         -2.400758277161838e+00, -2.549732539343734e+00,
+         4.374664141464968e+00, 2.938163982698783e+00)
+    d = (7.784695709041462e-03, 3.224671290700398e-01,
+         2.445134137142996e+00, 3.754408661907416e+00)
+    q = np.asarray(q, np.float64)
+    lo, hi = 0.02425, 1.0 - 0.02425
+    ql = np.sqrt(-2.0 * np.log(np.clip(q, 1e-300, None)))
+    qh = np.sqrt(-2.0 * np.log(np.clip(1.0 - q, 1e-300, None)))
+    poly = lambda cs, x: functools.reduce(lambda acc, ci: acc * x + ci, cs)
+    tail = lambda t: (poly(c, t) / (poly(d, t) * t + 1.0))
+    r = q - 0.5
+    s = r * r
+    mid = (poly(a, s) * r) / (poly(b, s) * s + 1.0)
+    return np.where(q < lo, tail(ql), np.where(q > hi, -tail(qh), mid))
+
+
+@functools.lru_cache(maxsize=None)
+def _rankit_table(n: int) -> np.ndarray:
+    """Rankit lookup table for the ``kind='rin'`` epilogue, flattened
+    ``[(n+1)·(2n+1)] f32``: entry ``m·(2n+1) + 2·rank`` holds
+    ``Φ⁻¹(clip((rank − ½)/max(m, 1), 1e-6, 1 − 1e-6))``.
+
+    The transform's argument only ever takes these discrete values — ranks
+    are exact half-integers ≤ n and m is an integer ≤ n — so Φ⁻¹ is
+    precomputed on the host in float64. That makes the rin estimator
+    **bit-stable across program shapes and shardings** (an in-program
+    ``ndtri`` is not: XLA's vector- and scalar-lane codegen for the
+    transcendental differ at the ulp level, so the same row scored in a
+    [2, n] and a [13, n] block could disagree — fatal for the DESIGN.md §10
+    sharded-vs-single-host bit-identity contract), and replaces a
+    transcendental with a gather on the hot path."""
+    m = np.maximum(np.arange(n + 1, dtype=np.float64), 1.0)[:, None]
+    half = (np.arange(2 * n + 1, dtype=np.float64)[None, :] - 1.0) / 2.0
+    q = np.clip(half / m, 1e-6, 1.0 - 1e-6)
+    return _ndtri64(q).astype(np.float32).ravel()
+
+
 def rank_moments(a, b, mask, *, kind: str = "spearman"):
     """Fused masked rank transform + moment reduction per row.
 
@@ -327,11 +382,16 @@ def rank_moments(a, b, mask, *, kind: str = "spearman"):
 
     def _moments(m, ra, rb, wc):
         if kind == "rin":
-            msafe = jnp.maximum(m, 1.0)[:, None]
-            qa = jnp.clip((ra - 0.5) / msafe, 1e-6, 1.0 - 1e-6)
-            qb = jnp.clip((rb - 0.5) / msafe, 1e-6, 1.0 - 1e-6)
-            ra = jnp.where(wc > 0, jax.scipy.special.ndtri(qa), 0.0)
-            rb = jnp.where(wc > 0, jax.scipy.special.ndtri(qb), 0.0)
+            # exact-table rankit transform (see `_rankit_table`): gather at
+            # integer indices (2·rank, m) instead of an in-program ndtri,
+            # so the result is bit-stable across program shapes/shardings
+            tab = jnp.asarray(_rankit_table(n))
+            mi = jnp.clip(jnp.round(m).astype(jnp.int32), 0, n)[:, None]
+            look = lambda r: jnp.take(
+                tab, mi * (2 * n + 1)
+                + jnp.clip(jnp.round(2.0 * r).astype(jnp.int32), 0, 2 * n))
+            ra = jnp.where(wc > 0, look(ra), 0.0)
+            rb = jnp.where(wc > 0, look(rb), 0.0)
         return jnp.stack(
             [m, jnp.sum(ra, -1), jnp.sum(rb, -1), jnp.sum(ra * ra, -1),
              jnp.sum(rb * rb, -1), jnp.sum(ra * rb, -1)], axis=-1)

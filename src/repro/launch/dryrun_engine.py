@@ -54,6 +54,15 @@ def run(cols_per_device: int, n: int, k: int, multi_pod: bool,
         lowered = fn.lower(*q_abs, shard_abs, ops_abs)
         compiled = lowered.compile()
     rep = hlo_cost.analyze(compiled.as_text())
+    # the layout contract (DESIGN.md §10): stage-1/stage-2 stay shard-local;
+    # only the [ndev, k] combine strips may cross shards. An accidental
+    # all-gather of the [C_local, n] sketch planes dwarfs this bound.
+    shard_bytes = cols_per_device * n * 4
+    assert rep.collective_bytes < shard_bytes, (
+        f"query program moves {rep.collective_bytes:.0f} collective bytes "
+        f"per device — more than one [C_local, n] sketch plane "
+        f"({shard_bytes}); the scan must not all-gather the index "
+        f"({dict(rep.collectives)})")
     ma = compiled.memory_analysis()
     rec = {
         "cell": f"engine_query_C{C}_n{n}", "mesh": "2x16x16" if multi_pod else "16x16",

@@ -185,3 +185,81 @@ def test_checkpoint_elastic_remesh():
                 np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
         print('OK')
     """)
+
+
+def test_place_shard_pads_are_fully_masked():
+    """`place_shard` pads C=13 to 16 on 8 devices: the pad columns must be
+    PAD_KEY-keyed, zero-masked, zero-row — never matchable, never eligible —
+    and a top-k query over the placed shard must never surface a pad id."""
+    _run("""
+        from repro.core import build_sketch
+        from repro.core.sketch import PAD_KEY
+        from repro.data.pipeline import Table
+        from repro.engine import index as IX, query as Q
+        rng = np.random.default_rng(7)
+        tables = []
+        for i in range(13):                 # one shared keyspace: all overlap
+            m = int(rng.integers(200, 500))
+            tables.append(Table(
+                keys=rng.choice(2000, size=m, replace=False).astype(np.uint32),
+                values=rng.standard_normal(m).astype(np.float32),
+                name=f't{i}'))
+        idx = IX.build_index(tables, n=64)
+        mesh = jax.make_mesh((8,), ('shard',))
+        placed = IX.place_shard(idx.shard, mesh)
+        assert placed.num_columns == 16
+        kh = np.asarray(placed.key_hash)
+        assert (kh[13:] == PAD_KEY).all()
+        assert (np.asarray(placed.mask)[13:] == 0).all()
+        assert (np.asarray(placed.rows)[13:] == 0).all()
+        qk = rng.choice(2000, size=400, replace=False).astype(np.uint32)
+        qsk = build_sketch(jnp.asarray(qk),
+                           jnp.asarray(rng.standard_normal(400).astype(np.float32)),
+                           n=64)
+        s, g, r, m = Q.query(placed, qsk, mesh, Q.QueryConfig(k=13))
+        g = np.asarray(g)
+        assert set(g.tolist()) == set(range(13)), g
+        print('OK')
+    """)
+
+
+def test_score_shard_chunk_padding_on_uneven_shards():
+    """`score_shard` with C % score_chunk != 0 pads the tail chunk: on the
+    mesh-padded 16-column shard, a score_chunk that doesn't divide C must
+    agree with the single-block scan and keep the pad columns ineligible."""
+    _run("""
+        from repro.core import build_sketch
+        from repro.data.pipeline import Table
+        from repro.engine import index as IX, query as Q
+        rng = np.random.default_rng(9)
+        tables = []
+        for i in range(13):
+            m = int(rng.integers(200, 500))
+            tables.append(Table(
+                keys=rng.choice(2000, size=m, replace=False).astype(np.uint32),
+                values=rng.standard_normal(m).astype(np.float32),
+                name=f't{i}'))
+        idx = IX.build_index(tables, n=64)
+        mesh = jax.make_mesh((8,), ('shard',))
+        placed = IX.place_shard(idx.shard, mesh)     # C: 13 -> 16
+        qk = rng.choice(2000, size=400, replace=False).astype(np.uint32)
+        qsk = build_sketch(jnp.asarray(qk),
+                           jnp.asarray(rng.standard_normal(400).astype(np.float32)),
+                           n=64)
+        qa = IX.query_arrays(qsk)
+        whole = Q.QueryConfig(k=5, score_chunk=512)  # single block
+        tail = Q.QueryConfig(k=5, score_chunk=5)     # 16 % 5 != 0 -> padded
+        s0, r0, m0, c0 = Q.score_shard(*qa, placed, whole)
+        s1, r1, m1, c1 = Q.score_shard(*qa, placed, tail)
+        assert s1.shape == (16,)
+        np.testing.assert_array_equal(np.asarray(m0), np.asarray(m1))
+        # chunk width changes reduction lanes: ulp-level reassociation only
+        np.testing.assert_allclose(np.asarray(r0), np.asarray(r1),
+                                   rtol=1e-6, atol=1e-7)
+        np.testing.assert_allclose(np.asarray(s0), np.asarray(s1),
+                                   rtol=1e-6, atol=1e-7)
+        # pad columns (13..15) never intersect: zero sample, -inf score
+        assert (np.asarray(m1)[13:] == 0).all()
+        assert np.isneginf(np.asarray(s1)[13:]).all()
+        print('OK')
+    """)

@@ -20,6 +20,7 @@ The load-bearing assertions:
     bit-identical to a single-threaded replay oracle at *some* index
     version the query's submit→complete window overlapped.
 """
+import os
 import threading
 import time
 
@@ -39,8 +40,8 @@ from test_two_stage import _corpus, _queries
 N_SKETCH = 32
 
 
-def _mesh():
-    return jax.make_mesh((1,), ("shard",))
+def _mesh(ndev=1):
+    return jax.make_mesh((ndev,), ("shard",), devices=jax.devices()[:ndev])
 
 
 def _static_server(rng, n_tables=8, buckets=(1, 2, 4)):
@@ -213,10 +214,10 @@ def _apply(live, op):
         live.compact()
 
 
-def _live_server(rng, tables):
+def _live_server(rng, tables, ndev=1):
     live = LC.LiveIndex(n=N_SKETCH, delta_cap=8)
     live.append(tables)
-    srv = SV.Server(_mesh(), live,
+    srv = SV.Server(_mesh(ndev), live,
                     PL.ShapePolicy(k_max=4, prune_base=2),
                     request=PL.Request(k=4),
                     buckets=(1, 2, 4), cache=SV.CompileCache())
@@ -225,17 +226,20 @@ def _live_server(rng, tables):
     return live, srv
 
 
-def test_stress_queries_race_mutations(rng):
+def _stress_run(seed, ndev=1):
     """Query threads hammer the scheduler while a mutator appends, deletes
     and compacts (with `refresh()` republishing the snapshot under them).
     No exceptions, zero compiles, and every result equals the
     single-threaded oracle at some version inside the query's
-    submit→complete window — snapshot isolation, end to end."""
-    seed = int(rng.integers(1 << 30))
+    submit→complete window — snapshot isolation, end to end.
+
+    ``ndev > 1`` runs the same discipline on a sharded server: every
+    `refresh()` re-places the delta onto the mesh, and the replay oracle
+    still demands bit-identity against *some* published version."""
     rng_live = np.random.default_rng(seed)
     tables = _seed_tables(rng_live)
     script = _mutation_script(rng_live)
-    live, srv = _live_server(rng_live, tables)
+    live, srv = _live_server(rng_live, tables, ndev)
     sks = _qsks(np.random.default_rng(seed + 1), 1)
     srv.query_batch(sks)                 # warm this query's path
     misses0 = srv.cache.misses
@@ -274,7 +278,7 @@ def test_stress_queries_race_mutations(rng):
     rng_replay = np.random.default_rng(seed)
     tables2 = _seed_tables(rng_replay)
     script2 = _mutation_script(rng_replay)
-    live2, srv2 = _live_server(rng_replay, tables2)
+    live2, srv2 = _live_server(rng_replay, tables2, ndev)
     expected = {live2.version: _as_np(srv2.query_batch(sks))}
     for op in script2:
         _apply(live2, op)
@@ -290,3 +294,23 @@ def test_stress_queries_race_mutations(rng):
         assert any(matches(res, expected[v]) for v in window), (
             f"result matches no index version in the query's window "
             f"[{v0}, {v1}]")
+
+
+def test_stress_queries_race_mutations(rng):
+    _stress_run(int(rng.integers(1 << 30)))
+
+
+def test_stress_queries_race_mutations_sharded():
+    """The same race, on a server whose index is sharded across 8 devices:
+    mutations re-place each published snapshot onto the mesh and the
+    cross-shard combine must stay bit-identical to the replay oracle."""
+    from test_distributed import _run
+    tdir = os.path.dirname(os.path.abspath(__file__))
+    out = _run(f"""
+        import sys
+        sys.path.insert(0, {tdir!r})
+        import test_scheduler as TS
+        TS._stress_run(seed=987654321, ndev=8)
+        print('STRESS-OK')
+    """)
+    assert "STRESS-OK" in out
