@@ -204,6 +204,15 @@ def run(n_tables: int = 256, n_queries: int = 64, n_sketch: int = 128,
     print("serving gates: OK (0 compiles; scheduler goodput beats "
           "sequential above capacity, holds at capacity)")
 
+    # per-stage serving telemetry (DESIGN.md §11): where the replayed
+    # queries' wall time went, device dispatches vs host select/combine
+    tp = srv.throughput()
+    stages = tp.get("stages", {})
+    if stages:
+        print("  stage mix: " + "  ".join(
+            f"{name} x{rec['count']} {rec['total_s'] * 1e3:.0f}ms"
+            for name, rec in sorted(stages.items())))
+
     out = dict(config=dict(n_tables=n_tables, n_queries=n_queries,
                            n_sketch=n_sketch, n_rows=n_rows,
                            horizon_s=horizon_s, slo_ms=slo_ms,
@@ -212,6 +221,8 @@ def run(n_tables: int = 256, n_queries: int = 64, n_sketch: int = 128,
                service_ms=service_s * 1e3,
                sequential_capacity_qps=capacity_qps,
                compiles_steady_state=compiles_steady,
+               stages=stages,
+               device_dispatches=tp.get("device_dispatches", 0),
                runs=runs)
     if artifact:
         _merge_artifact(artifact, out)

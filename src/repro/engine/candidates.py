@@ -38,6 +38,7 @@ import numpy as np
 
 from repro.core.sketch import PAD_KEY
 from repro.engine.index import Postings
+from repro.engine.plans import _postings_window_candidates
 from repro.kernels import ops as K
 from repro.kernels.ops import KernelConfig
 
@@ -116,21 +117,9 @@ def make_postings_probe_fn(E: int, W: int, batch: int, n: int,
     per-column counts on device (`ops.postings_merge`). Returns sparse
     ``(cols i32[B, n·W], counts f32[B, n·W])`` — corpus-size-independent;
     the host scatters into dense ``[B, C]`` rows by id."""
-    L = n * W
-
     @jax.jit
     def fn(q_kh, q_mask, keys, cols):
-        pos = jnp.searchsorted(keys, q_kh)              # [B, n]
-        win = pos[..., None] + jnp.arange(W, dtype=pos.dtype)   # [B, n, W]
-        ok = win < E
-        win = jnp.minimum(win, E - 1)
-        k_g = keys[win]
-        c_g = cols[win]
-        # PAD query slots are masked out; real keys never equal PAD (the
-        # sentinel_safe reservation), so the PAD-padded tail cannot match
-        match = ok & (k_g == q_kh[..., None]) & (c_g >= 0) \
-            & (q_mask[..., None] > 0)
-        cand = jnp.where(match, c_g, -1).reshape(q_kh.shape[0], L)
+        cand = _postings_window_candidates(q_kh, q_mask, keys, cols, E, W)
         return K.postings_merge(cand, cfg)
 
     return fn
@@ -140,7 +129,15 @@ def dense_hit_counts(cols: np.ndarray, counts: np.ndarray,
                      C: int) -> np.ndarray:
     """Scatter sparse merged postings output into dense ``f32 [B, C]`` hit
     rows. Each live id occupies exactly one slot per row (the
-    `postings_merge` contract), so plain assignment is exact."""
+    `postings_merge` contract), so plain assignment is exact.
+
+    Since the fused device-resident path (DESIGN.md §11) this O(C)
+    materialisation is off the serving hot path: `prune='safe'` queries run
+    probe → select → score in one dispatch (`plans.make_inverted_fn`) and
+    never build a dense row. It survives as the **test oracle** for that
+    path (`tests/test_fused_inverted.py`) and as the dense backend of
+    `hit_counts` — the `stage1_hits` / `search_joinable` / ``topm``
+    workloads, which want all-candidate counts by definition."""
     B = cols.shape[0]
     hits = np.zeros((B, C), np.float32)
     b, s = np.nonzero(cols >= 0)

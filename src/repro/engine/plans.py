@@ -107,9 +107,11 @@ class ShapePolicy:
     #: stage-1 candidate generation (DESIGN.md §7): "scan" = the containment
     #: scan over every resident column (bit-identical to the pre-source
     #: engine), "inverted" = the QCR-style inverted key index — sub-linear
-    #: in corpus size, same exact hit counts (`repro.engine.candidates`).
-    #: Affects the stage-1-consuming paths (prune='safe'/'topm',
-    #: `stage1_hits`, `search_joinable`); prune='off' is scan by definition
+    #: in corpus size, same exact hit counts (`repro.engine.candidates`) —
+    #: "auto" = pick per segment by corpus size (`resolve_candidates`:
+    #: inverted at `AUTO_INVERTED_MIN_C`+ columns, scan below). Affects the
+    #: stage-1-consuming paths (prune='safe'/'topm', `stage1_hits`,
+    #: `search_joinable`); prune='off' is scan by definition
     candidates: str = "scan"
     #: number of mesh devices the plans are built for — a first-class axis
     #: of every compile-cache key, so servers on different-size meshes never
@@ -146,13 +148,42 @@ class Request:
 
 _COMBINE_MODES = ("auto", "gather", "host")
 
+#: `ShapePolicy.candidates` vocabulary — "auto" resolves per corpus size
+#: (`resolve_candidates`); a concrete source never sees it
+CANDIDATE_CHOICES = ("scan", "inverted", "auto")
 
-def resolve_shape(shape: ShapePolicy, mesh) -> ShapePolicy:
-    """Resolve the mesh-dependent fields of a `ShapePolicy` against a
+#: corpus-size crossover of ``candidates="auto"``: BENCH_scaling shows the
+#: containment scan winning below ~4k columns, the inverted index above
+AUTO_INVERTED_MIN_C = 4096
+
+
+def resolve_candidates(candidates: str, num_columns: int) -> str:
+    """Resolve a `ShapePolicy.candidates` value against a concrete corpus
+    size: ``"auto"`` becomes "inverted" at `AUTO_INVERTED_MIN_C` columns or
+    more and "scan" below (the BENCH_scaling crossover); explicit values
+    pass through. Segment executors resolve on construction — against their
+    device-padded column count — so every segment of a mixed-size corpus
+    picks its own winner and the resolved value participates in its compile
+    keys."""
+    if candidates not in CANDIDATE_CHOICES:
+        raise ValueError(f"unknown candidate source {candidates!r}: "
+                         f"use one of {CANDIDATE_CHOICES}")
+    if candidates != "auto":
+        return candidates
+    return "inverted" if int(num_columns) >= AUTO_INVERTED_MIN_C else "scan"
+
+
+def resolve_shape(shape: ShapePolicy, mesh,
+                  num_columns: Optional[int] = None) -> ShapePolicy:
+    """Resolve the context-dependent fields of a `ShapePolicy` against a
     concrete mesh: ``mesh_shards`` is pinned to the device count (validated
     if already set) and ``combine='auto'`` becomes "host" on multi-device
-    meshes, "gather" on single-device ones. Executors resolve their policy
-    on construction so the resolved values participate in every cache key.
+    meshes, "gather" on single-device ones. When ``num_columns`` is given
+    (segment executors pass their device-padded column count),
+    ``candidates='auto'`` resolves per `resolve_candidates`; without it the
+    value is validated but kept — the `Server` keeps "auto" at the facade
+    level and resolves per segment. Executors resolve their policy on
+    construction so the resolved values participate in every cache key.
     """
     ndev = int(mesh.devices.size)
     if shape.combine not in _COMBINE_MODES:
@@ -165,9 +196,19 @@ def resolve_shape(shape: ShapePolicy, mesh) -> ShapePolicy:
     combine = shape.combine
     if combine == "auto":
         combine = "host" if ndev > 1 else "gather"
-    if (shape.mesh_shards, shape.combine) == (ndev, combine):
+    if num_columns is not None:
+        candidates = resolve_candidates(shape.candidates, num_columns)
+    else:
+        if shape.candidates not in CANDIDATE_CHOICES:
+            raise ValueError(f"unknown candidate source "
+                             f"{shape.candidates!r}: use one of "
+                             f"{CANDIDATE_CHOICES}")
+        candidates = shape.candidates
+    if (shape.mesh_shards, shape.combine,
+            shape.candidates) == (ndev, combine, candidates):
         return shape
-    return dataclasses.replace(shape, mesh_shards=ndev, combine=combine)
+    return dataclasses.replace(shape, mesh_shards=ndev, combine=combine,
+                               candidates=candidates)
 
 
 def _plan_combine(shape: ShapePolicy, ndev: int) -> bool:
@@ -1011,6 +1052,31 @@ def _gathered_stats(a, w, values_g, cmin_g, cmax_g, q_cmin, q_cmax,
     return r, m, hi - lo
 
 
+def _survivor_stats(q_kh, q_val, q_mask, q_cmin, q_cmax, shard: IndexShard,
+                    surv, valid, lin, C_local: int, shape: ShapePolicy,
+                    est, alpha):
+    """Generic stage-2 body: gather the survivor rows this device owns into
+    a masked sub-shard and run the ordinary chunked scorer on it → per-
+    survivor (r, m, ci_len), each ``[.., M]``. Shared by the host-selected
+    `make_pruned_fn` path and the fused inverted plan (`make_inverted_fn`) —
+    identical survivor inputs therefore produce bit-identical stats. Rows
+    owned by other devices (and padding beyond ``valid``) stay fully masked:
+    they score −inf and the rank combine drops them."""
+    loc = surv.astype(jnp.int32) - lin.astype(jnp.int32) * C_local
+    ok = valid & (loc >= 0) & (loc < C_local)
+    locc = jnp.clip(loc, 0, C_local - 1)
+    okf = ok.astype(jnp.float32)
+    sub = IndexShard(
+        key_hash=jnp.where(ok[:, None], shard.key_hash[locc], _PAD_KEY),
+        values=shard.values[locc] * okf[:, None],
+        mask=shard.mask[locc] * okf[:, None],
+        col_min=jnp.where(ok, shard.col_min[locc], 0.0),
+        col_max=jnp.where(ok, shard.col_max[locc], 0.0),
+        rows=shard.rows[locc] * okf)
+    return _shard_stats(q_kh, q_val, q_mask, q_cmin, q_cmax, sub, shape,
+                        est, alpha, prep=None)
+
+
 def make_pruned_fn(mesh, C_total: int, n: int, shape: ShapePolicy, M: int,
                    batch: Optional[int] = None, with_prep: bool = False):
     """Build the jitted gather + score + rank plan: score only ``M``
@@ -1111,17 +1177,11 @@ def make_pruned_fn(mesh, C_total: int, n: int, shape: ShapePolicy, M: int,
                 r, m, ci_len = one((gidx, values_g, cmin_g, cmax_g))
         else:
             # generic path (single-query / eq-matrix / Pallas backends):
-            # gather the survivor sub-shard and run the ordinary scorer on it
-            sub = IndexShard(
-                key_hash=jnp.where(ok[:, None], shard.key_hash[locc],
-                                   _PAD_KEY),
-                values=shard.values[locc] * okf[:, None],
-                mask=shard.mask[locc] * okf[:, None],
-                col_min=jnp.where(ok, shard.col_min[locc], 0.0),
-                col_max=jnp.where(ok, shard.col_max[locc], 0.0),
-                rows=shard.rows[locc] * okf)
-            r, m, ci_len = _shard_stats(q_kh, q_val, q_mask, q_cmin, q_cmax,
-                                        sub, shape, est, alpha, prep=None)
+            # gather the survivor sub-shard and run the ordinary scorer on
+            # it (the loc/ok recompute inside folds away under CSE)
+            r, m, ci_len = _survivor_stats(q_kh, q_val, q_mask, q_cmin,
+                                           q_cmax, shard, surv, valid, lin,
+                                           C_local, shape, est, alpha)
         s = score_stats(r, m, ci_len, scorer, floor, axis_names=axes)
         if host_combine:
             return _topk_local(s, r, m, surv.astype(jnp.int32), k)
@@ -1235,6 +1295,95 @@ def make_topm_fn(mesh, C_total: int, n: int, shape: ShapePolicy, batch: int,
     in_specs += (P(),)
     fn = shard_map(local, mesh=mesh, in_specs=in_specs,
                    out_specs=_rank_out_specs(axes, True, host_combine),
+                   check_rep=False)
+    return jax.jit(fn)
+
+
+# ----------------------------------------------------------------------------
+# plan: inverted — fused postings probe → select → gather → score → rank
+# ----------------------------------------------------------------------------
+
+def _postings_window_candidates(q_kh, q_mask, keys, cols, E: int, W: int):
+    """Shared front half of the inverted probe (DESIGN.md §7): per query
+    key, ``searchsorted`` into the key-sorted postings planes and gather a
+    W-wide window, emitting matched column ids ``cand i32[B, n·W]`` (−1 in
+    non-matching slots) ready for `ops.postings_merge`. Single source for
+    the standalone probe program (`repro.engine.candidates.
+    make_postings_probe_fn`) and the fused plan below."""
+    pos = jnp.searchsorted(keys, q_kh)              # [B, n]
+    win = pos[..., None] + jnp.arange(W, dtype=pos.dtype)   # [B, n, W]
+    ok = win < E
+    win = jnp.minimum(win, E - 1)
+    k_g = keys[win]
+    c_g = cols[win]
+    # PAD query slots are masked out; real keys never equal PAD (the
+    # sentinel_safe reservation), so the PAD-padded tail cannot match
+    match = ok & (k_g == q_kh[..., None]) & (c_g >= 0) \
+        & (q_mask[..., None] > 0)
+    return jnp.where(match, c_g, -1).reshape(q_kh.shape[0],
+                                             q_kh.shape[1] * W)
+
+
+def make_inverted_fn(mesh, C_total: int, n: int, shape: ShapePolicy, M: int,
+                     E: int, W: int, batch: int):
+    """Build the fused device-resident inverted plan (DESIGN.md §11):
+    postings probe → merge → survivor select → gather → score → rank in
+    **one dispatch** — no ``[B, C]`` materialisation, no mid-query host
+    sync, no O(C) work anywhere.
+
+    Signature: ``fn(q_kh, q_val, q_mask, q_cmin, q_cmax, shard, keys, cols,
+    ops)`` with the postings planes ``keys u32[E]`` / ``cols i32[E]``
+    replicated. Returns the usual ranked ``(s, g, r, m)`` plus the
+    replicated exact survivor-union count ``n_surv i32[]`` — the caller
+    compares it against the static rung ``M`` to detect overflow and
+    re-dispatch on the covering rung
+    (`serve._SegmentExec._dispatch_safe_fused`; by `ops.postings_select`,
+    ``n_surv`` is M-independent, so the covering rung is exact).
+
+    The on-device select emits the ``prune='safe'`` survivor union
+    ascending and zero-padded — the very layout the host builds from
+    `select_survivors` — so the downstream `_survivor_stats` gather sees
+    inputs identical to the host-selected `make_pruned_fn` path: identical
+    survivor sets and ``m`` exactly, scores equal at equal rung M (and to
+    within reduction-order ulps across rungs, as documented on
+    `_gathered_stats`). ``M`` must come from the ``prune_base · 2^i``
+    ladder and (E, W) from their own ladders (`lifecycle.ladder_rung`,
+    `candidates.window_rung`), keeping compiled fused programs O(log)
+    under index mutation.
+    """
+    axes = tuple(mesh.axis_names)
+    sizes = _axis_sizes(mesh, axes)
+    ndev = int(mesh.devices.size)
+    assert C_total % ndev == 0
+    C_local = C_total // ndev
+    assert shape.k_max <= M, (shape.k_max, M)
+    k = shape.k_max
+    host_combine = _plan_combine(shape, ndev)
+    B = int(batch)
+
+    def local(q_kh, q_val, q_mask, q_cmin, q_cmax, shard: IndexShard,
+              keys, cols, ops):
+        assert q_kh.shape[0] == B, (q_kh.shape, B)
+        est, scorer, alpha, floor = _unpack_ops(ops)
+        cand = _postings_window_candidates(q_kh, q_mask, keys, cols, E, W)
+        mcols, mcnt = K.postings_merge(cand, shape.kernels)
+        surv, valid, n_surv = K.postings_select(mcols, mcnt, floor, M,
+                                                shape.kernels)
+        lin = _linear_device_index(axes, sizes)
+        r, m, ci_len = _survivor_stats(q_kh, q_val, q_mask, q_cmin, q_cmax,
+                                       shard, surv, valid, lin, C_local,
+                                       shape, est, alpha)
+        s = score_stats(r, m, ci_len, scorer, floor, axis_names=axes)
+        if host_combine:
+            ranked = _topk_local(s, r, m, surv, k)
+        else:
+            ranked = _topk_gathered(s, r, m, surv, k, axes)
+        # probe inputs are replicated, so n_surv is identical on every device
+        return ranked + (n_surv,)
+
+    in_specs = _QUERY_SPECS + (_shard_specs(axes), P(), P(), P())
+    out_specs = _rank_out_specs(axes, True, host_combine) + (P(),)
+    fn = shard_map(local, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
                    check_rep=False)
     return jax.jit(fn)
 

@@ -219,6 +219,14 @@ JOIN_METRICS = ("containment", "jaccard", "join_size", "hits")
 #: concurrent program launches (DESIGN.md §10).
 _MESH_DISPATCH_LOCK = threading.RLock()
 
+#: per-stage telemetry vocabulary (DESIGN.md §11). Device-launch stages:
+#: "stage1" (probe / source hit counts), "stage2" (pruned scoring), "scan"
+#: (full scan — direct or fallback), "topm" (fused top-M plan), "fused"
+#: (the single-dispatch inverted safe plan). Host stages: "select" (host
+#: survivor selection + rung choice), "combine" (`combine_local_topk`).
+_DEVICE_STAGES = ("stage1", "stage2", "scan", "topm", "fused")
+_STAGE_NAMES = _DEVICE_STAGES + ("select", "combine")
+
 
 class _SegmentExec:
     """Plan executor for one resident (shard, `ShapePolicy`) pair — the
@@ -249,10 +257,12 @@ class _SegmentExec:
         self.batch_rows = int(batch_rows or 8 * shape.score_chunk)
         self.C = shard.num_columns
         self.n = shard.sketch_size
-        # pin the mesh-dependent shape fields (shard count, rank combine) so
-        # the concrete values participate in every compile-cache key —
-        # executors on different-size meshes never share programs
-        shape = PL.resolve_shape(shape, mesh)
+        # pin the context-dependent shape fields (shard count, rank combine,
+        # and the candidates='auto' resolution against this segment's
+        # device-padded column count) so the concrete values participate in
+        # every compile-cache key — executors on different-size meshes never
+        # share programs, and every segment picks its own candidate source
+        shape = PL.resolve_shape(shape, mesh, num_columns=self.C)
         # clamp the static rank width to the candidate count: a segment
         # smaller than k_max still serves (the facade pads rows back out)
         if shape.k_max > self.C:
@@ -296,6 +306,19 @@ class _SegmentExec:
         self._total_queries = 0
         self._total_dispatches = 0
         self._total_s = 0.0
+        #: per-stage serving telemetry (DESIGN.md §11): wall seconds and
+        #: invocation counts keyed by stage name ("stage1", "select",
+        #: "stage2", "scan", "topm", "fused", "combine"). Same `_tel_lock`
+        #: discipline as the dispatch log; stage windows may nest (the
+        #: "combine" host merge runs inside its enclosing dispatch stage)
+        self._stage_s: Dict[str, float] = {}
+        self._stage_n: Dict[str, int] = {}
+        #: fused inverted-safe dispatch (DESIGN.md §11): last sufficient
+        #: survivor rung (adapted per dispatch, guarded by ``_res_lock``)
+        #: and the toggle back to the legacy two-dispatch host-selected
+        #: path (benchmarks/tests flip it to expose the comparison oracle)
+        self._fused_rung: Optional[int] = None
+        self.fused_safe = True
 
     # -- shape policy per bucket ---------------------------------------------
     def chunk_for(self, B: int) -> int:
@@ -390,6 +413,20 @@ class _SegmentExec:
             lambda: PL.make_pruned_fn(self.mesh, self.C, self.n,
                                       self.shape_for(B), M, batch=B,
                                       with_prep=False))
+
+    def inverted_fused_fn(self, B: int, M: int, W: int):
+        """Fused single-dispatch inverted ``safe`` plan for survivor rung
+        ``M`` and postings window ``W`` (`plans.make_inverted_fn`): probe →
+        select → gather → score → rank device-resident, returning the
+        ranked output plus the exact survivor count (DESIGN.md §11). Keyed
+        on (M, E, W) — all three ride fixed ladders, so mutation-driven
+        segment turnover reuses warmed programs."""
+        src = self.source("inverted")
+        return self.cache.get(
+            self._key("inv-fused", B, (M, src.E, W)),
+            lambda: PL.make_inverted_fn(self.mesh, self.C, self.n,
+                                        self.shape_for(B), M, src.E, W,
+                                        batch=B))
 
     def source(self, kind: Optional[str] = None):
         """The stage-1 candidate source of this executor
@@ -521,13 +558,26 @@ class _SegmentExec:
             if inv and ("safe" in modes or "topm" in modes or joinability):
                 # postings probe (current + next window rung) and the
                 # table-free pruned plans the sourced dispatches feed
-                self.source().warmup(B)
+                src = self.source()
+                src.warmup(B)
                 for M in (self.prune_rungs()
                           if ("safe" in modes or "topm" in modes) else []):
                     idx = jnp.zeros((M,), jnp.int32)
                     ok = jnp.zeros((M,), bool)
                     jax.block_until_ready(self.prune_plain_fn(B, M)(
                         *qa, self.shard, idx, ok, ops))
+                if "safe" in modes:
+                    # fused device-resident plans (DESIGN.md §11): every
+                    # survivor rung (adaptation/overflow retry can land on
+                    # any of them) × the current and next window rungs
+                    # (segment turnover under mutation can double W — same
+                    # ahead-of-need discipline as the probe warmup)
+                    for W in (src.W, src.W * 2):
+                        for M in self.prune_rungs():
+                            jax.block_until_ready(
+                                self.inverted_fused_fn(B, M, W)(
+                                    *qa, self.shard, src._keys_d,
+                                    src._cols_d, ops))
             # measured per-dispatch cost of the default plan: that is what
             # a serve-time dispatch of this server actually costs
             if cost_mode == "topm" and topm is not None:
@@ -580,6 +630,14 @@ class _SegmentExec:
         return list(_plan_cover(nq, self.buckets, costs))
 
     # -- dispatch ------------------------------------------------------------
+    def _stage(self, name: str, dt: float, n: int = 1) -> None:
+        """Accumulate one per-stage telemetry sample (wall seconds + count)
+        under ``_tel_lock`` — the PR 8 discipline: a racy ``+=`` under
+        concurrent dispatches silently loses updates."""
+        with self._tel_lock:
+            self._stage_s[name] = self._stage_s.get(name, 0.0) + dt
+            self._stage_n[name] = self._stage_n.get(name, 0) + n
+
     def _finish_ranked(self, out):
         """Block on a rank-stage output and, under the host combine, merge
         the concatenated per-device local top-ks ``[.., D·kk]`` into the
@@ -587,7 +645,10 @@ class _SegmentExec:
         cross-shard step of a host-combine dispatch."""
         out = jax.block_until_ready(out)
         if self._host_combine:
-            return PL.combine_local_topk(*out, self.k_max)
+            t0 = time.perf_counter()
+            res = PL.combine_local_topk(*out, self.k_max)
+            self._stage("combine", time.perf_counter() - t0)
+            return res
         return tuple(np.asarray(o) for o in out)
 
     def _launch_lock(self):
@@ -619,17 +680,19 @@ class _SegmentExec:
                 out = self._dispatch_topm_sourced(qa, nq, B, prep_args, req,
                                                   ops)
             else:
+                ts = time.perf_counter()
                 out = self.topm_fn(B)(*qa, self.shard, *prep_args, ops)
                 s, g, r, m = self._finish_ranked(out)
+                self._stage("topm", time.perf_counter() - ts)
                 g = np.where(np.isfinite(s), g, -1).astype(np.int32)
                 out = (s, g, r, m)
         elif req.prune == "safe":
             out = self._dispatch_safe(qa, nq, B, prep_args, req, ops)
         else:
+            ts = time.perf_counter()
             out = self.scan_fn(B)(*qa, self.shard, *prep_args, ops)
-            jax.block_until_ready(out)
-            if self._host_combine:
-                out = PL.combine_local_topk(*out, self.k_max)
+            out = self._finish_ranked(out)
+            self._stage("scan", time.perf_counter() - ts)
         dt = time.perf_counter() - t0
         with self._tel_lock:
             self.dispatch_log.append((B, nq, dt))
@@ -647,16 +710,27 @@ class _SegmentExec:
 
         The scan source keeps the historical fused path verbatim: its
         emit-tables probe shares the binary-search/membership state with
-        the pruned plan. Any other source feeds the table-free pruned plan
-        (`prune_plain_fn`) — same survivors (hit counts are exact and
-        source-independent), scores equal to ulp-level reassociation."""
+        the pruned plan. A non-scan source dispatches the device-resident
+        fused plan (`_dispatch_safe_fused` — one launch, no [B, C]
+        materialisation, DESIGN.md §11); flipping ``fused_safe`` off
+        exposes the legacy two-dispatch path (source hit counts → host
+        select → table-free pruned plan) — same survivors (hit counts are
+        exact and source-independent), scores equal to ulp-level
+        reassociation."""
         if self.source().kind != "scan":
+            if self.fused_safe:
+                return self._dispatch_safe_fused(qa, nq, B, prep_args, req,
+                                                 ops)
+            ts = time.perf_counter()
             hits_np = self.source().hit_counts(qa, B)[:nq]
+            self._stage("stage1", time.perf_counter() - ts)
             return self._prune_and_score(qa, B, prep_args, req, ops,
                                          hits_np=hits_np, tab_args=None)
+        ts = time.perf_counter()
         out1 = self.probe_fn(B, emit_tables=True)(*qa, self.shard,
                                                   *prep_args)
         out1 = jax.block_until_ready(out1)
+        self._stage("stage1", time.perf_counter() - ts)
         hits, tab_args = ((out1[0], tuple(out1[1:])) if self._use_prep
                           else (out1, ()))
         # selection sees only the real rows: bucket-padding copies must not
@@ -665,22 +739,87 @@ class _SegmentExec:
         return self._prune_and_score(qa, B, prep_args, req, ops,
                                      hits_np=hits_np, tab_args=tab_args)
 
+    def _dispatch_safe_fused(self, qa, nq: int, B: int, prep_args, req, ops):
+        """Device-resident ``safe`` dispatch through the inverted source
+        (DESIGN.md §11): ONE compiled launch chains postings probe → merge
+        → survivor select → gather → score → rank (`plans.make_inverted_fn`)
+        — no host [B, C] scatter, no mid-query sync, no O(C) tail.
+
+        The survivor count is data-dependent but the dispatch shape is not:
+        the plan reports the exact union size ``n_surv`` alongside the
+        ranked output, and the executor adapts. It dispatches at the last
+        sufficient rung (``_fused_rung``, seeded at the base rung); on
+        overflow (``n_surv > M`` — the emitted survivors are then the M
+        smallest ids, not a superset) it re-dispatches once at the exact
+        covering rung — guaranteed sufficient, ``n_surv`` is M-independent
+        — or falls back to the already-warmed full scan when the union
+        outgrows the ladder, exactly like the host-selected path. The rung
+        path is a deterministic function of the query history, so replayed
+        sequences (the D1-vs-D8 test tier) take identical dispatches.
+
+        Bucket-padding rows are broadcast copies of the last real row, so
+        they duplicate its eligible ids and leave the survivor union — and
+        ``n_surv`` — unchanged."""
+        rungs = self.prune_rungs()
+        if not rungs:
+            # no rung beats the full scan — the host-selected path would
+            # fall back for every survivor count; dispatch the scan direct
+            ts = time.perf_counter()
+            out = self.scan_fn(B)(*qa, self.shard, *prep_args, ops)
+            s, g, r, m = self._finish_ranked(out)
+            self._stage("scan", time.perf_counter() - ts)
+            g = np.where(np.isfinite(s), g, -1).astype(np.int32)
+            return s, g, r, m
+        src = self.source()
+        with self._res_lock:
+            M = self._fused_rung if self._fused_rung in rungs else rungs[0]
+        ndev = int(self.mesh.devices.size)
+        for _ in range(2):
+            ts = time.perf_counter()
+            out = self.inverted_fused_fn(B, M, src.W)(
+                *qa, self.shard, src._keys_d, src._cols_d, ops)
+            s, g, r, m = self._finish_ranked(out[:4])
+            n = int(np.asarray(out[4]))     # replicated exact union size
+            self._stage("fused", time.perf_counter() - ts)
+            need = PL.prune_rung(max(n, self.k_max), self.shape.prune_base,
+                                 self.C, ndev)
+            if n <= M:
+                with self._res_lock:
+                    self._fused_rung = need if need is not None else M
+                g = np.where(np.isfinite(s), g, -1).astype(np.int32)
+                return s, g, r, m
+            if need is None:
+                break               # union outgrew the ladder → full scan
+            with self._res_lock:
+                self._fused_rung = M = need
+        ts = time.perf_counter()
+        out = self.scan_fn(B)(*qa, self.shard, *prep_args, ops)
+        s, g, r, m = self._finish_ranked(out)
+        self._stage("scan", time.perf_counter() - ts)
+        g = np.where(np.isfinite(s), g, -1).astype(np.int32)
+        return s, g, r, m
+
     def _prune_and_score(self, qa, B: int, prep_args, req, ops, *,
                          hits_np, tab_args):
         """Shared stage-2 tail of the safe dispatch: survivor selection,
         rung choice, pruned (or fallback full-scan) scoring.
         ``tab_args=None`` selects the table-free pruned plan."""
+        ts = time.perf_counter()
         surv = PL.select_survivors(hits_np, prune="safe",
                                    min_sample=req.min_sample)
         ndev = int(self.mesh.devices.size)
         rung = PL.prune_rung(max(len(surv), self.k_max),
                              self.shape.prune_base, self.C, ndev)
+        self._stage("select", time.perf_counter() - ts)
         if rung is None:
+            ts = time.perf_counter()
             out = self.scan_fn(B)(*qa, self.shard, *prep_args, ops)
             s, g, r, m = self._finish_ranked(out)
+            self._stage("scan", time.perf_counter() - ts)
             # same id convention as the pruned dispatch below: −inf → −1
             g = np.where(np.isfinite(s), g, -1).astype(np.int32)
             return s, g, r, m
+        ts = time.perf_counter()
         idx = np.zeros((rung,), np.int32)
         idx[:len(surv)] = surv
         valid = np.arange(rung) < len(surv)
@@ -693,6 +832,7 @@ class _SegmentExec:
                                          jnp.asarray(valid), *tab_args,
                                          *prep_args, ops)
         s, g, r, m = self._finish_ranked(out)
+        self._stage("stage2", time.perf_counter() - ts)
         # stage-2 gids are already index-space; −inf rows (pruned / empty)
         # get id −1 so they can never alias a real column
         g = np.where(np.isfinite(s), g, -1).astype(np.int32)
@@ -705,19 +845,28 @@ class _SegmentExec:
         the table-free pruned plan — the fused single-dispatch plan is a
         full scan by construction, which is exactly what the inverted
         source exists to avoid. Falls back to the full scan when the
-        survivor union outgrows the rung ladder."""
+        survivor union outgrows the rung ladder. (The fused device-resident
+        select is safe-only: its union semantics cannot express per-row
+        top-M truncation, so ``topm`` keeps the two-stage shape.)"""
+        ts = time.perf_counter()
         hits_np = self.source().hit_counts(qa, B)[:nq]
+        self._stage("stage1", time.perf_counter() - ts)
+        ts = time.perf_counter()
         surv = PL.select_survivors(hits_np, prune="topm",
                                    min_sample=req.min_sample,
                                    prune_m=self.shape.prune_m)
         ndev = int(self.mesh.devices.size)
         rung = PL.prune_rung(max(len(surv), self.k_max),
                              self.shape.prune_base, self.C, ndev)
+        self._stage("select", time.perf_counter() - ts)
         if rung is None:
+            ts = time.perf_counter()
             out = self.scan_fn(B)(*qa, self.shard, *prep_args, ops)
             s, g, r, m = self._finish_ranked(out)
+            self._stage("scan", time.perf_counter() - ts)
             g = np.where(np.isfinite(s), g, -1).astype(np.int32)
             return s, g, r, m
+        ts = time.perf_counter()
         idx = np.zeros((rung,), np.int32)
         idx[:len(surv)] = surv
         valid = np.arange(rung) < len(surv)
@@ -725,6 +874,7 @@ class _SegmentExec:
                                            jnp.asarray(idx),
                                            jnp.asarray(valid), ops)
         s, g, r, m = self._finish_ranked(out)
+        self._stage("stage2", time.perf_counter() - ts)
         g = np.where(np.isfinite(s), g, -1).astype(np.int32)
         return s, g, r, m
 
@@ -790,7 +940,9 @@ class _SegmentExec:
                     [a, jnp.broadcast_to(a[-1:], (B - (e - s),) + a.shape[1:])])
                     for a in part)
             with self._launch_lock():
+                ts = time.perf_counter()
                 hc = self.source().hit_counts(part, B)
+                self._stage("stage1", time.perf_counter() - ts)
             rows.append(hc[:e - s])
             s = e
         return np.concatenate(rows, axis=0)
@@ -838,9 +990,18 @@ class _SegmentExec:
         return JoinabilityResult(**out)
 
     # -- telemetry -----------------------------------------------------------
+    def stage_stats(self) -> Tuple[Dict[str, float], Dict[str, int]]:
+        """Consistent copy of the per-stage telemetry accumulators
+        ``({stage: seconds}, {stage: count})``."""
+        with self._tel_lock:
+            return dict(self._stage_s), dict(self._stage_n)
+
     def throughput(self) -> dict:
         """Latency/throughput numbers: lifetime totals for queries/qps,
-        percentiles over the bounded recent-dispatch window. The totals and
+        percentiles over the bounded recent-dispatch window, and the
+        per-stage breakdown (``stages[name] = {count, total_s}`` over
+        `_STAGE_NAMES`; ``device_dispatches`` sums the device-launch stages
+        — the counter the single-dispatch CI gate reads). The totals and
         the log window are read under the telemetry lock, so concurrent
         dispatches can't tear the percentiles."""
         with self._tel_lock:
@@ -848,10 +1009,17 @@ class _SegmentExec:
             dispatches = self._total_dispatches
             total_s = self._total_s
             log = list(self.dispatch_log)
+            stage_s = dict(self._stage_s)
+            stage_n = dict(self._stage_n)
+        stages = {name: dict(count=stage_n.get(name, 0),
+                             total_s=stage_s.get(name, 0.0))
+                  for name in sorted(set(stage_n) | set(stage_s))}
+        devd = sum(stage_n.get(name, 0) for name in _DEVICE_STAGES)
         if not queries:
             return dict(queries=0, dispatches=0, total_s=0.0, qps=0.0,
                         dispatch_p50_ms=0.0, dispatch_p90_ms=0.0,
-                        dispatch_p99_ms=0.0, per_query_ms=0.0)
+                        dispatch_p99_ms=0.0, per_query_ms=0.0,
+                        stages=stages, device_dispatches=devd)
         lat_ms = np.array([t * 1e3 for _, _, t in log])
         return dict(
             queries=queries, dispatches=dispatches,
@@ -860,7 +1028,8 @@ class _SegmentExec:
             dispatch_p50_ms=float(np.percentile(lat_ms, 50)),
             dispatch_p90_ms=float(np.percentile(lat_ms, 90)),
             dispatch_p99_ms=float(np.percentile(lat_ms, 99)),
-            per_query_ms=1e3 * total_s / max(queries, 1))
+            per_query_ms=1e3 * total_s / max(queries, 1),
+            stages=stages, device_dispatches=devd)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -958,6 +1127,10 @@ class Server:
         self._q_total = 0
         self._q_seconds = 0.0
         self._retired = dict(dispatches=0)
+        #: per-stage telemetry of retired segment executors (folded in by
+        #: `refresh()` so `throughput()` stays lifetime-accurate)
+        self._retired_stage_s: Dict[str, float] = {}
+        self._retired_stage_n: Dict[str, int] = {}
 
         if _is_live(source):
             self._live = source
@@ -982,6 +1155,15 @@ class Server:
             self._view = (self._entries[0],)
 
     # -- segment sync --------------------------------------------------------
+    def _seg_candidates(self, capacity: int) -> str:
+        """Resolve the candidate source a segment of host ``capacity``
+        columns will serve with — against the *device-padded* count, so it
+        matches the resolution its `_SegmentExec` performs on construction
+        (``candidates='auto'`` picks per segment, DESIGN.md §7/§11)."""
+        ndev = int(self.mesh.devices.size)
+        return PL.resolve_candidates(self.shape.candidates,
+                                     capacity + (-capacity) % ndev)
+
     @property
     def _exec(self) -> _SegmentExec:
         """The single static executor (static sources only)."""
@@ -1021,13 +1203,16 @@ class Server:
         with self._refresh_lock:
             if self._live.version == self._seen_version:
                 return  # another thread refreshed while we waited
-            inv = self.shape.candidates == "inverted"
             with self._live._lock:
                 ver = self._live.version
                 snaps = []
                 for seg in self._live._segs:
                     old = self._entries.get(seg.sid)
                     fresh = old is None or old.version != seg.version
+                    # candidate source per segment: 'auto' resolves by the
+                    # segment's own (device-padded) capacity, exactly as
+                    # its executor will on construction
+                    inv = self._seg_candidates(seg.capacity) == "inverted"
                     if fresh and inv:
                         # materialise the segment's postings under the lock
                         # so the snapshot carries the incrementally
@@ -1036,12 +1221,13 @@ class Server:
                         seg.postings()
                     snaps.append((seg.sid, seg.version, seg.used,
                                   list(seg.names[:seg.used]),
-                                  seg.host_snapshot() if fresh else None))
+                                  seg.host_snapshot() if fresh else None,
+                                  inv))
             entries: Dict[int, _SegEntry] = {}
             order: List[int] = []
             names: List[str] = []
             base = 0
-            for sid, version, used, seg_names, snap in snaps:
+            for sid, version, used, seg_names, snap, inv in snaps:
                 if snap is None:
                     old = self._entries[sid]
                     entries[sid] = (old if old.base == base else
@@ -1057,11 +1243,19 @@ class Server:
             # entry references it (entry identity can change on a pure
             # base shift while the exec — and its telemetry — lives on)
             kept = {id(e.exec) for e in entries.values()}
-            gone = sum(old.exec._total_dispatches
-                       for old in self._entries.values()
-                       if id(old.exec) not in kept)
+            gone = [old.exec for old in self._entries.values()
+                    if id(old.exec) not in kept]
             with self._stats_lock:
-                self._retired["dispatches"] += gone
+                self._retired["dispatches"] += sum(
+                    ex._total_dispatches for ex in gone)
+                for ex in gone:
+                    ss, sn = ex.stage_stats()
+                    for name, v in ss.items():
+                        self._retired_stage_s[name] = \
+                            self._retired_stage_s.get(name, 0.0) + v
+                    for name, v in sn.items():
+                        self._retired_stage_n[name] = \
+                            self._retired_stage_n.get(name, 0) + v
             self._entries = entries
             self._order = order
             self.names = names
@@ -1108,7 +1302,7 @@ class Server:
                 entry = self._make_entry(
                     -1, 0, 0, 0, empty.to_index_shard(),
                     postings=(empty.postings()
-                              if self.shape.candidates == "inverted"
+                              if self._seg_candidates(cap) == "inverted"
                               else None))
                 entry.exec.warmup(cost_reps=cost_reps, modes=modes,
                                   joinability=joinability,
@@ -1297,13 +1491,30 @@ class Server:
                 q_total = self._q_total
                 q_seconds = self._q_seconds
                 retired = self._retired["dispatches"]
+                stage_s = dict(self._retired_stage_s)
+                stage_n = dict(self._retired_stage_n)
+            # per-stage breakdown across live + retired segment executors
+            # (DESIGN.md §11): every view entry owns a distinct exec, so
+            # the sum is double-count-free
+            for e in view:
+                ss, sn = e.exec.stage_stats()
+                for name, v in ss.items():
+                    stage_s[name] = stage_s.get(name, 0.0) + v
+                for name, v in sn.items():
+                    stage_n[name] = stage_n.get(name, 0) + v
+            stages = {name: dict(count=stage_n.get(name, 0),
+                                 total_s=stage_s.get(name, 0.0))
+                      for name in sorted(set(stage_n) | set(stage_s))}
             out = dict(queries=q_total,
                        dispatches=retired
                        + sum(e.exec._total_dispatches for e in view),
                        total_s=q_seconds,
                        qps=q_total / max(q_seconds, 1e-12),
                        compiles=self.cache.misses,
-                       segments=len(view))
+                       segments=len(view),
+                       stages=stages,
+                       device_dispatches=sum(stage_n.get(name, 0)
+                                             for name in _DEVICE_STAGES))
         sched = self._scheduler
         if sched is not None:
             out.update(sched.queue_stats())

@@ -103,6 +103,21 @@ def postings_merge(cand, cfg: KernelConfig = KernelConfig()):
     return _ref.postings_merge(cand)
 
 
+def postings_select(cols, counts, floor, M: int,
+                    cfg: KernelConfig = KernelConfig()):
+    """Device-resident survivor select over merged postings rows
+    (DESIGN.md §11): the union of column ids whose exact hit count clears
+    the traced eligibility ``floor``, emitted ascending and zero-padded to
+    the static rung ``M``. Returns ``(surv i32[M], valid bool[M],
+    n_surv i32[])`` — ``n_surv`` counts *all* eligible ids, so
+    ``n_surv > M`` flags a rung overflow (the emitted survivors are then
+    incomplete and the caller must re-dispatch on a covering rung)."""
+    if cfg.use_pallas:
+        return _pm.postings_select(cols, counts, floor, M,
+                                   interpret=cfg.interpret)
+    return _ref.postings_select(cols, counts, floor, M)
+
+
 def rank_transform(x, mask, cfg: KernelConfig = KernelConfig()):
     if cfg.use_pallas:
         return _rt.rank_transform(x, mask, interpret=cfg.interpret)

@@ -60,6 +60,98 @@ def _kernel(ci_ref, cj_ref, cols_ref, cnt_ref):
         cols_ref[...] = jnp.where(first, ci, -1)
 
 
+def _select_kernel(ci_ref, ni_ref, cj_ref, nj_ref, fl_ref, keep_ref):
+    """Pairwise keep-flag pass for the fused survivor select (DESIGN.md §11).
+
+    Operates on the *flattened* merged output — all rows concatenated into
+    one [1, N] strip — so the dedup is global across the whole query batch:
+
+        elig_i = col_i >= 0 and count_i >= floor
+        keep_i = elig_i and #{j < i : elig_j and col_j == col_i} == 0
+
+    Same reduction-grid idiom as `_kernel`: i keeps the full strip resident,
+    j-blocks accumulate duplicate-before counts into the output, and the
+    last j-block finalises the counts into 0/1 keep flags in place. The
+    ordering/compaction epilogue stays in plain jnp (`postings_select`).
+    """
+    jblk = pl.program_id(1)
+    ci = ci_ref[...]                       # [1, N]  i32 — full strip
+    ni = ni_ref[...]                       # [1, N]  f32
+    cj = cj_ref[...]                       # [1, Bn] i32 — j-block
+    nj = nj_ref[...]                       # [1, Bn] f32
+    floor = fl_ref[0, 0]
+    N = ci.shape[1]
+    Bn = cj.shape[1]
+    jglob = jblk * Bn + jax.lax.broadcasted_iota(jnp.int32, (1, 1, Bn), 2)
+    iglob = jax.lax.broadcasted_iota(jnp.int32, (1, N, 1), 1)
+
+    elig_i = (ci >= 0) & (ni >= floor)
+    elig_j = (cj >= 0) & (nj >= floor)
+    dup = (cj[:, None, :] == ci[:, :, None]) & elig_j[:, None, :] \
+        & (jglob < iglob)
+    before_blk = jnp.sum(dup.astype(jnp.int32), axis=-1)          # [1, N]
+
+    @pl.when(jblk == 0)
+    def _init():
+        keep_ref[...] = jnp.zeros(keep_ref.shape, keep_ref.dtype)
+
+    keep_ref[...] += before_blk
+
+    @pl.when(jblk == pl.num_programs(1) - 1)
+    def _finalize():
+        keep_ref[...] = jnp.where(elig_i & (keep_ref[...] == 0), 1, 0)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("M", "block_n", "interpret"))
+def postings_select(cols, counts, floor, M: int, *, block_n: int = 0,
+                    interpret: bool = False):
+    """See :func:`repro.kernels.ref.postings_select` for semantics.
+
+    The kernel emits global keep flags (one slot per distinct eligible id);
+    the jnp epilogue sorts the kept — already distinct — ids ascending and
+    pads/truncates to the static rung M, matching the reference layout
+    bit-for-bit.
+    """
+    B, L = cols.shape
+    N = B * L
+    ci = cols.reshape(1, N)
+    ni = counts.reshape(1, N)
+    if block_n <= 0:
+        block_n = N
+    # VMEM budget: the [1, N, Bn] pairwise tensor dominates — shrink the
+    # comparison block to stay ≤ ~4 MiB (same policy as `postings_merge`)
+    while block_n > 128 and N * block_n * 4 > 4 * 1024 * 1024:
+        block_n //= 2
+    assert N % block_n == 0, (B, L, block_n)
+
+    fl = jnp.asarray(floor, jnp.float32).reshape(1, 1)
+    keep = pl.pallas_call(
+        _select_kernel,
+        grid=(1, N // block_n),
+        in_specs=[
+            pl.BlockSpec((1, N), lambda b, j: (0, 0)),
+            pl.BlockSpec((1, N), lambda b, j: (0, 0)),
+            pl.BlockSpec((1, block_n), lambda b, j: (0, j)),
+            pl.BlockSpec((1, block_n), lambda b, j: (0, j)),
+            pl.BlockSpec((1, 1), lambda b, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, N), lambda b, j: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, N), jnp.int32),
+        interpret=interpret,
+    )(ci, ni, ci, ni, fl)[0] > 0
+
+    big = jnp.int32(2147483647)
+    s = jnp.sort(jnp.where(keep, ci[0], big))
+    if M > N:
+        s = jnp.pad(s, (0, M - N), constant_values=2147483647)
+    s = s[:M]
+    n_surv = jnp.sum(keep.astype(jnp.int32))
+    surv = jnp.where(s != big, s, 0)
+    valid = jnp.arange(M, dtype=jnp.int32) < jnp.minimum(n_surv, M)
+    return surv, valid, n_surv
+
+
 @functools.partial(jax.jit, static_argnames=("block_b", "block_n", "interpret"))
 def postings_merge(cand, *, block_b: int = 8, block_n: int = 0,
                    interpret: bool = False):

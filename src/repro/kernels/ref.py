@@ -179,6 +179,46 @@ def postings_merge(cand):
     return jax.vmap(_row)(cand)
 
 
+def postings_select(cols, counts, floor, M: int):
+    """Device-side survivor selection over merged postings output
+    (DESIGN.md §11): the union, across every query row, of the column ids
+    whose exact hit count clears the traced eligibility ``floor``, emitted
+    ascending into a fixed ``[M]`` rung.
+
+      cols: i32[B, L], counts: f32[B, L] — a `postings_merge` output (any
+      backend: every live id occupies exactly one slot per row); floor is
+      the traced §4.3 eligibility floor (`plans.request_operands` slot 3);
+      M is the static ``prune_base · 2^i`` rung the caller dispatched.
+
+    Returns ``(surv i32[M], valid bool[M], n_surv i32[])``: ``surv`` holds
+    the first ``min(n_surv, M)`` survivors in ascending id order with zeros
+    beyond — exactly the host `plans.select_survivors` + rung-padding
+    layout, so the downstream gather sees inputs identical to the
+    host-selected path — ``valid`` flags the real slots and ``n_surv`` is
+    the **total** eligible-union size. ``n_surv > M`` means the rung
+    overflowed: the emitted survivors are the M smallest ids, not a safe
+    superset, and the caller must re-dispatch on a covering rung
+    (`serve._SegmentExec._dispatch_safe_fused`).
+
+    Cross-row dedup + ordering run as one bitonic network sort over the
+    flattened rows (ineligible slots → int32-max sentinels), then a
+    first-occurrence compaction scatter; out-of-bounds positions (≥ M) are
+    dropped by the scatter, which is what truncates an overflowing union.
+    """
+    big = jnp.int32(np.iinfo(np.int32).max)
+    elig = (cols >= 0) & (counts >= floor)
+    ids = jnp.where(elig, cols, big).reshape(1, -1)
+    s = _bitonic_sort_rows(_pad_pow2_rows(ids, np.iinfo(np.int32).max))[0]
+    first = jnp.concatenate([jnp.ones((1,), bool), s[1:] != s[:-1]]) \
+        & (s != big)
+    n_surv = jnp.sum(first.astype(jnp.int32))
+    pos = jnp.cumsum(first.astype(jnp.int32)) - 1
+    surv = jnp.zeros((M,), jnp.int32).at[
+        jnp.where(first, pos, M)].set(s, mode="drop")
+    valid = jnp.arange(M, dtype=jnp.int32) < jnp.minimum(n_surv, M)
+    return surv, valid, n_surv
+
+
 # ----------------------------------------------------------------------------
 # sorted-row primitives: bitonic network sort + batched binary search
 # ----------------------------------------------------------------------------

@@ -81,14 +81,28 @@ _BODY = """
 
     # inverted stage-1 source: the postings probe is replicated by design,
     # sharding only stage-2 -- ids and scores must still match exactly.
+    # 'safe' runs the fused single-dispatch plan (DESIGN.md S11); its rung
+    # path is a deterministic function of the query history and prune_base=8
+    # aligns the ladder across 1 and 8 devices, so D1 and D8 take identical
+    # dispatches and must stay bit-identical through probe -> select ->
+    # gather -> score -> rank.
     shape_inv = PL.ShapePolicy(k_max=4, prune_base=8, prune_m=32,
                                score_chunk=512, candidates="inverted")
-    srv1i, srv8i = make_servers(tables, shape_inv, SV.CompileCache())
-    srv1i.warmup(modes=("topm",))
-    srv8i.warmup(modes=("topm",))
+    cache_i = SV.CompileCache()
+    srv1i, srv8i = make_servers(tables, shape_inv, cache_i)
+    srv1i.warmup(modes=("topm", "safe"))
+    srv8i.warmup(modes=("topm", "safe"))
+    misses_i = cache_i.misses
     bad = sweep(srv1i, srv8i, sks,
-                [("s4", est, "topm") for est in PL.ESTIMATORS])
+                [("s4", est, pm) for est in PL.ESTIMATORS
+                 for pm in ("topm", "safe")])
     assert not bad, f"{len(bad)} inverted-source mismatches"
+    assert cache_i.misses == misses_i, "fused sweep compiled post-warmup"
+    for srv in (srv1i, srv8i):
+        stats = [e.exec.stage_stats()[1]
+                 for e in srv._entries.values()]
+        assert sum(n.get("fused", 0) for n in stats) > 0, \\
+            f"fused plan never dispatched (D={srv.shape.mesh_shards})"
     print("PASS-A")
 
     # ---- B: cross-shard tie-break by global id, ulp-equal scores ----
